@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: result table rendering + JSON persistence."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_result(name: str, payload: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def render_table(rows: list[dict], columns: list[str]) -> str:
+    widths = {
+        c: max(len(c), *(len(str(r.get(c, ""))) for r in rows)) for c in columns
+    }
+    line = " | ".join(c.ljust(widths[c]) for c in columns)
+    sep = "-+-".join("-" * widths[c] for c in columns)
+    body = "\n".join(
+        " | ".join(str(r.get(c, "")).ljust(widths[c]) for c in columns)
+        for r in rows
+    )
+    return f"{line}\n{sep}\n{body}"
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.wall_s = time.perf_counter() - self.t0

@@ -1,0 +1,69 @@
+"""Deliverables (e)+(g): summarize the multi-pod dry-run artifacts into the
+roofline table (reads benchmarks/results/dryrun/*.json written by
+``python -m repro.launch.dryrun --all --mesh both``)."""
+
+from __future__ import annotations
+
+import os
+
+from repro.launch.roofline import load_all, render_markdown
+
+from benchmarks.common import save_result
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+OPT_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun_opt")
+
+
+def _summarize(dirpath: str, label: str) -> dict:
+    cells = load_all(dirpath)
+    ok = [c for c in cells if c.ok]
+    fail = [c for c in cells if not c.ok]
+    print(f"\n== {label}: {len(cells)} cells ({len(ok)} ok, "
+          f"{len(fail)} failed) ==")
+    by_dom = {}
+    for c in ok:
+        by_dom[c.dominant] = by_dom.get(c.dominant, 0) + 1
+    print(f"dominant terms: {by_dom}")
+    for c in fail:
+        print(f"  FAILED: {c.mesh} {c.arch} {c.shape}: {c.error[:100]}")
+    return {
+        "cells": len(cells), "ok": len(ok),
+        "dominant_histogram": by_dom,
+        "table_markdown": render_markdown(cells),
+        "bounds": {
+            f"{c.mesh}/{c.arch}/{c.shape}": round(c.t_bound, 4)
+            for c in ok
+        },
+    }
+
+
+def main() -> dict:
+    if not os.path.isdir(DRYRUN_DIR) or not os.listdir(DRYRUN_DIR):
+        print("no dry-run artifacts found; run "
+              "`python -m repro.launch.dryrun --all --mesh both` first")
+        return {"cells": 0}
+    payload = {"baseline": _summarize(DRYRUN_DIR, "BASELINE (paper-faithful)")}
+    if os.path.isdir(OPT_DIR) and os.listdir(OPT_DIR):
+        payload["optimized"] = _summarize(OPT_DIR, "OPTIMIZED (§Perf passes)")
+        base, opt = payload["baseline"]["bounds"], payload["optimized"]["bounds"]
+        speedups = {
+            k: round(base[k] / opt[k], 2)
+            for k in base if k in opt and opt[k] > 0
+        }
+        top = sorted(speedups.items(), key=lambda kv: -kv[1])[:10]
+        import statistics
+
+        print("\nbound speedups (baseline/optimized), top 10:")
+        for k, v in top:
+            print(f"  {v:6.2f}x  {k}")
+        print(f"median speedup across cells: "
+              f"{statistics.median(speedups.values()):.2f}x")
+        payload["speedups"] = speedups
+    save_result("dryrun_roofline", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Figure 6 + §5.1.1: botnet vs benign histograms diverge early; F1 on
+*partial* per-packet flowmarkers approaches flow-level F1 within tens of
+packets — the reaction-time argument (3600 s -> per-packet)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import mlalgos
+from repro.data import netdata
+
+from benchmarks.common import Timer, render_table, save_result
+
+
+def main() -> dict:
+    with Timer() as t:
+        data, test_flows = netdata.make_bd_dataset(n_flows=3000)
+        model = mlalgos.train_dnn(data, hidden=[32, 16], epochs=12, seed=0)
+
+        f1_full = mlalgos.f1_score(data.test_y, model.predict(data.test_x))
+        checkpoints = (2, 5, 10, 20, 40, 80)
+        partial = netdata.bd_partial_eval_set(test_flows, checkpoints)
+        rows = []
+        for k in checkpoints:
+            X, y = partial[k]
+            f1 = mlalgos.f1_score(y, model.predict(X))
+            rows.append({
+                "packets_seen": k,
+                "f1_partial": round(f1, 4),
+                "frac_of_flow_level": round(f1 / f1_full, 3),
+            })
+
+        # class-mean histogram divergence (Fig. 6's visual, as L1 distance)
+        m = netdata.mean_histograms(test_flows)
+        l1 = float(np.abs(m["botnet"] - m["benign"]).sum())
+
+    print("\n== Fig 6 / §5.1.1: per-packet partial-flowmarker F1 ==")
+    print(render_table(rows, list(rows[0])))
+    print(f"flow-level F1 = {f1_full:.4f}   class-mean histogram L1 = {l1:.3f}")
+    print("reaction time: flow-level waits up to 3600 s; per-packet reacts "
+          "at packet arrival (~ns at line rate)")
+    payload = {
+        "flow_level_f1": f1_full, "partial": rows,
+        "hist_l1": l1, "wall_s": round(t.wall_s, 1),
+    }
+    save_result("fig6_reaction_time", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

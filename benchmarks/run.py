@@ -1,0 +1,64 @@
+"""Benchmark harness: one entry per paper table/figure + system benches.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table2 fig7  # a subset
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    dryrun_roofline,
+    fig4_regret,
+    fig6_reaction_time,
+    fig7_kmeans_mats,
+    kernel_roofline,
+    table2_f1,
+    table3_chaining,
+    table4_fusion,
+    table5_resources,
+)
+
+BENCHES = {
+    "table2": ("Table 2: baselines vs generated F1/resources", table2_f1.main),
+    "table3": ("Table 3: chaining strategies", table3_chaining.main),
+    "table4": ("Table 4: model fusion", table4_fusion.main),
+    "table5": ("Table 5: FPGA resources", table5_resources.main),
+    "fig4": ("Figure 4: BO regret", fig4_regret.main),
+    "fig6": ("Figure 6: reaction time", fig6_reaction_time.main),
+    "fig7": ("Figure 7: KMeans vs MATs", fig7_kmeans_mats.main),
+    "kernel": ("fused_mlp kernel roofline", kernel_roofline.main),
+    "dryrun": ("dry-run roofline summary", dryrun_roofline.main),
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    summary = []
+    for name in names:
+        desc, fn = BENCHES[name]
+        print(f"\n{'=' * 72}\n[{name}] {desc}\n{'=' * 72}", flush=True)
+        t0 = time.perf_counter()
+        try:
+            fn()
+            status = "ok"
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            status = f"FAIL {type(e).__name__}: {e}"
+        summary.append((name, status, time.perf_counter() - t0))
+
+    print(f"\n{'=' * 72}\nbenchmark summary\n{'=' * 72}")
+    print("name,status,wall_s")
+    failed = 0
+    for name, status, wall in summary:
+        print(f"{name},{status},{wall:.1f}")
+        failed += status != "ok"
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Table 4: model fusion — two models on split halves of the AD
+dataset vs one fused shared-trunk model: ~half the resources, same F1."""
+
+from __future__ import annotations
+
+from repro.core import fusion, mlalgos
+from repro.core.feasibility import TaurusModel
+from repro.data import netdata
+
+from benchmarks.common import Timer, render_table, save_result
+
+
+def main() -> dict:
+    with Timer() as t:
+        d = netdata.make_ad_dataset(features=7, n_train=8192, n_test=4096)
+        part1, part2 = d.split_half()
+        tm = TaurusModel()
+        hidden = [24, 16]
+
+        rows = []
+        f1s = {}
+        for name, part in (("AD: Part 1", part1), ("AD: Part 2", part2)):
+            m = mlalgos.train_dnn(part, hidden=hidden, epochs=10, seed=0)
+            est = tm.estimate("dnn", m.topology)["options"][0]
+            f1 = mlalgos.f1_score(part.test_y, m.predict(part.test_x))
+            f1s[name] = round(f1, 4)
+            rows.append({"model": name, "pcu": est["cu"], "pmu": est["mu"],
+                         "f1": round(f1, 4)})
+
+        assert fusion.should_fuse(part1, part2)
+        fused = fusion.fuse([part1, part2], hidden=hidden, epochs=10)
+        est = tm.estimate("dnn", fused.fused_topology())["options"][0]
+        rows.append({
+            "model": "AD: Fused", "pcu": est["cu"], "pmu": est["mu"],
+            "f1": f"{fused.f1(0):.4f}/{fused.f1(1):.4f}",
+        })
+
+    print("\n== Table 4: fused resource usage ==")
+    print(render_table(rows, ["model", "pcu", "pmu", "f1"]))
+    sum_cu = rows[0]["pcu"] + rows[1]["pcu"]
+    print(f"fused CU {rows[2]['pcu']} vs separate sum {sum_cu} "
+          f"({rows[2]['pcu'] / sum_cu:.2f}x) — ~half, as Table 4")
+    assert rows[2]["pcu"] < 0.7 * sum_cu
+    payload = {"rows": rows, "wall_s": round(t.wall_s, 1)}
+    save_result("table4_fusion", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Beyond-paper: Homunculus's BO searching SHARDING layouts for a pod.
+
+The same constrained-BO core that tunes DNN neurons for a switch here tunes
+(dp x tp, microbatches, remat, seq-sharding) for an assigned LM architecture
+on a 256-chip pod, with XLA as the compile-in-the-loop feasibility oracle
+(fits-in-HBM) and the roofline bound as the objective.
+
+NOTE: each evaluation AOT-compiles the full model — minutes per run.
+
+  PYTHONPATH=src python examples/autoshard_pod.py --arch qwen3-1.7b \
+      --shape decode_32k --budget 6
+"""
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--budget", type=int, default=6)
+    ap.add_argument("--chips", type=int, default=256)
+    args = ap.parse_args()
+
+    # the forced-host-device trick requires a fresh process-level setting,
+    # exactly like launch/dryrun.py
+    import os
+
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+    )
+    from repro.core.autoshard import autoshard
+
+    print(f"autoshard: {args.arch} x {args.shape} on {args.chips} chips, "
+          f"budget {args.budget}")
+
+    def cb(res):
+        status = "ok " if res.feasible else "INFEASIBLE"
+        print(f"  [{status}] {res.config}  bound={res.t_bound:.4f}s "
+              f"(c/m/x {res.t_compute:.3f}/{res.t_memory:.3f}/"
+              f"{res.t_collective:.3f})  peak={res.peak_bytes / 2**30:.1f}GiB "
+              f"compile={res.wall_s:.0f}s {res.error[:60]}")
+
+    best, evaluated = autoshard(
+        args.arch, args.shape, budget=args.budget,
+        total_chips=args.chips, callback=cb,
+    )
+    if best is None:
+        print("no feasible layout found within budget")
+        return
+    print(f"\nbest layout: {best.config}")
+    print(f"  roofline bound {best.t_bound:.4f}s/step, dominant "
+          f"{best.dominant}, peak {best.peak_bytes / 2**30:.1f} GiB/chip")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Botnet detection with per-packet reaction time (paper §5.1.1).
+
+FlowLens detects botnets from FULL-flow histograms accumulated over up to
+3600 s.  Homunculus searches a per-packet model on 30-bin flowmarkers and
+classifies PARTIAL histograms as packets arrive — detection within tens of
+packets instead of an hour.
+
+  PYTHONPATH=src python examples/botnet_pipeline.py
+"""
+
+import numpy as np
+
+import homunculus
+from homunculus.alchemy import DataLoader, Model, Platforms
+from repro.core import mlalgos
+from repro.data import netdata
+
+_cache = {}
+
+
+@DataLoader
+def bd_loader():
+    if "d" not in _cache:
+        _cache["d"], _cache["flows"] = netdata.make_bd_dataset(n_flows=2400)
+    return _cache["d"]
+
+
+model = Model({
+    "optimization_metric": ["f1"],
+    "algorithm": ["dnn"],
+    "name": "botnet_detection",
+    "data_loader": bd_loader,
+})
+platform = Platforms.Taurus()
+platform.constrain(performance={"throughput": 1, "latency": 500},
+                   resources={"rows": 16, "cols": 16})
+platform.schedule(model)
+
+res = homunculus.generate(platform, budget=12, n_init=6, seed=0)
+r = res["botnet_detection"]
+print("generated:", r.summary())
+
+# per-packet partial-histogram evaluation on held-out flows
+flows = _cache["flows"]
+checkpoints = (2, 5, 10, 20, 40, 80)
+partial = netdata.bd_partial_eval_set(flows, checkpoints)
+f1_full = r.value
+print(f"\nflow-level F1 (full flowmarkers): {f1_full:.4f}")
+print("per-packet reaction curve:")
+for k in checkpoints:
+    X, y = partial[k]
+    pred = r.pipeline(X)
+    f1 = mlalgos.f1_score(y, pred)
+    bar = "#" * int(40 * f1 / max(f1_full, 1e-9))
+    print(f"  after {k:3d} packets: F1 {f1:.4f} {bar}")
+
+print("\nreaction time: FlowLens waits up to 3600 s per flow; this pipeline "
+      "classifies every packet at line rate with partial histograms.")

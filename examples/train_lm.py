@@ -1,0 +1,89 @@
+"""End-to-end LM training driver: a ~100M-param decoder trained for a few
+hundred steps on the synthetic Markov token stream, with async checkpoints,
+crash-resume, and the straggler watchdog active.
+
+  PYTHONPATH=src python examples/train_lm.py              # ~100M, 200 steps
+  PYTHONPATH=src python examples/train_lm.py --tiny       # CI-sized
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data.tokens import TokenDataset
+from repro.ft.restart import RestartManager
+from repro.train.step import TrainSettings, init_train_state, make_train_step
+
+
+def build_config(tiny: bool):
+    base = get_smoke_config("qwen3-1.7b")
+    if tiny:
+        return base
+    # ~110M params: 12L x d768 x ff3072, vocab 16384
+    return dataclasses.replace(
+        base, name="lm-100m", num_layers=12, d_model=768, num_heads=12,
+        num_kv_heads=6, head_dim=64, d_ff=3072, vocab_size=16384,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = build_config(args.tiny)
+    from repro.models import registry
+
+    n_params = registry.param_count(cfg)
+    print(f"training {cfg.name}: {n_params / 1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+
+    data = TokenDataset(cfg.vocab_size, args.seq, args.batch, seed=0)
+    settings = TrainSettings(
+        peak_lr=1e-2, warmup=20, total_steps=args.steps, remat=True,
+    )
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(cfg, settings), donate_argnums=(0,))
+
+    mgr = RestartManager(args.ckpt_dir, save_every=50)
+    mgr.watchdog.on_straggler = lambda s, r: print(
+        f"  [watchdog] step {s} was {r:.1f}x median — would trigger "
+        f"microbatch rebalance on a real pod"
+    )
+    state, start = mgr.maybe_restore(state)
+    if start:
+        print(f"resumed from checkpoint at step {start}")
+
+    losses = []
+
+    def cb(step, metrics, dt):
+        losses.append(float(metrics["loss"]))
+        if step % 20 == 0 or step == args.steps:
+            print(f"step {step:4d}  loss {losses[-1]:.4f}  "
+                  f"acc {float(metrics['accuracy']):.3f}  {dt * 1e3:.0f} ms")
+
+    t0 = time.perf_counter()
+    state, _ = mgr.run(
+        state, step_fn, lambda s: {
+            k: jnp.asarray(v) for k, v in data.batch_at(s).items()
+        },
+        num_steps=args.steps, start_step=start, metrics_cb=cb,
+    )
+    if losses:
+        print(f"done in {time.perf_counter() - t0:.0f}s; "
+              f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"(unigram floor ~ {jnp.log(cfg.vocab_size):.2f})")
+    else:
+        print(f"nothing to do: checkpoint already at/after step {args.steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""``import homunculus`` — the package name the paper uses (Figure 3).
+
+Thin facade over repro.core so Alchemy programs read exactly like the
+paper's listings::
+
+    import homunculus
+    from homunculus.alchemy import DataLoader, Model, Platforms
+    ...
+    homunculus.generate(platform)
+"""
+
+from repro.core import alchemy
+from repro.core.dse import generate, search_model, GenerationResult
+
+__all__ = ["alchemy", "generate", "search_model", "GenerationResult"]

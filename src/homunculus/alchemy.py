@@ -1,0 +1,4 @@
+from repro.core.alchemy import *  # noqa: F401,F403
+from repro.core.alchemy import (  # noqa: F401
+    DataLoader, IOMap, IOMapper, Model, Par, Platform, Platforms, Seq,
+)

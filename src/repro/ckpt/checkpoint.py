@@ -1,0 +1,185 @@
+"""Sharded, integrity-checked, async checkpointing with elastic restore.
+
+Layout:
+  <dir>/step_<N>/manifest.msgpack   leaf index: path, shape, dtype, crc32
+  <dir>/step_<N>/leaf_<i>.bin.zst   zstd-compressed raw array bytes
+  <dir>/step_<N>/COMPLETE           atomic finalize marker (written last)
+  <dir>/latest                      text file with newest complete step
+
+Fault-tolerance properties:
+  * a crashed save never corrupts restore (COMPLETE marker is last);
+  * crc32 per leaf detects bit-rot / truncation;
+  * restore is *elastic*: arrays are materialized on host then device_put
+    with the *current* mesh's shardings, so a checkpoint written on N
+    devices restores onto M devices (tested N=1 -> M=8 in
+    tests/test_checkpoint.py).
+
+AsyncCheckpointer overlaps serialization with training (single background
+thread; ``wait()`` before the next save or at exit).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import zlib
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+_ZSTD_LEVEL = 3
+
+
+def _resolve_dtype(name):
+    """dtype by NAME: extension dtypes (bfloat16) have no reconstructible
+    .str; ml_dtypes resolves them on load."""
+    import numpy as _np
+    try:
+        return _np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return _np.dtype(getattr(ml_dtypes, name))
+
+
+def _leaf_paths(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, state, step: int) -> str:
+    """Blocking save. Returns the step directory."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp_dir = step_dir + ".tmp"
+    if os.path.exists(tmp_dir):
+        shutil.rmtree(tmp_dir)
+    os.makedirs(tmp_dir, exist_ok=True)
+
+    leaves, treedef = _leaf_paths(state)
+    cctx = zstandard.ZstdCompressor(level=_ZSTD_LEVEL)
+    manifest = {"treedef": str(treedef), "leaves": [], "step": step}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        raw = arr.tobytes()
+        fname = f"leaf_{i:05d}.bin.zst"
+        with open(os.path.join(tmp_dir, fname), "wb") as f:
+            f.write(cctx.compress(raw))
+        manifest["leaves"].append(
+            {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": arr.dtype.name,
+                "crc32": zlib.crc32(raw),
+            }
+        )
+    with open(os.path.join(tmp_dir, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    with open(os.path.join(tmp_dir, "COMPLETE"), "w") as f:
+        f.write("ok")
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp_dir, step_dir)
+    with open(os.path.join(ckpt_dir, "latest.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(
+        os.path.join(ckpt_dir, "latest.tmp"), os.path.join(ckpt_dir, "latest")
+    )
+    return step_dir
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    path = os.path.join(ckpt_dir, "latest")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        step = int(f.read().strip())
+    if not os.path.exists(
+        os.path.join(ckpt_dir, f"step_{step:010d}", "COMPLETE")
+    ):
+        # fall back: scan for newest complete step
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(ckpt_dir)
+            if d.startswith("step_")
+            and os.path.exists(os.path.join(ckpt_dir, d, "COMPLETE"))
+        )
+        return steps[-1] if steps else None
+    return step
+
+
+def restore_checkpoint(ckpt_dir: str, like_tree, step: int | None = None,
+                       shardings=None):
+    """Restore into the structure of ``like_tree``.
+
+    ``shardings``: optional matching tree of jax.sharding.Sharding for
+    elastic re-placement onto the current mesh.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(step_dir, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+
+    dctx = zstandard.ZstdDecompressor()
+    arrays = []
+    for meta in manifest["leaves"]:
+        with open(os.path.join(step_dir, meta["file"]), "rb") as f:
+            raw = dctx.decompress(f.read())
+        if zlib.crc32(raw) != meta["crc32"]:
+            raise IOError(f"crc mismatch in {meta['file']} (corrupt ckpt)")
+        arr = np.frombuffer(raw, dtype=_resolve_dtype(meta["dtype"]))
+        arrays.append(arr.reshape(meta["shape"]))
+
+    leaves, treedef = jax.tree_util.tree_flatten(like_tree)
+    if len(leaves) != len(arrays):
+        raise ValueError(
+            f"checkpoint has {len(arrays)} leaves, tree wants {len(leaves)}"
+        )
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_flatten(shardings)[0]
+        out = [
+            jax.device_put(a, s) for a, s in zip(arrays, shard_leaves)
+        ]
+    else:
+        out = [jnp.asarray(a) for a in arrays]
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint serialization with training."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save(self, state, step: int):
+        self.wait()
+        # device_get on the main thread (device ops are not thread-safe),
+        # serialize + write on the background thread.
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def work():
+            save_checkpoint(self.ckpt_dir, host_state, step)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(
+            d for d in os.listdir(self.ckpt_dir) if d.startswith("step_")
+        )
+        for d in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, d), ignore_errors=True)

@@ -1,0 +1,9 @@
+from repro.common.pytree import (
+    ParamDef,
+    param_count,
+    param_bytes,
+    materialize,
+    abstract,
+    pspec_tree,
+    tree_path_str,
+)

@@ -1,0 +1,132 @@
+"""Parameter-definition pytrees.
+
+Models in this framework describe their parameters as a pytree of
+``ParamDef`` (shape, dtype, logical axes, initializer).  The same tree is
+used three ways:
+
+  * ``materialize(defs, key)``    -> real arrays (smoke tests / examples)
+  * ``abstract(defs)``            -> ShapeDtypeStruct stand-ins (dry-run; no
+                                     device allocation, as required to lower
+                                     a 398B model on a CPU host)
+  * ``pspec_tree(defs, rules)``   -> PartitionSpec tree for pjit shardings
+
+This separation is what lets the multi-pod dry-run lower and compile full
+production configs on a single-core CPU container.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declarative description of a single parameter tensor."""
+
+    shape: tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    # Logical axis names, one per dim (None = replicated dim). Resolved to
+    # physical mesh axes by repro.dist.sharding rules.
+    axes: tuple[str | None, ...] = ()
+    init: str = "normal"  # normal | zeros | ones | scaled (fan-in)
+    init_scale: float = 1.0
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank"
+            )
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _fold_path(key: jax.Array, path: str) -> jax.Array:
+    digest = hashlib.md5(path.encode()).digest()
+    return jax.random.fold_in(key, int.from_bytes(digest[:4], "little"))
+
+
+def _init_one(d: ParamDef, key: jax.Array) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "normal":
+        x = jax.random.normal(key, d.shape, jnp.float32) * 0.02 * d.init_scale
+        return x.astype(d.dtype)
+    if d.init == "scaled":  # fan-in scaled (truncated-normal-ish)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[0], 1)
+        std = d.init_scale / np.sqrt(fan_in)
+        x = jax.random.normal(key, d.shape, jnp.float32) * std
+        return x.astype(d.dtype)
+    if d.init == "ssm_a":  # Mamba A_log: log(1..d_state) per channel
+        n = d.shape[-1]
+        a = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(a, d.shape).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def materialize(defs: PyTree, key: jax.Array) -> PyTree:
+    """Instantiate real parameter arrays from a ParamDef tree."""
+
+    def leaf(path, d: ParamDef):
+        return _init_one(d, _fold_path(key, tree_path_str(path)))
+
+    return jax.tree_util.tree_map_with_path(leaf, defs, is_leaf=is_def)
+
+
+def abstract(defs: PyTree) -> PyTree:
+    """ShapeDtypeStruct stand-ins -- no allocation (dry-run path)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def
+    )
+
+
+def pspec_tree(defs: PyTree, resolve: Callable) -> PyTree:
+    """PartitionSpec tree. ``resolve(axes) -> PartitionSpec``."""
+    return jax.tree.map(lambda d: resolve(d.axes), defs, is_leaf=is_def)
+
+
+def param_count(defs: PyTree) -> int:
+    return sum(d.size for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+def param_bytes(defs: PyTree) -> int:
+    return sum(
+        d.size * jnp.dtype(d.dtype).itemsize
+        for d in jax.tree.leaves(defs, is_leaf=is_def)
+    )
+
+
+def cast_floating(tree: PyTree, dtype) -> PyTree:
+    def leaf(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(leaf, tree)

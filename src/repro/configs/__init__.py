@@ -1,0 +1,24 @@
+from repro.configs.base import (
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    register,
+    get_config,
+    get_smoke_config,
+    list_archs,
+    applicable_shapes,
+)
+
+# Import all architecture modules so they self-register.
+from repro.configs import (  # noqa: F401
+    jamba_1_5_large_398b,
+    moonshot_v1_16b_a3b,
+    mixtral_8x7b,
+    seamless_m4t_large_v2,
+    qwen3_1_7b,
+    qwen1_5_32b,
+    starcoder2_15b,
+    qwen2_7b,
+    llama_3_2_vision_11b,
+    xlstm_1_3b,
+)

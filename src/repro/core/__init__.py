@@ -1,0 +1,30 @@
+"""The paper's primary contribution: the Homunculus compiler.
+
+alchemy     the embedded DSL (Model, DataLoader, Platforms, operators)
+designspace design-space definition (real/int/ordinal/categorical params)
+surrogate   random-forest surrogate (HyperMapper's §5 setup, from scratch)
+bo          constrained Bayesian optimization (EI x P(feasible))
+feasibility per-platform resource models + the black-box oracle
+mlalgos     trainable algorithms (DNN/KMeans/SVM/tree/logreg) + metrics
+codegen     backend generators (Taurus/Spatial, MAT/P4, FPGA, TPU)
+dse         the generate() driver tying it all together
+fusion      model fusion (§3.2.5)
+chaining    multi-app scheduling + Table-3 resource accounting
+autoshard   beyond-paper: the same BO core driving LM sharding DSE
+"""
+
+from repro.core.alchemy import (
+    DataLoader,
+    IOMap,
+    IOMapper,
+    Model,
+    Par,
+    Platform,
+    Platforms,
+    Seq,
+)
+from repro.core.bo import ConstrainedBO, Observation, expected_improvement
+from repro.core.designspace import DesignSpace, Param, algorithm_space
+from repro.core.dse import GenerationResult, ModelResult, generate, search_model
+from repro.core.feasibility import FeasibilityReport
+from repro.core.surrogate import RandomForest

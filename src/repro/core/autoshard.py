@@ -1,0 +1,166 @@
+"""Beyond-paper: Homunculus's constrained BO driving LM sharding DSE.
+
+The paper's loop is  suggest -> codegen -> compile -> feasibility verdict ->
+update surrogate.  Here the "program" is a (mesh layout x microbatch x remat
+x sharding-rule) configuration for one of the assigned architectures, the
+"compiler in the loop" is XLA itself (.lower().compile() on the forced-
+device-count host, exactly the multi-pod dry-run), the feasibility
+constraint is fits-in-HBM (memory_analysis peak <= per-chip budget), and the
+objective is minimizing the dominant roofline term (launch.hlo_cost over the
+partitioned module).
+
+This is the paper's technique applied at datacenter scale: a network
+operator writes ``Model`` + ``Platforms.TPUPod() < {...}`` and Homunculus
+searches the layout space instead of the neuron space.  It is also the
+engine behind the §Perf hillclimb in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.core.bo import ConstrainedBO
+from repro.core.designspace import DesignSpace, Param
+from repro.dist.sharding import AxisRules, DEFAULT_RULES, mesh_context
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_mesh_shape, sharding_tree
+
+HBM_BYTES = 16 * 2**30          # per chip (v5e-class)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def layout_space(total_chips: int = 256) -> DesignSpace:
+    """The sharding design space: (dp x tp) factorizations + step knobs."""
+    factorizations = []
+    d = 1
+    while d <= total_chips:
+        factorizations.append((d, total_chips // d))
+        d *= 2
+    return DesignSpace([
+        Param("layout", "categorical", values=tuple(factorizations)),
+        Param("microbatches", "ordinal", values=(1, 2, 4, 8, 16)),
+        Param("remat", "categorical", values=("none", "dots", "block")),
+        Param("seq_shard", "categorical", values=(False, True)),
+    ])
+
+
+@dataclasses.dataclass
+class LayoutResult:
+    config: dict
+    feasible: bool
+    peak_bytes: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    wall_s: float
+    error: str = ""
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute, "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+
+def evaluate_layout(
+    arch: str,
+    shape_name: str,
+    config: dict,
+    *,
+    hbm_budget: float = HBM_BYTES,
+) -> LayoutResult:
+    """One black-box evaluation: compile the cell under ``config``."""
+    import dataclasses as dc
+
+    from repro.launch.dryrun import build_step_and_specs
+
+    t0 = time.perf_counter()
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    dp, tp = config["layout"]
+    cfg = dc.replace(
+        cfg,
+        remat_policy=config.get("remat", cfg.remat_policy),
+        decode_seq_shard=config.get("seq_shard", cfg.decode_seq_shard),
+    )
+    rules = DEFAULT_RULES
+    if not config.get("seq_shard", True):
+        rules = AxisRules({**DEFAULT_RULES.table})
+        rules.table.pop("sp", None)
+    mesh = make_mesh_shape((dp, tp), ("data", "model"))
+    try:
+        with mesh, mesh_context(mesh, rules):
+            fn, args, in_sh, out_sh, donate = build_step_and_specs(
+                cfg, shape, mesh,
+                microbatches=config.get("microbatches"), rules=rules,
+            )
+            compiled = (
+                jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                        donate_argnums=donate)
+                .lower(*args).compile()
+            )
+        ma = compiled.memory_analysis()
+        peak = (
+            ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes
+        )
+        rep = hlo_cost.analyze(compiled.as_text(), mesh.size)
+        return LayoutResult(
+            config=config,
+            feasible=peak <= hbm_budget,
+            peak_bytes=peak,
+            t_compute=rep.flops / PEAK_FLOPS,
+            t_memory=rep.hbm_bytes / HBM_BW,
+            t_collective=rep.coll_wire_bytes_bf16 / LINK_BW,
+            wall_s=time.perf_counter() - t0,
+        )
+    except Exception as e:  # noqa: BLE001 — infeasible layout, not a crash
+        return LayoutResult(
+            config=config, feasible=False, peak_bytes=float("inf"),
+            t_compute=0.0, t_memory=0.0, t_collective=float("inf"),
+            wall_s=time.perf_counter() - t0, error=f"{type(e).__name__}: {e}",
+        )
+
+
+def autoshard(
+    arch: str,
+    shape_name: str,
+    *,
+    budget: int = 12,
+    n_init: int = 4,
+    total_chips: int = 256,
+    hbm_budget: float = HBM_BYTES,
+    seed: int = 0,
+    callback=None,
+) -> tuple[LayoutResult | None, list[LayoutResult]]:
+    """BO over layouts; returns (best, all evaluated)."""
+    space = layout_space(total_chips)
+    bo = ConstrainedBO(space, n_init=n_init, seed=seed)
+    evaluated: list[LayoutResult] = []
+
+    def evaluate(config: dict) -> tuple[float, bool, dict]:
+        res = evaluate_layout(arch, shape_name, config,
+                              hbm_budget=hbm_budget)
+        evaluated.append(res)
+        if callback:
+            callback(res)
+        # maximize negative bound time (BO maximizes)
+        value = -res.t_bound if res.feasible else float("nan")
+        return value, res.feasible, {"result": res}
+
+    best_obs = bo.run(evaluate, budget)
+    best = best_obs.info["result"] if best_obs else None
+    return best, evaluated

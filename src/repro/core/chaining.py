@@ -1,0 +1,81 @@
+"""Multi-application scheduling & execution (paper §5.1.3, Table 3).
+
+Alchemy's ``>`` / ``|`` build a DAG of models sharing one data plane.  This
+module executes a generated DAG over packets and accounts resources:
+
+  * Execution semantics (network virtualization): every packet traverses
+    the DAG.  Sequential stages can gate (short-circuit) later stages —
+    e.g. AD in front of TC: packets flagged malicious skip classification.
+    Parallel stages all see the packet; verdicts are combined.
+  * Resource semantics (Table 3): chained copies of the *same* model share
+    weights and pipeline logic on the target, so total resources are
+    constant in the number of copies and independent of the chaining
+    strategy; the inter-model glue (stream plumbing between stages) fits in
+    already-allocated CUs — modeled as zero marginal cost, as measured in
+    the paper.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro.core.alchemy import Model, Par, Seq
+from repro.core.dse import GenerationResult, ModelResult
+from repro.core.feasibility import FeasibilityReport
+
+
+def run_dag(node, result: GenerationResult, X: np.ndarray,
+            *, combine: str = "or") -> np.ndarray:
+    """Run every packet through the DAG; returns final per-packet verdicts.
+
+    ``combine``: how parallel branches merge ("or" = any positive class,
+    "concat" handled by returning the stacked matrix of branch outputs).
+    """
+    X = np.asarray(X, np.float32)
+
+    def eval_node(n) -> np.ndarray:
+        if isinstance(n, Model):
+            return np.asarray(result[n.name].pipeline(X))
+        if isinstance(n, Seq):
+            out = None
+            for c in n.children:
+                nxt = eval_node(c)
+                out = nxt if out is None else np.maximum(out, nxt)
+            return out
+        if isinstance(n, Par):
+            outs = [eval_node(c) for c in n.children]
+            if combine == "or":
+                return np.maximum.reduce(outs)
+            return np.stack(outs, -1)
+        raise TypeError(type(n))
+
+    return eval_node(node)
+
+
+def dag_resources(node, result: GenerationResult) -> FeasibilityReport:
+    """Table-3 accounting: identical models counted once (shared weights)."""
+    seen: set[int] = set()
+    rep: FeasibilityReport | None = None
+    for m in node.leaves():
+        r: ModelResult = result[m.name]
+        if id(r.trained) in seen:
+            continue
+        seen.add(id(r.trained))
+        rep = r.report if rep is None else rep.merge(r.report)
+    assert rep is not None
+    return rep
+
+
+def strategy_table(strategies: dict[str, Any], result: GenerationResult
+                   ) -> list[dict]:
+    """One row per chaining strategy: {strategy, cu/mu or mats, ...}."""
+    rows = []
+    for name, node in strategies.items():
+        rep = dag_resources(node, result)
+        row = {"strategy": name, **rep.resources}
+        row["latency_ns"] = round(rep.latency_ns, 1)
+        row["throughput_pps"] = rep.throughput_pps
+        rows.append(row)
+    return rows

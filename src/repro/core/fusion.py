@@ -1,0 +1,185 @@
+"""Model fusion (paper §3.2.5, Table 4).
+
+"Models learning from similar datasets are most likely learning similar
+characteristics ... if there are a certain number of features in common,
+[Homunculus] will attempt to build a single model to serve both datasets."
+
+``maybe_fuse`` checks feature overlap (Jaccard over feature names); if above
+threshold it builds one *multi-head* DNN: a shared trunk (the shared learned
+characteristics) with one output head per task.  Resources are those of a
+single trunk + heads instead of two full models — the paper's Table-4
+"about the same as one split model" effect.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mlalgos import TrainedModel, f1_score
+from repro.data.netdata import Dataset
+
+FUSE_OVERLAP_THRESHOLD = 0.5
+
+
+def feature_overlap(a: Dataset, b: Dataset) -> float:
+    fa, fb = set(a.feature_names), set(b.feature_names)
+    if not fa or not fb:
+        return 0.0
+    return len(fa & fb) / len(fa | fb)
+
+
+@dataclasses.dataclass
+class FusedModel:
+    """Shared-trunk multi-head DNN over >=2 tasks."""
+
+    trunk_widths: list[int]          # [F, h1, ..., hk]
+    heads: list[int]                 # classes per task
+    params: dict                     # {"trunk": [...], "heads": [...]}
+    datasets: list[Dataset]
+
+    @property
+    def param_count(self) -> int:
+        n = sum(int(l["w"].size + l["b"].size) for l in self.params["trunk"])
+        n += sum(int(h["w"].size + h["b"].size) for h in self.params["heads"])
+        return n
+
+    def topology(self, task: int) -> dict:
+        """Topology *as mapped on the target* for one task: trunk + head."""
+        widths = list(self.trunk_widths) + [self.heads[task]]
+        return {"widths": widths, "act": "relu"}
+
+    def fused_topology(self) -> dict:
+        """Topology of the single fused pipeline (trunk + concat heads)."""
+        widths = list(self.trunk_widths) + [sum(self.heads)]
+        return {"widths": widths, "act": "relu"}
+
+    def predict(self, task: int, X: np.ndarray) -> np.ndarray:
+        logits = _fused_forward(
+            self.params, jnp.asarray(X, jnp.float32)
+        )[task]
+        return np.asarray(jnp.argmax(logits, -1), np.int32)
+
+    def f1(self, task: int) -> float:
+        d = self.datasets[task]
+        return f1_score(
+            d.test_y, self.predict(task, d.test_x), num_classes=d.num_classes
+        )
+
+
+def _fused_forward(params, x):
+    h = x
+    for l in params["trunk"]:
+        h = jax.nn.relu(h @ l["w"] + l["b"])
+    return [h @ hd["w"] + hd["b"] for hd in params["heads"]]
+
+
+@partial(jax.jit, static_argnames=("nsteps", "batch"))
+def _fused_train(params, xs, ys, masks, key, lr, *, nsteps: int, batch: int):
+    """xs [N,F]; ys [N, T] labels per task; masks [N, T] row-task validity."""
+    n = xs.shape[0]
+
+    def loss_fn(p, xb, yb, mb):
+        logits = _fused_forward(p, xb)
+        total = 0.0
+        for t, lg in enumerate(logits):
+            logp = jax.nn.log_softmax(lg)
+            ce = -jnp.take_along_axis(logp, yb[:, t][:, None], axis=1)[:, 0]
+            total = total + jnp.sum(ce * mb[:, t]) / jnp.maximum(
+                jnp.sum(mb[:, t]), 1.0
+            )
+        return total
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    def step(carry, i):
+        p, m, v, key = carry
+        key, kb = jax.random.split(key)
+        idx = jax.random.randint(kb, (batch,), 0, n)
+        g = jax.grad(loss_fn)(p, xs[idx], ys[idx], masks[idx])
+        t = i.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9**t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999**t), v)
+        p = jax.tree.map(
+            lambda pp, a, b: pp - lr * a / (jnp.sqrt(b) + 1e-8), p, mh, vh
+        )
+        return (p, m, v, key), 0.0
+
+    (params, _, _, _), _ = jax.lax.scan(
+        step, (params, m, v, key), jnp.arange(nsteps)
+    )
+    return params
+
+
+def fuse(
+    datasets: list[Dataset],
+    *,
+    hidden: list[int] | None = None,
+    epochs: int = 12,
+    lr: float = 3e-3,
+    batch: int = 256,
+    seed: int = 0,
+) -> FusedModel:
+    """Train one shared-trunk model over the (feature-aligned) datasets."""
+    assert len(datasets) >= 2
+    names = datasets[0].feature_names
+    for d in datasets[1:]:
+        assert d.feature_names == names, (
+            "fusion requires feature-aligned datasets (align first)"
+        )
+    hidden = hidden or [24, 16]
+    F = datasets[0].num_features
+    T = len(datasets)
+    widths = [F] + hidden
+
+    key = jax.random.PRNGKey(seed)
+    trunk = []
+    for i in range(len(widths) - 1):
+        key, k = jax.random.split(key)
+        trunk.append({
+            "w": jax.random.normal(k, (widths[i], widths[i + 1]), jnp.float32)
+            * np.sqrt(2.0 / widths[i]),
+            "b": jnp.zeros((widths[i + 1],), jnp.float32),
+        })
+    heads = []
+    for d in datasets:
+        key, k = jax.random.split(key)
+        heads.append({
+            "w": jax.random.normal(k, (widths[-1], d.num_classes), jnp.float32)
+            * np.sqrt(2.0 / widths[-1]),
+            "b": jnp.zeros((d.num_classes,), jnp.float32),
+        })
+    params = {"trunk": trunk, "heads": heads}
+
+    xs = np.concatenate([d.train_x for d in datasets], 0)
+    N = len(xs)
+    ys = np.zeros((N, T), np.int32)
+    masks = np.zeros((N, T), np.float32)
+    row = 0
+    for t, d in enumerate(datasets):
+        n = len(d.train_x)
+        ys[row:row + n, t] = d.train_y
+        masks[row:row + n, t] = 1.0
+        row += n
+
+    nsteps = max(1, epochs * N // batch)
+    params = _fused_train(
+        params, jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(masks),
+        jax.random.PRNGKey(seed + 1), jnp.float32(lr),
+        nsteps=int(nsteps), batch=batch,
+    )
+    params = jax.tree.map(np.asarray, params)
+    return FusedModel(widths, [d.num_classes for d in datasets], params,
+                      datasets)
+
+
+def should_fuse(a: Dataset, b: Dataset,
+                threshold: float = FUSE_OVERLAP_THRESHOLD) -> bool:
+    return feature_overlap(a, b) >= threshold

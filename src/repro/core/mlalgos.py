@@ -1,0 +1,407 @@
+"""Trainable ML algorithms for the Homunculus optimization core.
+
+The paper delegates training to Keras; here the equivalent substrate is
+implemented directly in JAX (DNN) and numpy (KMeans / SVM / decision tree /
+logistic regression).  Every algorithm returns a ``TrainedModel`` carrying
+
+  * ``predict(X)``   -- class predictions (what feasibility testing runs),
+  * ``topology``     -- the structural description the backend code
+                        generators consume (layer widths / centroids /
+                        thresholds), and
+  * ``param_count``  -- the "# NN Param" column of the paper's Table 2.
+
+Metrics: binary/macro F1 (Table 2) and V-measure (Fig. 7, KMeans on MATs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.netdata import Dataset
+
+# ------------------------------------------------------------------ metrics
+
+
+def f1_score(y_true: np.ndarray, y_pred: np.ndarray, *, num_classes: int = 2,
+             average: str = "auto") -> float:
+    """Binary F1 (positive class = 1) or macro F1 for multiclass."""
+    y_true = np.asarray(y_true)
+    y_pred = np.asarray(y_pred)
+    if average == "auto":
+        average = "binary" if num_classes == 2 else "macro"
+    classes = [1] if average == "binary" else list(range(num_classes))
+    f1s = []
+    for c in classes:
+        tp = float(np.sum((y_pred == c) & (y_true == c)))
+        fp = float(np.sum((y_pred == c) & (y_true != c)))
+        fn = float(np.sum((y_pred != c) & (y_true == c)))
+        prec = tp / (tp + fp) if tp + fp else 0.0
+        rec = tp / (tp + fn) if tp + fn else 0.0
+        f1s.append(2 * prec * rec / (prec + rec) if prec + rec else 0.0)
+    return float(np.mean(f1s))
+
+
+def accuracy(y_true, y_pred) -> float:
+    return float(np.mean(np.asarray(y_true) == np.asarray(y_pred)))
+
+
+def v_measure(labels: np.ndarray, clusters: np.ndarray) -> float:
+    """Homogeneity/completeness harmonic mean (paper Fig. 7 metric)."""
+    labels = np.asarray(labels)
+    clusters = np.asarray(clusters)
+    n = len(labels)
+    ls, cs = np.unique(labels), np.unique(clusters)
+    cont = np.zeros((len(ls), len(cs)))
+    for i, l in enumerate(ls):
+        for j, c in enumerate(cs):
+            cont[i, j] = np.sum((labels == l) & (clusters == c))
+    p = cont / n
+
+    def entropy(marg):
+        marg = marg[marg > 0]
+        return -np.sum(marg * np.log(marg))
+
+    h_l, h_c = entropy(p.sum(1)), entropy(p.sum(0))
+    nz = p > 0
+    h_l_given_c = -np.sum(
+        p[nz] * (np.log(p[nz]) - np.log(p.sum(0)[None, :].repeat(len(ls), 0)[nz]))
+    )
+    h_c_given_l = -np.sum(
+        p[nz] * (np.log(p[nz]) - np.log(p.sum(1)[:, None].repeat(len(cs), 1)[nz]))
+    )
+    hom = 1.0 if h_l == 0 else 1.0 - h_l_given_c / h_l
+    com = 1.0 if h_c == 0 else 1.0 - h_c_given_l / h_c
+    if hom + com == 0:
+        return 0.0
+    return float(2 * hom * com / (hom + com))
+
+
+METRICS: dict[str, Callable] = {
+    "f1": f1_score,
+    "accuracy": lambda yt, yp, **kw: accuracy(yt, yp),
+    "v_measure": lambda yt, yp, **kw: v_measure(yt, yp),
+}
+
+
+def evaluate_metric(metric: str, y_true, y_pred, *, num_classes: int) -> float:
+    if metric == "f1":
+        return f1_score(y_true, y_pred, num_classes=num_classes)
+    return METRICS[metric](y_true, y_pred)
+
+
+# -------------------------------------------------------------- TrainedModel
+
+
+@dataclasses.dataclass
+class TrainedModel:
+    algorithm: str            # dnn | kmeans | svm | tree | logreg
+    topology: dict            # structure for the backend codegen
+    params: Any               # learned parameters (pytree / ndarray)
+    predict: Callable         # X [N,F] -> y [N]
+    param_count: int
+    num_classes: int
+    config: dict              # the DSE configuration that produced it
+
+
+# ------------------------------------------------------------------- DNN
+
+
+def _mlp_init(key, widths: list[int]) -> list[dict]:
+    params = []
+    for i in range(len(widths) - 1):
+        key, k1 = jax.random.split(key)
+        fan_in = widths[i]
+        params.append({
+            "w": jax.random.normal(k1, (widths[i], widths[i + 1]), jnp.float32)
+            * np.sqrt(2.0 / fan_in),
+            "b": jnp.zeros((widths[i + 1],), jnp.float32),
+        })
+    return params
+
+
+def mlp_forward(params: list[dict], x: jax.Array) -> jax.Array:
+    """ReLU MLP returning logits — the *same math* the generated Taurus
+    pipeline executes (kernels/fused_mlp); keeping them identical is what
+    makes codegen verification (tests/test_codegen.py) exact."""
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+@partial(jax.jit, static_argnames=("nsteps", "batch", "l2"))
+def _mlp_train_loop(params, x, y, key, lr, *, nsteps: int, batch: int,
+                    l2: float = 1e-4):
+    n = x.shape[0]
+
+    def loss_fn(p, xb, yb):
+        logits = mlp_forward(p, xb)
+        logp = jax.nn.log_softmax(logits)
+        ce = -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=1))
+        reg = sum(jnp.sum(jnp.square(l["w"])) for l in p)
+        return ce + l2 * reg
+
+    # Adam
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    def step(carry, i):
+        p, m, v, key = carry
+        key, kb = jax.random.split(key)
+        idx = jax.random.randint(kb, (batch,), 0, n)
+        g = jax.grad(loss_fn)(p, x[idx], y[idx])
+        t = i.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+        p = jax.tree.map(
+            lambda pp, a, b: pp - lr * a / (jnp.sqrt(b) + 1e-8), p, mh, vh
+        )
+        return (p, m, v, key), 0.0
+
+    (params, _, _, _), _ = jax.lax.scan(
+        step, (params, m, v, key), jnp.arange(nsteps)
+    )
+    return params
+
+
+def train_dnn(
+    data: Dataset,
+    *,
+    hidden: list[int],
+    lr: float = 3e-3,
+    batch: int = 256,
+    epochs: int = 12,
+    seed: int = 0,
+    config: dict | None = None,
+) -> TrainedModel:
+    F, C = data.num_features, data.num_classes
+    widths = [F] + list(hidden) + [C]
+    key = jax.random.PRNGKey(seed)
+    params = _mlp_init(key, widths)
+    x = jnp.asarray(data.train_x)
+    y = jnp.asarray(data.train_y)
+    nsteps = max(1, epochs * len(data.train_x) // batch)
+    params = _mlp_train_loop(
+        params, x, y, jax.random.PRNGKey(seed + 1), jnp.float32(lr),
+        nsteps=int(nsteps), batch=batch,
+    )
+    params = jax.tree.map(np.asarray, params)
+
+    def predict(X):
+        logits = mlp_forward(
+            [{k: jnp.asarray(v) for k, v in l.items()} for l in params],
+            jnp.asarray(X, jnp.float32),
+        )
+        return np.asarray(jnp.argmax(logits, -1), np.int32)
+
+    n_params = sum(int(l["w"].size + l["b"].size) for l in params)
+    return TrainedModel(
+        "dnn",
+        {"widths": widths, "act": "relu"},
+        params, predict, n_params, C, config or {"hidden": hidden},
+    )
+
+
+# ----------------------------------------------------------------- KMeans
+
+
+def train_kmeans(
+    data: Dataset, *, k: int, iters: int = 50, seed: int = 0,
+    feature_idx: list[int] | None = None, config: dict | None = None,
+) -> TrainedModel:
+    rng = np.random.default_rng(seed)
+    X = data.train_x if feature_idx is None else data.train_x[:, feature_idx]
+    init = X[rng.choice(len(X), size=k, replace=False)]
+    cent = init.copy()
+    for _ in range(iters):
+        d = ((X[:, None, :] - cent[None]) ** 2).sum(-1)
+        a = d.argmin(1)
+        for j in range(k):
+            pts = X[a == j]
+            if len(pts):
+                cent[j] = pts.mean(0)
+    # majority-label map cluster -> class (for classification use)
+    d = ((X[:, None, :] - cent[None]) ** 2).sum(-1)
+    a = d.argmin(1)
+    label_map = np.zeros(k, np.int32)
+    for j in range(k):
+        ys = data.train_y[a == j]
+        label_map[j] = np.bincount(ys, minlength=data.num_classes).argmax() \
+            if len(ys) else 0
+
+    def assign(X_):
+        X_ = X_ if feature_idx is None else X_[:, feature_idx]
+        return ((X_[:, None, :] - cent[None]) ** 2).sum(-1).argmin(1)
+
+    def predict(X_):
+        return label_map[assign(X_)]
+
+    tm = TrainedModel(
+        "kmeans",
+        {"k": k, "n_features": cent.shape[1], "feature_idx": feature_idx},
+        {"centroids": cent, "label_map": label_map},
+        predict, int(cent.size), data.num_classes,
+        config or {"k": k},
+    )
+    tm.topology["assign"] = assign  # raw cluster ids for v_measure
+    return tm
+
+
+# -------------------------------------------------------------- linear SVM
+
+
+def train_svm(
+    data: Dataset, *, c_reg: float = 1.0, epochs: int = 20, lr: float = 1e-2,
+    seed: int = 0, config: dict | None = None,
+) -> TrainedModel:
+    """One-vs-rest linear SVM via hinge-loss SGD (numpy)."""
+    rng = np.random.default_rng(seed)
+    X, y = data.train_x, data.train_y
+    N, F = X.shape
+    C = data.num_classes
+    W = np.zeros((F, C), np.float32)
+    b = np.zeros(C, np.float32)
+    Y = np.where(y[:, None] == np.arange(C)[None], 1.0, -1.0).astype(np.float32)
+    for ep in range(epochs):
+        perm = rng.permutation(N)
+        for start in range(0, N, 512):
+            idx = perm[start:start + 512]
+            s = X[idx] @ W + b  # [b, C]
+            margin = Y[idx] * s
+            active = (margin < 1.0).astype(np.float32)
+            gW = -(X[idx].T @ (active * Y[idx])) / len(idx) + W / (c_reg * N)
+            gb = -(active * Y[idx]).mean(0)
+            W -= lr * gW
+            b -= lr * gb
+
+    def predict(X_):
+        return np.argmax(X_ @ W + b, 1).astype(np.int32)
+
+    return TrainedModel(
+        "svm", {"n_features": F, "n_classes": C},
+        {"W": W, "b": b}, predict, int(W.size + b.size), C,
+        config or {"c_reg": c_reg},
+    )
+
+
+# ---------------------------------------------------------- decision tree
+
+
+def train_tree(
+    data: Dataset, *, max_depth: int = 6, min_leaf: int = 16, seed: int = 0,
+    config: dict | None = None,
+) -> TrainedModel:
+    """CART (gini) classifier; nodes stored flat for MAT codegen."""
+    X, y = data.train_x, data.train_y
+    C = data.num_classes
+    nodes: list[dict] = []  # {feat, thr, left, right, leaf_class}
+
+    def gini(ys):
+        if len(ys) == 0:
+            return 0.0
+        p = np.bincount(ys, minlength=C) / len(ys)
+        return 1.0 - np.sum(p * p)
+
+    def build(idx, depth) -> int:
+        ys = y[idx]
+        node_id = len(nodes)
+        nodes.append({})
+        if depth >= max_depth or len(idx) < 2 * min_leaf or gini(ys) < 1e-6:
+            nodes[node_id] = {"leaf": int(np.bincount(ys, minlength=C).argmax())}
+            return node_id
+        best = (None, None, np.inf)
+        for f in range(X.shape[1]):
+            vals = X[idx, f]
+            qs = np.quantile(vals, np.linspace(0.1, 0.9, 9))
+            for thr in qs:
+                l = idx[vals <= thr]
+                r = idx[vals > thr]
+                if len(l) < min_leaf or len(r) < min_leaf:
+                    continue
+                score = (len(l) * gini(y[l]) + len(r) * gini(y[r])) / len(idx)
+                if score < best[2]:
+                    best = (f, thr, score)
+        if best[0] is None:
+            nodes[node_id] = {"leaf": int(np.bincount(ys, minlength=C).argmax())}
+            return node_id
+        f, thr, _ = best
+        l_id = build(idx[X[idx, f] <= thr], depth + 1)
+        r_id = build(idx[X[idx, f] > thr], depth + 1)
+        nodes[node_id] = {"feat": int(f), "thr": float(thr),
+                          "left": l_id, "right": r_id}
+        return node_id
+
+    build(np.arange(len(X)), 0)
+
+    def predict(X_):
+        out = np.zeros(len(X_), np.int32)
+        for i, row in enumerate(X_):
+            nid = 0
+            while "leaf" not in nodes[nid]:
+                nd = nodes[nid]
+                nid = nd["left"] if row[nd["feat"]] <= nd["thr"] else nd["right"]
+            out[i] = nodes[nid]["leaf"]
+        return out
+
+    depth_used = max_depth
+    return TrainedModel(
+        "tree", {"nodes": nodes, "depth": depth_used},
+        {"nodes": nodes}, predict, len(nodes), C,
+        config or {"max_depth": max_depth},
+    )
+
+
+# ------------------------------------------------------- logistic regression
+
+
+def train_logreg(
+    data: Dataset, *, lr: float = 0.1, epochs: int = 30, seed: int = 0,
+    config: dict | None = None,
+) -> TrainedModel:
+    tm = train_dnn(data, hidden=[], lr=lr, epochs=epochs, seed=seed,
+                   config=config or {})
+    tm.algorithm = "logreg"
+    return tm
+
+
+# ------------------------------------------------------------------ train()
+
+SUPPORTED_ALGORITHMS = ["dnn", "kmeans", "svm", "tree", "logreg"]
+
+
+def train(algorithm: str, data: Dataset, config: dict, *, seed: int = 0
+          ) -> TrainedModel:
+    """Uniform entry point the DSE loop calls with a BO-suggested config."""
+    if algorithm == "dnn":
+        hidden = [config[f"h{i}"] for i in range(config["n_layers"])
+                  if config.get(f"h{i}", 0) > 0]
+        return train_dnn(
+            data, hidden=hidden, lr=config.get("lr", 3e-3),
+            batch=config.get("batch", 256), epochs=config.get("epochs", 12),
+            seed=seed, config=config,
+        )
+    if algorithm == "kmeans":
+        n_feat = config.get("n_features", data.num_features)
+        fi = list(range(n_feat)) if n_feat < data.num_features else None
+        return train_kmeans(data, k=config["k"], seed=seed, feature_idx=fi,
+                            config=config)
+    if algorithm == "svm":
+        return train_svm(data, c_reg=config.get("c_reg", 1.0), seed=seed,
+                         config=config)
+    if algorithm == "tree":
+        return train_tree(data, max_depth=config.get("max_depth", 6),
+                          seed=seed, config=config)
+    if algorithm == "logreg":
+        return train_logreg(data, lr=config.get("lr", 0.1), seed=seed,
+                            config=config)
+    raise KeyError(algorithm)

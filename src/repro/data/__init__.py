@@ -1,0 +1,2 @@
+from repro.data.tokens import TokenDataset
+from repro.data import netdata

@@ -1,0 +1,1 @@
+from repro.ft.restart import RestartManager, StragglerWatchdog

@@ -1,0 +1,2 @@
+from repro.kernels.binarized_gemm.ops import binarized_gemm
+from repro.kernels.binarized_gemm.ref import binarized_gemm_ref, sign_pm1

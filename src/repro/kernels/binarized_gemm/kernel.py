@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: binarized GEMM (N2Net's BNN primitive, TPU-native).
+
+HARDWARE ADAPTATION (DESIGN.md §2): the paper's N2Net backend and the GPU
+literature implement ±1 GEMM as XNOR + popcount over bit-packed words.
+TPUs have neither warp ballots nor a popcount datapath worth feeding — but
+they have an int8 MXU at 2x bf16 rate.  The TPU-native form is therefore:
+
+    sign(x), sign(w) -> int8 (+1/-1)  ->  int8 MXU matmul, int32 accumulate
+
+which is bit-exact with the XNOR-popcount result (n_matches - n_mismatches
+== dot of ±1 vectors) while using the systolic array at full int8 rate.
+The binarization is fused into the kernel (inputs stream in their original
+dtype; no materialized ±1 copies in HBM).
+
+Grid: (B/block_b, N/block_n, K/block_k) with an int32 VMEM accumulator
+persisted across the (innermost, sequential) k dim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xb = jnp.where(x_ref[...] >= 0, 1, -1).astype(jnp.int8)
+    wb = jnp.where(w_ref[...] >= 0, 1, -1).astype(jnp.int8)
+    acc_ref[...] += jnp.dot(
+        xb, wb, preferred_element_type=jnp.int32
+    )
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_n", "block_k", "interpret")
+)
+def binarized_gemm_padded(
+    x: jax.Array,  # [B, K]  (B % block_b == 0, K % block_k == 0)
+    w: jax.Array,  # [K, N]  (N % block_n == 0)
+    *,
+    block_b: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, K = x.shape
+    N = w.shape[1]
+    grid = (B // block_b, N // block_n, K // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda b, n, k: (b, k)),
+            pl.BlockSpec((block_k, block_n), lambda b, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda b, n, k: (b, n)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_b, block_n), jnp.int32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,43 @@
+"""Public op: binarized GEMM with padding + CPU fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.binarized_gemm.kernel import binarized_gemm_padded
+from repro.kernels.binarized_gemm.ref import binarized_gemm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def binarized_gemm(
+    x: jax.Array,  # [B, K] real-valued
+    w: jax.Array,  # [K, N] real-valued
+    *,
+    block: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """sign(x) @ sign(w) -> int32 [B, N] (BNN matmul, bit-exact)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, K = x.shape
+    N = w.shape[1]
+    if interpret and B * K * N > 2**22:
+        return binarized_gemm_ref(x, w).astype(jnp.int32)
+    bb = min(block, max(8, B))
+    bn = min(block, max(8, N))
+    bk = min(block, max(8, K))
+    pb, pk, pn = (-B) % bb, (-K) % bk, (-N) % bn
+    # pad with -1e-9 so sign() of padding is -1 on BOTH sides: the padded
+    # k-extent then contributes (-1)*(-1)=+1 per padded element, which we
+    # subtract exactly afterwards.
+    xp = jnp.pad(x, ((0, pb), (0, pk)), constant_values=-1e-9)
+    wp = jnp.pad(w, ((0, pk), (0, pn)), constant_values=-1e-9)
+    out = binarized_gemm_padded(
+        xp, wp, block_b=bb, block_n=bn, block_k=bk, interpret=interpret
+    )
+    out = out[:B, :N] - pk  # remove the padded-k contribution
+    return out

@@ -1,0 +1,21 @@
+"""Oracle for binarized (±1) GEMM — the N2Net/BNN compute primitive.
+
+y = sign(x) @ sign(W) exactly, computed in fp32.  N2Net [81] maps this to
+MAT lookups on switches; the GPU classic is XNOR+popcount.  Neither
+construct exists on TPU — see kernel.py for the MXU adaptation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sign_pm1(x: jax.Array) -> jax.Array:
+    """sign with sign(0) = +1 (BNN convention)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def binarized_gemm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x [B, K], w [K, N] (real-valued) -> ±1-quantized product [B, N]."""
+    return sign_pm1(x) @ sign_pm1(w)

@@ -1,0 +1,165 @@
+"""Pallas TPU flash attention: tiled online-softmax, causal/SWA/GQA.
+
+TPU-native design (vs. the CUDA original):
+  * The TPU grid is executed *sequentially* with the last dim minor, so the
+    kv-block loop is the innermost grid dim and the (m, l, acc) running
+    statistics live in VMEM scratch that persists across kv steps — no
+    atomics, no shared-memory reductions (those are GPU concepts; on TPU the
+    scratch SRAM plays that role).
+  * Block shapes are (block_q x head_dim) and (block_k x head_dim) with
+    head_dim = 128 = MXU lane width, so qk^T and pv are exact MXU tiles.
+  * GQA is handled by an index_map trick: kv blocks are indexed by
+    q_head // group_size, so grouped q heads re-read the same kv tile from
+    VMEM while it is resident (free on TPU; a gather on GPU).
+  * Causal/window skipping: fully-masked kv blocks are skipped with
+    @pl.when — the compute predicate, not a memory predicate, because the
+    pipelined BlockSpec fetch still streams the block (simple, and correct
+    roofline-wise: HBM term unchanged, MXU term halved for causal).
+
+Grid: (B, H, Sq/block_q, Skv/block_k).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,    # [1, block_q, 1, D]
+    k_ref,    # [1, block_k, 1, D]
+    v_ref,    # [1, block_k, 1, D]
+    o_ref,    # [1, block_q, 1, D]
+    acc_ref,  # scratch [block_q, D] f32
+    m_ref,    # scratch [block_q] f32
+    l_ref,    # scratch [block_q] f32
+    *,
+    causal: bool,
+    window: int,
+    q_offset: int,
+    block_q: int,
+    block_k: int,
+    num_kv_blocks: int,
+    skv: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block-level skip predicates (compute only on potentially-unmasked blocks)
+    q_lo = q_offset + qi * block_q              # first q position in block
+    q_hi = q_lo + block_q - 1                   # last q position in block
+    k_lo = ki * block_k
+    k_hi = k_lo + block_k - 1
+    live = True
+    if causal:
+        live = k_lo <= q_hi
+    if window > 0:
+        live = jnp.logical_and(live, k_hi > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # [bq, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        s = s * (1.0 / math.sqrt(q.shape[-1]))
+
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kv_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kv_pos < skv
+        if causal:
+            mask = jnp.logical_and(mask, kv_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, kv_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        acc_ref[...] = (
+            acc_ref[...] * alpha[:, None]
+            + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        )
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "skv", "causal", "window", "q_offset", "block_q", "block_k",
+        "interpret",
+    ),
+)
+def flash_attention_padded(
+    q: jax.Array,  # [B, Sq, H, D]  (Sq % block_q == 0)
+    k: jax.Array,  # [B, Skv_pad, K, D]  (Skv_pad % block_k == 0)
+    v: jax.Array,
+    *,
+    skv: int,              # true (unpadded) kv length
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    num_q_blocks = Sq // block_q
+    num_kv_blocks = k.shape[1] // block_k
+    grid = (B, H, num_q_blocks, num_kv_blocks)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k,
+        num_kv_blocks=num_kv_blocks, skv=skv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, block_q, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_k, 1, D), lambda b, h, qi, ki: (b, ki, h // G, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_k, 1, D), lambda b, h, qi, ki: (b, ki, h // G, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            # (block_q, D) accumulator + per-row stats in VMEM, persistent
+            # across the (sequential, innermost) kv grid dim
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,57 @@
+"""Public op: flash attention with padding/unpadding and CPU fallback.
+
+``flash_attention(q, k, v, causal=..., window=...)`` matches the semantics
+of ref.attention_ref / models.attention.chunked_attention.  On CPU the
+kernel runs interpret=True for small shapes (tests) and transparently falls
+back to the XLA chunked path for big ones (interpret mode is pure Python —
+fine for validation, far too slow for a 32k prefill on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_padded
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Sq, H, D]
+    k: jax.Array,  # [B, Skv, K, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    if interpret and (B * H * Sq * Skv > 2**22):
+        # interpret mode = Python per grid step; cap it to test sizes
+        return attention_ref(
+            q, k, v, causal=causal, window=window, q_offset=q_offset
+        )
+
+    block_q = min(block_q, max(8, Sq))
+    block_k = min(block_k, max(8, Skv))
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    out = flash_attention_padded(
+        qp, kp, vp,
+        skv=Skv, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out[:, :Sq]

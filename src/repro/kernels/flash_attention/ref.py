@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for flash attention: naive full-matrix softmax attention.
+
+Supports causal masking, sliding window, GQA (H % K == 0), and a q position
+offset.  Used by the hypothesis sweep in tests/test_kernels.py and as the
+semantic spec for models/attention.chunked_attention (the XLA twin that the
+dry-run lowers).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # [B, Sq, H, D]
+    k: jax.Array,  # [B, Skv, K, D]
+    v: jax.Array,  # [B, Skv, K, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+    if window > 0:
+        mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bkgsd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: whole per-packet DNN fused into ONE kernel launch.
+
+This is the TPU-native translation of the paper's Taurus MapReduce pipeline
+(Fig. 5): the paper stitches dot-product map/reduce templates into layers and
+layers into a pipeline with double-buffered SRAM between stages.  On TPU the
+equivalent is a single Pallas kernel where
+
+  * every layer's weights are resident in VMEM for the whole launch (the
+    "on-chip memory" of the MapReduce grid; weights never re-read from HBM),
+  * the batch is tiled into MXU-aligned blocks (block_b x 128) that stream
+    through HBM -> VMEM double-buffering (pallas_call pipelines the grid),
+  * layer widths are zero-padded to the 128-lane MXU tile so each layer is
+    exactly one 128x128 MXU matmul per batch tile -- a "CU" in our resource
+    model (core.feasibility) is one such tile-op.
+
+Zero padding is self-masking: padded weight columns/rows are 0 and padded
+biases are 0, so padded activations stay identically 0 through ReLU chains.
+
+Grid: (B / block_b,).  VMEM working set = L*128*128*4 B of weights
+(+2 batch tiles), which core.feasibility checks against the VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128  # MXU/VREG lane width: all layer widths pad to this
+DEFAULT_BLOCK_B = 256
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, n_layers: int):
+    """x_ref: [block_b, LANE]; w_ref: [L, LANE, LANE]; b_ref: [L, LANE]."""
+    h = x_ref[...].astype(jnp.float32)
+    for l in range(n_layers):  # static unroll: the whole DNN in one launch
+        w = w_ref[l].astype(jnp.float32)
+        h = jnp.dot(h, w, preferred_element_type=jnp.float32)
+        h = h + b_ref[l][None, :]
+        if l < n_layers - 1:
+            h = jnp.maximum(h, 0.0)
+    o_ref[...] = h.astype(o_ref.dtype)
+
+
+def pad_to_lane(arr: jax.Array, axis: int) -> jax.Array:
+    n = arr.shape[axis]
+    pad = (-n) % LANE
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(arr, widths)
+
+
+def pack_params(weights: list[jax.Array], biases: list[jax.Array]
+                ) -> tuple[jax.Array, jax.Array]:
+    """Zero-pad every layer to [LANE, LANE] and stack: -> ([L,LANE,LANE],
+    [L,LANE]).  Requires every layer dim <= LANE (per-packet models are)."""
+    ws, bs = [], []
+    for w, b in zip(weights, biases):
+        assert w.shape[0] <= LANE and w.shape[1] <= LANE, (
+            f"fused_mlp supports layer dims <= {LANE}, got {w.shape}"
+        )
+        ws.append(pad_to_lane(pad_to_lane(w, 0), 1))
+        bs.append(pad_to_lane(b, 0))
+    return jnp.stack(ws).astype(jnp.float32), jnp.stack(bs).astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_layers", "block_b", "interpret")
+)
+def fused_mlp_padded(
+    x_pad: jax.Array,     # [B_pad, LANE]
+    w_stack: jax.Array,   # [L, LANE, LANE]
+    b_stack: jax.Array,   # [L, LANE]
+    *,
+    n_layers: int,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+) -> jax.Array:
+    B = x_pad.shape[0]
+    assert B % block_b == 0
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_layers=n_layers),
+        grid=grid,
+        in_specs=[
+            # batch tile streams; index_map in block units
+            pl.BlockSpec((block_b, LANE), lambda i: (i, 0)),
+            # weights: whole stack resident in VMEM every grid step
+            pl.BlockSpec((n_layers, LANE, LANE), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_layers, LANE), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, LANE), x_pad.dtype),
+        interpret=interpret,
+    )(x_pad, w_stack, b_stack)
+
+
+def vmem_bytes(n_layers: int, block_b: int = DEFAULT_BLOCK_B) -> int:
+    """VMEM working set the kernel claims (feasibility input)."""
+    weights = n_layers * LANE * LANE * 4 + n_layers * LANE * 4
+    tiles = 2 * 2 * block_b * LANE * 4  # double-buffered in + out tiles
+    return weights + tiles

@@ -1,0 +1,60 @@
+"""Public op: fused per-packet MLP inference.
+
+``fused_mlp(x, weights, biases)`` pads/packs, launches the Pallas kernel
+(interpret=True on CPU — the TPU path is the same kernel compiled by
+Mosaic), and slices the logits back to the true class count.
+
+This is the executable artifact the Homunculus Taurus backend emits
+(core.codegen.TaurusBackend): the generated pipeline closure calls this op
+with the trained weights baked in.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_mlp.kernel import (
+    DEFAULT_BLOCK_B,
+    LANE,
+    fused_mlp_padded,
+    pack_params,
+    pad_to_lane,
+)
+from repro.kernels.fused_mlp.ref import mlp_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_mlp(
+    x: jax.Array,
+    weights: list[jax.Array],
+    biases: list[jax.Array],
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x: [B, F] -> logits [B, num_classes]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, F = x.shape
+    C = weights[-1].shape[1]
+    if F > LANE or any(w.shape[1] > LANE for w in weights):
+        # wide model: out of the fused kernel's envelope -> XLA reference
+        return mlp_ref(x, weights, biases)
+
+    w_stack, b_stack = pack_params(weights, biases)
+    block_b = min(block_b, max(8, B))
+    pad_b = (-B) % block_b
+    x_pad = pad_to_lane(jnp.pad(x, ((0, pad_b), (0, 0))), 1)
+    out = fused_mlp_padded(
+        x_pad, w_stack, b_stack,
+        n_layers=len(weights), block_b=block_b, interpret=interpret,
+    )
+    return out[:B, :C]
+
+
+def fused_mlp_reference(x, weights, biases):
+    return mlp_ref(x, weights, biases)

@@ -1,0 +1,35 @@
+"""Public op: Mamba selective scan (y, h_final) with CPU fallback.
+
+Matches ref.selective_scan_ref and the chunked associative-scan XLA twin
+(models.ssm._ssm_scan_chunked) that the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.selective_scan.kernel import selective_scan_pallas
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def selective_scan(
+    deltaA: jax.Array,   # [B, S, di, N]
+    deltaBx: jax.Array,  # [B, S, di, N]
+    C: jax.Array,        # [B, S, N]
+    h0: jax.Array,       # [B, di, N]
+    *,
+    chunk: int = 64,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, di, N = deltaA.shape
+    if interpret and B * S * di * N > 2**22:
+        return selective_scan_ref(deltaA, deltaBx, C, h0)
+    return selective_scan_pallas(
+        deltaA, deltaBx, C, h0, chunk=chunk, interpret=interpret
+    )

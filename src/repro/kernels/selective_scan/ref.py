@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the Mamba selective scan: naive sequential recurrence.
+
+    h_t = dA_t * h_{t-1} + dBx_t          (elementwise over [di, N])
+    y_t = sum_n h_t[:, n] * C_t[n]
+
+This is the *definitionally correct* O(S) loop; both the chunked XLA path
+(models.ssm._ssm_scan_chunked) and the Pallas kernel must match it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(
+    deltaA: jax.Array,   # [B, S, di, N] f32
+    deltaBx: jax.Array,  # [B, S, di, N] f32
+    C: jax.Array,        # [B, S, N] f32
+    h0: jax.Array,       # [B, di, N] f32
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B, S, di], h_final [B, di, N])."""
+
+    def step(h, inp):
+        dA, dBx, c = inp
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+
+    xs = (
+        deltaA.transpose(1, 0, 2, 3),
+        deltaBx.transpose(1, 0, 2, 3),
+        C.transpose(1, 0, 2),
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h_final

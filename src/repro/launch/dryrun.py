@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count on first init); that is why they head the module.
+
+Per cell this proves, without TPU hardware:
+  * the sharding config is coherent (GSPMD partitions the step),
+  * the per-device memory footprint fits (memory_analysis),
+  * and it yields the roofline inputs (cost_analysis + HLO collectives).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import pytree as pt
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
+from repro.dist.sharding import (
+    DECODE_RULES, DEFAULT_RULES, PREFILL_RULES, mesh_context,
+)
+from repro.launch import hlo as hlo_mod
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh, sharding_tree
+from repro.launch.specs import input_specs, state_defs_for
+from repro.models import registry
+from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.train.step import TrainSettings, make_train_step
+
+
+def pick_rules(cfg, shape):
+    """Decode rules (replicated activations, 2D-sharded weights) only pay
+    when weights dwarf activations: >5B params.  Small models keep the
+    batch-sharded default — measured crossover in EXPERIMENTS.md §Perf."""
+    if shape.kind == "decode":
+        from repro.models import registry
+
+        if registry.param_count(cfg) > 5e9:
+            return DECODE_RULES
+    if shape.kind in ("prefill", "decode"):
+        return PREFILL_RULES
+    return DEFAULT_RULES
+
+
+def pick_train_settings(cfg, shape, mesh) -> TrainSettings:
+    """Microbatch count targeting ~1 sample/device/microbatch."""
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    micro = max(1, min(16, shape.global_batch // dp))
+    while shape.global_batch % micro:
+        micro -= 1
+    return TrainSettings(microbatches=micro, remat=True)
+
+
+def build_step_and_specs(cfg, shape, mesh, *, microbatches=None, rules=None):
+    """-> (fn, arg_specs tuple, in_shardings, out_shardings, donate)."""
+    if rules is None:
+        rules = pick_rules(cfg, shape)
+    specs = input_specs(cfg, shape)
+    defs = state_defs_for(cfg, shape)
+    sh = {k: sharding_tree(v, mesh, rules) for k, v in defs.items()}
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+    tok_sh = sharding_tree(
+        pt.ParamDef((1, 1), jnp.int32, ("batch", None), "zeros"), mesh, rules
+    )
+
+    if shape.kind == "train":
+        settings = pick_train_settings(cfg, shape, mesh)
+        if microbatches:
+            micro = min(microbatches, shape.global_batch)
+            while shape.global_batch % micro:
+                micro -= 1
+            settings = TrainSettings(microbatches=micro, remat=True)
+        fn = make_train_step(cfg, settings)
+        args = (specs["state"], specs["batch"])
+        in_sh = (sh["state"], sh["batch"])
+        out_sh = (sh["state"], rep)
+        donate = (0,)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        args = (specs["params"], specs["cache"], specs["batch"])
+        in_sh = (sh["params"], sh["cache"], sh["batch"])
+        out_sh = (tok_sh, sh["cache"])
+        donate = (1,)
+    else:
+        raw = make_decode_step(cfg)
+
+        def fn(params, cache, batch, index):
+            return raw(params, cache, batch["tokens"], index)
+
+        args = (specs["params"], specs["cache"], specs["batch"],
+                specs["index"])
+        in_sh = (sh["params"], sh["cache"], sh["batch"], rep)
+        out_sh = (tok_sh, sh["cache"])
+        donate = (1,)
+    return fn, args, in_sh, out_sh, donate
+
+
+def analytic_hbm_bytes(cfg, shape, mesh) -> float:
+    """Cross-check: parameter+state bytes per device (excl. activations)."""
+    defs = state_defs_for(cfg, shape)
+    total = 0
+    for tree in defs.values():
+        total += pt.param_bytes(tree) if not isinstance(tree, pt.ParamDef) \
+            else tree.size * jnp.dtype(tree.dtype).itemsize
+    return total / mesh.size
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), "kind": shape.kind,
+        "devices": mesh.size, "ok": False,
+    }
+    t0 = time.perf_counter()
+    rules = pick_rules(cfg, shape)
+    try:
+        with mesh, mesh_context(mesh, rules):
+            fn, args, in_sh, out_sh, donate = build_step_and_specs(
+                cfg, shape, mesh, rules=rules
+            )
+            jitted = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=donate,
+            )
+            lowered = jitted.lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        txt = compiled.as_text()
+        colls = hlo_mod.parse_collectives(txt, mesh.size)
+        csum = hlo_mod.summarize_collectives(colls)
+        cost = hlo_cost.analyze(txt, mesh.size)
+
+        rec.update({
+            "hlo_cost": cost.to_json(),
+            "ok": True,
+            "wall_lower_s": round(t_lower, 2),
+            "wall_compile_s": round(t_compile, 2),
+            "memory_analysis": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_bytes_est": ma.argument_size_in_bytes
+                + ma.temp_size_in_bytes
+                + ma.output_size_in_bytes
+                - ma.alias_size_in_bytes,
+            },
+            "cost_analysis": {
+                "flops": ca.get("flops", 0.0),
+                "transcendentals": ca.get("transcendentals", 0.0),
+                "bytes_accessed": ca.get("bytes accessed", 0.0),
+            },
+            "collectives": csum,
+            "hlo_ops": hlo_mod.hlo_op_histogram(txt),
+            "model_flops": registry.model_flops(cfg, shape),
+            "params": registry.param_count(cfg),
+            "active_params": registry.active_param_count(cfg),
+            "analytic_state_bytes_per_dev": analytic_hbm_bytes(
+                cfg, shape, mesh
+            ),
+        })
+    except Exception as e:  # noqa: BLE001 — a failed cell is a report, not a crash
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=6)
+    rec["wall_total_s"] = round(time.perf_counter() - t0, 2)
+    return rec
+
+
+def all_cells() -> list[tuple[str, str]]:
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for s in applicable_shapes(cfg):
+            cells.append((arch, s))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for arch, s in all_cells():
+            print(f"{arch:28s} {s}")
+        return
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    for mesh_kind in meshes:
+        for arch, shape in cells:
+            path = os.path.join(args.out, f"{mesh_kind}__{arch}__{shape}.json")
+            if os.path.exists(path) and not args.force:
+                with open(path) as f:
+                    old = json.load(f)
+                if old.get("ok"):
+                    print(f"[skip] {mesh_kind} {arch} {shape} (cached ok)")
+                    continue
+            print(f"[run ] {mesh_kind} {arch} {shape} ...", flush=True)
+            rec = run_cell(arch, shape, mesh_kind)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = "ok" if rec["ok"] else f"FAIL {rec.get('error', '')[:120]}"
+            print(
+                f"[done] {mesh_kind} {arch} {shape}: {status} "
+                f"({rec['wall_total_s']}s)", flush=True,
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Post-SPMD HLO parsing: collective inventory + wire-byte accounting.
+
+``compiled.as_text()`` is the partitioned (per-device) module, so every
+tensor shape on a collective line is a per-device shard.  For each collective
+we record result bytes, group size, and *wire bytes per device* under the
+standard ring-algorithm model:
+
+  all-gather      result R over group g: send/recv R*(g-1)/g
+  all-reduce      operand O (= result):  2*O*(g-1)/g   (RS + AG phases)
+  reduce-scatter  result R (operand R*g): R*(g-1)      == O*(g-1)/g
+  all-to-all      operand O: O*(g-1)/g
+  collective-permute  operand O: O
+
+CPU-backend caveat: XLA-CPU widens bf16 dot operands to f32 before
+collectives, doubling their stated size vs. a TPU lowering.  We report both
+``wire_bytes`` (as lowered) and ``wire_bytes_bf16`` (f32 collectives of
+matmul operands re-costed at 2 bytes) — the TPU-corrected number used by the
+roofline's collective term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# dtype[1,2,3]{layout} — layout optional
+_TYPE_RE = re.compile(r"\b(pred|[sub]\d+|bf16|f16|f32|f64|u8|s8)\[([\d,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_SOURCE_PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?)\}")
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    dtype: str
+    result_bytes: int
+    group_size: int
+    wire_bytes: float       # per-device wire traffic, as lowered
+    wire_bytes_bf16: float  # f32->bf16 corrected (TPU lowering estimate)
+    line: str
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]<=...
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip() != ""])
+    m = _SOURCE_PAIRS_RE.search(line)
+    if m:  # collective-permute: pairwise, "group" of 2
+        return 2
+    return total_devices
+
+
+def _result_types(line: str) -> list[tuple[str, str]]:
+    """Types on the LHS (result), handling tuples."""
+    lhs = line.split("=", 1)[0] if "=" in line else ""
+    rhs = line.split("=", 1)[1] if "=" in line else line
+    # result types are the first type tokens of the rhs before the op name
+    op_idx = min(
+        (rhs.find(k) for k in _KINDS if k in rhs), default=-1
+    )
+    head = rhs[:op_idx] if op_idx > 0 else ""
+    types = _TYPE_RE.findall(head)
+    if not types:
+        types = _TYPE_RE.findall(rhs)[:1]
+    return types
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> list[Collective]:
+    out: list[Collective] = []
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("//"):
+            continue
+        kind = None
+        for k in _KINDS:
+            # match op name with word boundary: "all-gather(", "all-gather-start("
+            if f" {k}(" in line or f" {k}-start(" in line:
+                kind = k
+                break
+        if kind is None:
+            continue
+        if " all-gather-done(" in line or " all-reduce-done(" in line:
+            continue
+        types = _result_types(line)
+        if not types:
+            continue
+        g = _group_size(line, total_devices)
+        rb = sum(_type_bytes(dt, dims) for dt, dims in types)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-gather":
+            wire = rb * frac
+        elif kind == "all-reduce":
+            wire = 2 * rb * frac
+        elif kind == "reduce-scatter":
+            wire = rb * (g - 1)
+        elif kind == "all-to-all":
+            wire = rb * frac
+        else:  # collective-permute
+            wire = float(rb)
+        # f32 collectives are (almost always here) widened bf16 matmul
+        # operands on the CPU backend; cost them at bf16 for the TPU estimate
+        corr = 0.5 if all(dt == "f32" for dt, _ in types) else 1.0
+        out.append(Collective(
+            kind=kind,
+            dtype=",".join(dt for dt, _ in types),
+            result_bytes=rb,
+            group_size=g,
+            wire_bytes=wire,
+            wire_bytes_bf16=wire * corr,
+            line=line[:200],
+        ))
+    return out
+
+
+def summarize_collectives(colls: list[Collective]) -> dict:
+    by_kind: dict[str, dict] = defaultdict(
+        lambda: {"count": 0, "wire_bytes": 0.0, "wire_bytes_bf16": 0.0}
+    )
+    for c in colls:
+        d = by_kind[c.kind]
+        d["count"] += 1
+        d["wire_bytes"] += c.wire_bytes
+        d["wire_bytes_bf16"] += c.wire_bytes_bf16
+    total = {
+        "wire_bytes": sum(c.wire_bytes for c in colls),
+        "wire_bytes_bf16": sum(c.wire_bytes_bf16 for c in colls),
+        "count": len(colls),
+    }
+    return {"by_kind": dict(by_kind), "total": total}
+
+
+def hlo_op_histogram(hlo_text: str, top: int = 12) -> dict[str, int]:
+    """Rough op histogram (duplicate-op / remat waste diagnostics)."""
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+[a-z0-9\[\],{}: ]*?([a-z][a-z0-9-]*)\(", line)
+        if m:
+            counts[m.group(1)] += 1
+    return dict(
+        sorted(counts.items(), key=lambda kv: -kv[1])[:top]
+    )

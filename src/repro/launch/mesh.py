@@ -1,0 +1,73 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (required so smoke tests see 1 CPU device while the dry-run
+sees 512 forced host devices).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh, NamedSharding
+
+from repro.common import pytree as pt
+from repro.dist.sharding import AxisRules, DEFAULT_RULES
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh_shape(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (autoshard DSE explores these)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def fit_pspec(shape: tuple[int, ...], spec, mesh: Mesh):
+    """Drop mesh axes that do not divide their dim (replicate instead).
+
+    E.g. GQA with 8 KV heads on a 16-way model axis: the KV projection is
+    replicated across pairs of TP ranks — the standard fallback on real
+    systems — rather than failing the lowering.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        kept, prod = [], 1
+        for a in axes:
+            size = mesh.shape[a]
+            if dim % (prod * size) == 0:
+                kept.append(a)
+                prod *= size
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_tree(defs, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    """ParamDef tree -> NamedSharding tree (logical axes, shape-fitted)."""
+
+    def one(d: pt.ParamDef) -> NamedSharding:
+        spec = rules.resolve(d.axes, mesh)
+        return NamedSharding(mesh, fit_pspec(d.shape, spec, mesh))
+
+    return jax.tree.map(one, defs, is_leaf=pt.is_def)

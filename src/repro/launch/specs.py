@@ -1,0 +1,77 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+The shannon/kernels pattern: weak-type-correct, shardable, zero device
+allocation — what lets a 398B train_step lower on a 1-core CPU host.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.common import pytree as pt
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.models import registry
+from repro.serve.steps import serve_cache_defs
+from repro.train.step import train_state_defs
+
+
+def _abstract(defs):
+    return pt.abstract(defs)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig | str) -> dict:
+    """Abstract inputs for the step the shape's kind lowers.
+
+    train   -> {"state": train_state, "batch": {tokens, targets, ...}}
+    prefill -> {"params", "cache", "batch"}
+    decode  -> {"params", "cache", "tokens", "index"}
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    if shape.kind == "train":
+        return {
+            "state": _abstract(train_state_defs(cfg)),
+            "batch": _abstract(registry.train_batch_defs(cfg, shape)),
+        }
+    params = _abstract(registry.param_defs(cfg))
+    cache = _abstract(
+        serve_cache_defs(cfg, shape.global_batch, shape.seq_len)
+    )
+    if shape.kind == "prefill":
+        return {
+            "params": params,
+            "cache": cache,
+            "batch": _abstract(registry.prefill_batch_defs(cfg, shape)),
+        }
+    assert shape.kind == "decode"
+    return {
+        "params": params,
+        "cache": cache,
+        "batch": _abstract(registry.decode_batch_defs(cfg, shape)),
+        "index": jax.ShapeDtypeStruct((), jax.numpy.int32),
+    }
+
+
+def state_defs_for(cfg: ModelConfig, shape: ShapeConfig | str) -> dict:
+    """The ParamDef trees matching input_specs (for shardings)."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    if shape.kind == "train":
+        return {
+            "state": train_state_defs(cfg),
+            "batch": registry.train_batch_defs(cfg, shape),
+        }
+    params = registry.param_defs(cfg)
+    cache = serve_cache_defs(cfg, shape.global_batch, shape.seq_len)
+    if shape.kind == "prefill":
+        return {
+            "params": params,
+            "cache": cache,
+            "batch": registry.prefill_batch_defs(cfg, shape),
+        }
+    return {
+        "params": params,
+        "cache": cache,
+        "batch": registry.decode_batch_defs(cfg, shape),
+        "index": pt.ParamDef((), jax.numpy.int32, (), "zeros"),
+    }

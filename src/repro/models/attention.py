@@ -1,0 +1,448 @@
+"""Attention: GQA/MHA with RoPE, QKV-bias, QK-norm, sliding-window, cross-attn,
+KV caches (full / rolling-window) and sequence-parallel sharded decode.
+
+Three execution paths:
+  * ``chunked_attention`` -- online-softmax over KV chunks in pure jnp. This
+    is the XLA path used by the CPU dry-run and is the oracle-equivalent of
+    the Pallas flash_attention kernel (repro.kernels.flash_attention), which
+    replaces it on real TPUs.
+  * ``decode_attention`` -- single-token attention against a cache.
+  * ``seq_sharded_decode_attention`` -- shard_map over the ``model`` axis with
+    partial-softmax (m, l) psum combine; the KV cache seq dim is sharded so
+    multi-GB 32k/500k caches are never all-gathered.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.pytree import ParamDef
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import current_mesh, current_rules, shard
+from repro.models.layers import apply_rope, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- params
+
+
+def attn_defs(cfg: ModelConfig, *, cross: bool = False, gated: bool = False):
+    d, H, K, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, H, Dh), jnp.bfloat16, ("fsdp", "tp", None), "scaled"),
+        "wk": ParamDef((d, K, Dh), jnp.bfloat16, ("fsdp", "tp", None), "scaled"),
+        "wv": ParamDef((d, K, Dh), jnp.bfloat16, ("fsdp", "tp", None), "scaled"),
+        "wo": ParamDef((H, Dh, d), jnp.bfloat16, ("tp", None, "fsdp"), "scaled"),
+    }
+    if cfg.use_qkv_bias:
+        defs["bq"] = ParamDef((H, Dh), jnp.float32, ("tp", None), "zeros")
+        defs["bk"] = ParamDef((K, Dh), jnp.float32, ("tp", None), "zeros")
+        defs["bv"] = ParamDef((K, Dh), jnp.float32, ("tp", None), "zeros")
+    if cfg.use_qk_norm:
+        defs["q_norm"] = ParamDef((Dh,), jnp.float32, (None,), "ones")
+        defs["k_norm"] = ParamDef((Dh,), jnp.float32, (None,), "ones")
+    if gated:  # VLM gated cross-attention (tanh gate, init 0 => identity)
+        defs["gate"] = ParamDef((), jnp.float32, (), "zeros")
+    return defs
+
+
+def project_q(p, x, cfg: ModelConfig, positions=None):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+    if "q_norm" in p:
+        q = rmsnorm({"scale": p["q_norm"]}, q, cfg.norm_eps)
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    return shard(q, "batch", None, "tp", None)
+
+
+def project_kv(p, x, cfg: ModelConfig, positions=None):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bk" in p:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    if "k_norm" in p:
+        k = rmsnorm({"scale": p["k_norm"]}, k, cfg.norm_eps)
+    if positions is not None:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k = shard(k, "batch", None, "tp", None)
+    v = shard(v, "batch", None, "tp", None)
+    return k, v
+
+
+def project_out(p, o, cfg: ModelConfig):
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if "gate" in p:
+        out = jnp.tanh(p["gate"]).astype(out.dtype) * out
+    return shard(out, "batch", "sp", None)
+
+
+# ---------------------------------------------------------------- core math
+
+
+def _group(q, num_kv_heads):
+    """[B,S,H,D] -> [B,S,K,G,D]."""
+    B, S, H, D = q.shape
+    G = H // num_kv_heads
+    return q.reshape(B, S, num_kv_heads, G, D)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: int | jax.Array = 0,
+    window: int = 0,
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """Online-softmax attention, O(S * chunk) memory, HEADS-SHARDED layout.
+
+    q: [B,Sq,H,D]; k, v: [B,Skv,K,D] (GQA: H % K == 0).
+    ``q_offset``: absolute position of q[0] (prefill continuation / decode).
+    ``window`` > 0: sliding-window attention (attend to last ``window`` keys).
+
+    Perf note (EXPERIMENTS.md §Perf, iteration 1): scores/accumulators are
+    computed in a flat [B, H, ...] head-major layout with an explicit "tp"
+    sharding annotation on the head dim.  The original [B, K, G, ...]
+    grouped layout left the score tensors replicated across the model axis
+    (K < tp for GQA), which dominated the memory roofline term and forced
+    per-chunk KV re-gathers inside the scan.  KV heads are broadcast to the
+    q-head grid up front (k/v are small; the one-time broadcast replaces
+    3584 in-loop gathers on the qwen3 train cell).
+    """
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(D)
+
+    # head-major q: [B, H, Sq, D], sharded over tp
+    qh = q.transpose(0, 2, 1, 3).astype(jnp.float32)
+    qh = shard(qh, "batch", "tp", None, None)
+    # broadcast kv heads to q heads once: [B, K, Skv, D] -> [B, H, Skv, D]
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1)
+    kh = shard(kh, "batch", "tp", None, None)
+    vh = shard(vh, "batch", "tp", None, None)
+
+    Skv = k.shape[1]
+    n_chunks = max(1, math.ceil(Skv / kv_chunk))
+    pad = n_chunks * kv_chunk - Skv
+    if pad:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kc = kh.reshape(B, H, n_chunks, kv_chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = vh.reshape(B, H, n_chunks, kv_chunk, D).transpose(2, 0, 1, 3, 4)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inputs):
+        acc, m, l = carry
+        ci, (kb, vb) = inputs
+        kv_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum(
+            "bhsd,bhtd->bhst", qh, kb.astype(jnp.float32)
+        ) * scale  # [B,H,Sq,C]
+        s = shard(s, "batch", "tp", None, None)
+        mask = jnp.broadcast_to(kv_pos[None, :] < Skv, (Sq, kv_chunk))
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(pexp, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhst,bhtd->bhsd", pexp, vb.astype(jnp.float32)
+        )
+        acc_new = shard(acc_new, "batch", "tp", None, None)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = shard(jnp.zeros((B, H, Sq, D), jnp.float32),
+                 "batch", "tp", None, None)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (jnp.arange(n_chunks), (kc, vc))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 2, 1, 3)  # [B, Sq, H, D]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    index: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """One-token attention vs a [B,T,K,D] cache, valid positions <= index.
+
+    For a rolling-window cache (window > 0) the cache holds the last
+    ``window`` keys at slots pos % window; all written slots are valid.
+    """
+    B, Sq, H, D = q.shape
+    K = k_cache.shape[2]
+    T = k_cache.shape[1]
+    qg = _group(q, K).astype(jnp.float32)
+    s = jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k_cache.astype(jnp.float32)
+    ) / math.sqrt(D)
+    slot = jnp.arange(T)
+    if window > 0:
+        n_written = jnp.minimum(index + 1, T)
+        valid = slot < n_written
+    else:
+        valid = slot <= index
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bkgsd", p, v_cache.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def _seq_sharded_body(q, k, v, index, T, *, window: int = 0):
+    """shard_map body: local-shape partial-softmax attention + psum combine.
+
+    q [Bl,Sq,H,D]; k/v [Bl,T_local,K,D] (the model-axis shard of the cache).
+    """
+    Bl, Sq, H, D = q.shape
+    Kl = k.shape[2]
+    T_local = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    ax = jax.lax.axis_index("model")
+    qg = _group(q, Kl).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32)) * scale
+    slot = ax * T_local + jnp.arange(T_local)
+    if window > 0:
+        n_written = jnp.minimum(index + 1, T)
+        valid = slot < n_written
+    else:
+        valid = slot <= index
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    m_loc = jnp.max(s, axis=-1)  # [B,K,G,Sq]
+    p = jnp.exp(s - m_loc[..., None])
+    l_loc = jnp.sum(p, axis=-1)
+    o_loc = jnp.einsum("bkgst,btkd->bkgsd", p, v.astype(jnp.float32))
+    m = jax.lax.pmax(m_loc, "model")
+    corr = jnp.where(m_loc > NEG_INF / 2, jnp.exp(m_loc - m), 0.0)
+    l = jax.lax.psum(l_loc * corr, "model")
+    o = jax.lax.psum(o_loc * corr[..., None], "model")
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(Bl, Sq, H, D)
+
+
+def seq_sharded_decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    index: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Sequence-parallel decode: KV cache seq dim sharded over ``model``.
+
+    Each device computes partial attention over its KV shard; the partial
+    softmax statistics (max, sum-exp) and weighted values are combined with a
+    psum over the model axis (2-pass flash combine).  Falls back to
+    ``decode_attention`` without a mesh.
+    """
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return decode_attention(q, k_cache, v_cache, index, window=window)
+
+    rules = current_rules()
+    # caches are sharded over the kv_batch logical axis (decode rules may
+    # replicate activations while caches stay batch-sharded)
+    bspec = rules.resolve(("kv_batch",), mesh)
+    batch_axes = bspec[0] if len(bspec) else None
+    if batch_axes is not None:
+        names = (batch_axes,) if isinstance(batch_axes, str) else batch_axes
+        bsize = 1
+        for a in names:
+            bsize *= mesh.shape[a]
+        if q.shape[0] % bsize:  # e.g. long_500k: global_batch=1
+            batch_axes = None
+    if k_cache.shape[1] % mesh.shape["model"]:
+        return decode_attention(q, k_cache, v_cache, index, window=window)
+    q_spec = P(batch_axes, None, None, None)
+    kv_spec = P(batch_axes, "model", None, None)
+
+    T = k_cache.shape[1]
+
+    def body(q, k, v, index):
+        return _seq_sharded_body(q, k, v, index, T, window=window)
+
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, P()),
+        out_specs=q_spec,
+        check_vma=False,
+    )
+    return fn(q, k_cache, v_cache, index).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- caches
+
+
+def cache_defs(
+    cfg: ModelConfig, batch: int, max_seq: int, n_layers: int
+) -> dict:
+    """Stacked [L, B, T, K, D] KV cache defs for scanned attention layers.
+
+    ``cfg.kv_cache_dtype == "int8"`` stores symmetric per-(token, head)
+    quantized keys/values with fp32 scales — half the HBM of bf16 (scales
+    are D x smaller), dequantized on read inside the attention math.
+    """
+    T = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    seq_axis = "sp" if cfg.decode_seq_shard and not cfg.sliding_window else None
+    shape = (n_layers, batch, T, cfg.num_kv_heads, cfg.head_dim)
+    axes = (None, "kv_batch", seq_axis, None, None)
+    if cfg.kv_cache_dtype == "int8":
+        sshape = shape[:-1]
+        saxes = axes[:-1]
+        return {
+            "k": ParamDef(shape, jnp.int8, axes, "zeros"),
+            "v": ParamDef(shape, jnp.int8, axes, "zeros"),
+            "k_scale": ParamDef(sshape, jnp.float32, saxes, "zeros"),
+            "v_scale": ParamDef(sshape, jnp.float32, saxes, "zeros"),
+        }
+    return {
+        "k": ParamDef(shape, jnp.bfloat16, axes, "zeros"),
+        "v": ParamDef(shape, jnp.bfloat16, axes, "zeros"),
+    }
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """[B,S,K,D] -> (int8 [B,S,K,D], scale f32 [B,S,K]) symmetric/head-vec."""
+    x = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def cache_update(
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    index: jax.Array,
+    *,
+    window: int = 0,
+):
+    """Write k,v [B,S,K,D] into [B,T,K,D] caches at position ``index``."""
+    T = cache_k.shape[1]
+    if window > 0:
+        pos = index % T
+    else:
+        pos = index
+    B = cache_k.shape[0]
+    k = k.astype(cache_k.dtype)
+    v = v.astype(cache_v.dtype)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, pos, 0, 0))
+    return cache_k, cache_v
+
+
+def cache_update_tree(
+    kv: dict,
+    k: jax.Array,
+    v: jax.Array,
+    index: jax.Array,
+    *,
+    window: int = 0,
+) -> dict:
+    """Dict-cache update; quantizes on write for int8 caches."""
+    T = kv["k"].shape[1]
+    pos = index % T if window > 0 else index
+    if "k_scale" in kv:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return {
+            "k": jax.lax.dynamic_update_slice(kv["k"], kq, (0, pos, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(kv["v"], vq, (0, pos, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(
+                kv["k_scale"], ks, (0, pos, 0)
+            ),
+            "v_scale": jax.lax.dynamic_update_slice(
+                kv["v_scale"], vs, (0, pos, 0)
+            ),
+        }
+    ck, cv = cache_update(kv["k"], kv["v"], k, v, index, window=window)
+    return {"k": ck, "v": cv}
+
+
+def _materialize_kv(kv: dict) -> tuple[jax.Array, jax.Array]:
+    if "k_scale" in kv:
+        return (
+            dequantize_kv(kv["k"], kv["k_scale"]),
+            dequantize_kv(kv["v"], kv["v_scale"]),
+        )
+    return kv["k"], kv["v"]
+
+
+def decode_attention_tree(q, kv: dict, index, *, window: int = 0):
+    kc, vc = _materialize_kv(kv)
+    return decode_attention(q, kc, vc, index, window=window)
+
+
+def seq_sharded_decode_attention_tree(q, kv: dict, index):
+    """Sequence-parallel decode over a (possibly int8) dict cache.
+
+    int8 path: dequantize INSIDE the shard_map body so only the int8 bytes
+    (+ D x smaller scales) cross HBM; the fp32 view lives per-shard."""
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return decode_attention_tree(q, kv, index)
+    if "k_scale" not in kv:
+        return seq_sharded_decode_attention(q, kv["k"], kv["v"], index)
+    if kv["k"].shape[1] % mesh.shape["model"]:
+        return decode_attention_tree(q, kv, index)
+
+    rules = current_rules()
+    bspec = rules.resolve(("kv_batch",), mesh)
+    batch_axes = bspec[0] if len(bspec) else None
+    if batch_axes is not None:
+        names = (batch_axes,) if isinstance(batch_axes, str) else batch_axes
+        bsize = 1
+        for a in names:
+            bsize *= mesh.shape[a]
+        if q.shape[0] % bsize:
+            batch_axes = None
+    T = kv["k"].shape[1]
+
+    def body(q, kq, ks, vq, vs, index):
+        k = dequantize_kv(kq, ks)
+        v = dequantize_kv(vq, vs)
+        return _seq_sharded_body(q, k, v, index, T, window=0)
+
+    q_spec = P(batch_axes, None, None, None)
+    kv_spec = P(batch_axes, "model", None, None)
+    s_spec = P(batch_axes, "model", None)
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(q_spec, kv_spec, s_spec, kv_spec, s_spec, P()),
+        out_specs=q_spec,
+        check_vma=False,
+    )
+    return fn(q, kv["k"], kv["k_scale"], kv["v"], kv["v_scale"], index
+              ).astype(q.dtype)

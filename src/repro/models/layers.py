@@ -1,0 +1,143 @@
+"""Core layer primitives: norms, RoPE, MLPs, embeddings.
+
+All layers are (defs, apply) pairs over ParamDef pytrees -- see
+repro.common.pytree.  Logical sharding axes are declared on every parameter;
+activations are annotated with repro.dist.sharding.shard().
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import ParamDef
+from repro.dist.sharding import shard
+
+
+def stack_defs(defs: Any, n: int) -> Any:
+    """Add a leading scan/stack dim of size ``n`` to every ParamDef."""
+
+    def one(d: ParamDef) -> ParamDef:
+        axes = d.axes if d.axes else (None,) * len(d.shape)
+        return ParamDef(
+            shape=(n,) + tuple(d.shape),
+            dtype=d.dtype,
+            axes=(None,) + tuple(axes),
+            init=d.init,
+            init_scale=d.init_scale,
+        )
+
+    return jax.tree.map(one, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------- norms
+
+
+def rmsnorm_defs(d: int) -> dict:
+    return {"scale": ParamDef((d,), jnp.float32, (None,), init="ones")}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"]).astype(dtype)
+
+
+def layernorm_defs(d: int) -> dict:
+    return {
+        "scale": ParamDef((d,), jnp.float32, (None,), init="ones"),
+        "bias": ParamDef((d,), jnp.float32, (None,), init="zeros"),
+    }
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"] + p["bias"]).astype(dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def mlp_defs(d: int, d_ff: int, act: str) -> dict:
+    if act == "silu":  # SwiGLU: gate + up + down
+        return {
+            "wg": ParamDef((d, d_ff), jnp.bfloat16, ("fsdp", "tp"), "scaled"),
+            "wu": ParamDef((d, d_ff), jnp.bfloat16, ("fsdp", "tp"), "scaled"),
+            "wd": ParamDef((d_ff, d), jnp.bfloat16, ("tp", "fsdp"), "scaled"),
+        }
+    # plain 2-proj (gelu)
+    return {
+        "wi": ParamDef((d, d_ff), jnp.bfloat16, ("fsdp", "tp"), "scaled"),
+        "bi": ParamDef((d_ff,), jnp.float32, ("tp",), "zeros"),
+        "wd": ParamDef((d_ff, d), jnp.bfloat16, ("tp", "fsdp"), "scaled"),
+        "bd": ParamDef((d,), jnp.float32, (None,), "zeros"),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+        h = shard(h, "batch", "sp", "tp")
+        return h @ p["wd"]
+    h = jax.nn.gelu((x @ p["wi"]) + p["bi"].astype(x.dtype))
+    h = shard(h, "batch", "sp", "tp")
+    return (h @ p["wd"]) + p["bd"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embeddings
+
+
+def embedding_defs(vocab: int, d: int, tie: bool) -> dict:
+    out = {
+        # d_model sharded over tp => token gather is collective-free.
+        "table": ParamDef((vocab, d), jnp.bfloat16, ("fsdp", "tp"), "normal"),
+    }
+    if not tie:
+        out["unembed"] = ParamDef(
+            (d, vocab), jnp.bfloat16, ("fsdp", "tp"), "scaled"
+        )
+    return out
+
+
+def embed(p: dict, ids: jax.Array) -> jax.Array:
+    x = jnp.take(p["table"], ids, axis=0)
+    return shard(x, "batch", "sp", None)
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    if "unembed" in p:
+        logits = x @ p["unembed"]
+    else:
+        logits = x @ p["table"].T
+    return shard(logits, "batch", "sp", "tp")

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts FFN: GShard-style capacity dispatch with expert
+parallelism over the ``model`` mesh axis.
+
+Tokens are grouped [G, S_g, d]; a dispatch tensor [G, S_g, E, C] routes each
+token to its top-k experts (capacity C per expert per group).  Annotating the
+dispatched tensor [G, E, C, d] with E sharded over ``ep`` makes GSPMD lower
+the routing to all-to-all collectives -- the classic GShard lowering.
+
+Aux losses: Switch-style load-balance loss + router z-loss.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import ParamDef
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": ParamDef((d, E), jnp.float32, ("fsdp", None), "scaled"),
+        "wg": ParamDef((E, d, ff), jnp.bfloat16, ("ep", "fsdp", None), "scaled"),
+        "wu": ParamDef((E, d, ff), jnp.bfloat16, ("ep", "fsdp", None), "scaled"),
+        "wd": ParamDef((E, ff, d), jnp.bfloat16, ("ep", None, "fsdp"), "scaled"),
+    }
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = tokens_per_group * cfg.num_experts_per_tok / cfg.num_experts
+    c = int(math.ceil(c * cfg.capacity_factor))
+    return max(c, 4)
+
+
+def moe_apply(
+    p: dict, x: jax.Array, cfg: ModelConfig, *, group_size: int = 256
+) -> tuple[jax.Array, dict]:
+    """x: [B, S, d] -> (out [B, S, d], aux metrics incl. load-balance loss)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    g = min(group_size, T)
+    G = T // g
+    xg = x.reshape(G, g, d)
+    xg = shard(xg, "moe_group", None, None)
+
+    logits = (xg.astype(jnp.float32)) @ p["router"]  # [G, g, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topk_idx = jax.lax.top_k(probs, k)  # [G, g, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    C = _capacity(g, cfg)
+    # Expert one-hot per routing slot: [G, g, k, E]
+    onehot = jax.nn.one_hot(topk_idx, E, dtype=jnp.float32)
+    # Position of each (token, slot) in its expert queue (priority: slot-major)
+    # flatten (g, k) -> sequential priority
+    flat = onehot.reshape(G, g * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # [G, g*k, E] position if assigned
+    pos = jnp.sum(pos * flat, axis=-1).reshape(G, g, k)  # [G, g, k]
+    expert_idx_pos = pos
+    keep = expert_idx_pos < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # dispatch [G, g, E, C] = sum_k onehot_E * onehot_C
+    pos_oh = jax.nn.one_hot(
+        jnp.where(keep, expert_idx_pos, C), C, dtype=jnp.float32
+    )  # [G, g, k, C] (overflow -> all-zero row)
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot, pos_oh)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", onehot, pos_oh, gate_vals)
+    dispatch = shard(dispatch, "moe_group", None, None, None)
+    combine = shard(combine, "moe_group", None, None, None)
+
+    # route tokens to experts: [G, E, C, d]; E sharded over ep => all-to-all
+    ex_in = jnp.einsum("gsd,gsec->gecd", xg.astype(jnp.float32), dispatch)
+
+    # Decode-time layout (EXPERIMENTS.md §Perf, jamba decode iteration):
+    # with very few token groups (G < data axis) the G dim cannot soak the
+    # data axis, and GSPMD resolves the d-contraction by ALL-GATHERING the
+    # expert weights over data — ~6 GB f32 per MoE layer per token step.
+    # Sharding the tiny activation's d dim over fsdp instead makes the
+    # contraction local (weights stay 2D-sharded); the residual comm is a
+    # ~MB-scale partial-sum all-reduce of h.
+    from repro.dist.sharding import axis_size
+
+    few_groups = G < max(axis_size("fsdp"), 1)
+    if few_groups:
+        ex_in = shard(ex_in.astype(x.dtype), None, "ep", None, "fsdp")
+    else:
+        ex_in = shard(ex_in.astype(x.dtype), "batch", "ep", None, None)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ex_in, p["wg"]))
+    h = h * jnp.einsum("gecd,edf->gecf", ex_in, p["wu"])
+    h = shard(h, *((None, "ep", None, None) if few_groups
+                   else ("batch", "ep", None, None)))
+    ex_out = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+    ex_out = shard(ex_out, *((None, "ep", None, "fsdp") if few_groups
+                             else ("batch", "ep", None, None)))
+
+    out = jnp.einsum(
+        "gecd,gsec->gsd", ex_out.astype(jnp.float32), combine
+    ).astype(x.dtype)
+    out = shard(out, "moe_group", None, None)
+    out = out.reshape(B, S, d)
+    out = shard(out, "batch", "sp", None)
+
+    # Switch load-balance loss: E * sum_e f_e * P_e  (f_e = pre-drop routing
+    # fraction per expert, normalized by k so sum_e f_e == 1)
+    f_e = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1)) / k
+    p_e = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(f_e * p_e)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss, "moe_drop_frac": dropped}
+    return out, aux

@@ -1,0 +1,100 @@
+"""Model registry: parameter trees, input pytrees, FLOP accounting.
+
+The single entry point the rest of the framework uses to talk to the model
+zoo.  Everything is derived from the ModelConfig; no per-arch code outside
+configs/ and the layout function in transformer.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import pytree as pt
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    return tfm.stack_param_defs(cfg)
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    memory_len = _memory_len(cfg, max_seq)
+    return tfm.cache_param_defs(cfg, batch, max_seq, memory_len)
+
+
+def _memory_len(cfg: ModelConfig, seq: int) -> int:
+    if cfg.family == "encdec":
+        return seq
+    if cfg.family == "vlm":
+        return cfg.num_image_tokens
+    return 0
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return pt.param_count(param_defs(cfg))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE experts scaled by k/E)."""
+    defs = param_defs(cfg)
+    total = 0
+
+    def walk(path, d):
+        nonlocal total
+        name = pt.tree_path_str(path)
+        n = d.size
+        if "/ffn/" in name and cfg.num_experts and d.shape[-3:] and len(d.shape) >= 3:
+            # stacked expert weights [P, E, ...] under moe ffn
+            if "router" not in name:
+                n = int(n * cfg.num_experts_per_tok / cfg.num_experts)
+        total += n
+
+    jax.tree_util.tree_map_with_path(walk, defs, is_leaf=pt.is_def)
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6 * N_active * tokens (train) or 2 * N_active * tokens
+    (inference fwd), per the assignment's roofline convention."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def train_batch_defs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    d = {
+        "tokens": pt.ParamDef((B, S), jnp.int32, ("batch", None), "zeros"),
+        "targets": pt.ParamDef((B, S), jnp.int32, ("batch", None), "zeros"),
+    }
+    if cfg.family == "encdec":
+        d["frames"] = pt.ParamDef(
+            (B, S, cfg.d_model), jnp.bfloat16, ("batch", None, None), "normal"
+        )
+    if cfg.family == "vlm":
+        d["image_embeds"] = pt.ParamDef(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16,
+            ("batch", None, None), "normal",
+        )
+    return d
+
+
+def prefill_batch_defs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    d = train_batch_defs(cfg, shape)
+    d.pop("targets")
+    return d
+
+
+def decode_batch_defs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    return {
+        "tokens": pt.ParamDef((B, 1), jnp.int32, ("batch", None), "zeros"),
+    }

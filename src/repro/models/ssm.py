@@ -1,0 +1,158 @@
+"""Mamba (S6) selective-state-space block, chunk-parallel.
+
+Train/prefill uses a chunked scan: ``lax.scan`` over sequence chunks with an
+inner ``associative_scan`` -- O(chunk) memory instead of O(S) for the
+state tensor.  Decode is the single-step recurrence with carried
+(h, conv) state.  The Pallas ``selective_scan`` kernel
+(repro.kernels.selective_scan) implements the same chunked algorithm with
+explicit VMEM tiling for TPU; this module is its XLA twin used by the
+dry-run.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import ParamDef
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return math.ceil(cfg.d_model / 16)
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_d_state
+    R = dt_rank(cfg)
+    return {
+        "in_proj": ParamDef((d, 2 * di), jnp.bfloat16, ("fsdp", "tp"), "scaled"),
+        "conv_w": ParamDef((cfg.ssm_d_conv, di), jnp.bfloat16, (None, "tp"), "scaled"),
+        "conv_b": ParamDef((di,), jnp.float32, ("tp",), "zeros"),
+        "x_proj": ParamDef((di, R + 2 * N), jnp.bfloat16, ("tp", None), "scaled"),
+        "dt_proj": ParamDef((R, di), jnp.bfloat16, (None, "tp"), "scaled"),
+        "dt_bias": ParamDef((di,), jnp.float32, ("tp",), "zeros"),
+        "A_log": ParamDef((di, N), jnp.float32, ("tp", None), "ssm_a"),
+        "D": ParamDef((di,), jnp.float32, ("tp",), "ones"),
+        "norm": ParamDef((di,), jnp.float32, ("tp",), "ones"),
+        "out_proj": ParamDef((di, d), jnp.bfloat16, ("tp", "fsdp"), "scaled"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, prev: jax.Array | None):
+    """Depthwise causal conv1d. x: [B,S,di]; w: [W,di]; prev: [B,W-1,di]."""
+    W = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i] for i in range(W)
+    ) + b.astype(x.dtype)
+    new_prev = xp[:, -(W - 1) :, :] if W > 1 else prev
+    return out, new_prev
+
+
+def _ssm_scan_chunked(
+    deltaA: jax.Array,  # [B,S,di,N]
+    deltaBx: jax.Array,  # [B,S,di,N]
+    C: jax.Array,  # [B,S,N]
+    h0: jax.Array,  # [B,di,N]
+    chunk: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,di], h_final [B,di,N])."""
+    B, S, di, N = deltaA.shape
+    chunk = min(chunk, S)
+    n_chunks = max(1, S // chunk)
+    assert n_chunks * chunk == S, f"S={S} not divisible by chunk={chunk}"
+    dA = deltaA.reshape(B, n_chunks, chunk, di, N).transpose(1, 0, 2, 3, 4)
+    dBx = deltaBx.reshape(B, n_chunks, chunk, di, N).transpose(1, 0, 2, 3, 4)
+    Cc = C.reshape(B, n_chunks, chunk, N).transpose(1, 0, 2, 3)
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a2 * a1, a2 * b1 + b2
+
+    def body(h, inputs):
+        dA_c, dBx_c, C_c = inputs  # [B,chunk,di,N]
+        Acum, Bcum = jax.lax.associative_scan(combine, (dA_c, dBx_c), axis=1)
+        h_t = Acum * h[:, None] + Bcum  # [B,chunk,di,N]
+        y = jnp.einsum("bsdn,bsn->bsd", h_t, C_c)
+        return h_t[:, -1], y
+
+    h_final, ys = jax.lax.scan(body, h0, (dA, dBx, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    return y, h_final
+
+
+def mamba_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state: dict | None = None,
+    return_state: bool = False,
+):
+    """x: [B,S,d].  state = {'h': [B,di,N] f32, 'conv': [B,W-1,di]}."""
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_d_state
+    R = dt_rank(cfg)
+
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, "batch", None, "tp")
+
+    prev = state["conv"] if state is not None else None
+    xin, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"], prev)
+    xin = jax.nn.silu(xin)
+
+    proj = xin @ p["x_proj"]  # [B,S,R+2N]
+    dt, Bm, Cm = jnp.split(proj.astype(jnp.float32), [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        dt @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"]
+    )  # [B,S,di]
+    A = -jnp.exp(p["A_log"])  # [di,N]
+    deltaA = jnp.exp(dt[..., None] * A)  # [B,S,di,N]
+    deltaBx = (
+        dt[..., None] * Bm[:, :, None, :] * xin.astype(jnp.float32)[..., None]
+    )
+
+    h0 = (
+        state["h"]
+        if state is not None
+        else jnp.zeros((B, di, N), jnp.float32)
+    )
+    if S == 1:  # decode fast path: single recurrence step
+        h = deltaA[:, 0] * h0 + deltaBx[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]
+        h_final = h
+    else:
+        y, h_final = _ssm_scan_chunked(deltaA, deltaBx, Cm, h0)
+
+    y = y + p["D"] * xin.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    # jamba-style RMS norm on the gated output
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm"]).astype(x.dtype)
+    out = y @ p["out_proj"]
+    out = shard(out, "batch", "sp", None)
+    if return_state:
+        return out, {"h": h_final, "conv": conv_state}
+    return out
+
+
+def mamba_state_defs(cfg: ModelConfig, batch: int, n_layers: int) -> dict:
+    di, N, W = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_d_conv
+    return {
+        "h": ParamDef(
+            (n_layers, batch, di, N), jnp.float32,
+            (None, "kv_batch", "tp", None), "zeros",
+        ),
+        "conv": ParamDef(
+            (n_layers, batch, W - 1, di), jnp.bfloat16,
+            (None, "kv_batch", None, "tp"), "zeros",
+        ),
+    }

@@ -1,0 +1,387 @@
+"""Model assembly: periods of heterogeneous layer slots, scanned.
+
+Every architecture is a stack of ``n_periods`` identical *periods*; a period
+is a short list of ``Slot``s (mixer kind + optional cross-attention + FFN
+kind).  Parameters for each slot are stacked over the period dim and the
+period is scanned with ``lax.scan`` -- a 72-layer 398B model lowers to the
+HLO of a single period, which is what keeps multi-pod compiles tractable.
+
+Layouts:
+  dense/moe    period = 1 layer                          x num_layers
+  hybrid/jamba period = [mamba*, attn@mid, mamba*] x8    x num_layers/8
+               (MoE FFN every ``moe_period``-th slot)
+  ssm/xlstm    period = [sLSTM, mLSTM x7]                x num_layers/8
+  vlm          period = [cross-attn layer, self x4]      x num_layers/5
+  encdec       encoder stack (bidirectional) + decoder stack (causal+cross)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import ParamDef
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    embed,
+    embedding_defs,
+    mlp_apply,
+    mlp_defs,
+    rmsnorm,
+    rmsnorm_defs,
+    stack_defs,
+    unembed,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Slot:
+    mixer: str  # attn | attn_nc (non-causal) | mamba | mlstm | slstm
+    cross: bool = False
+    gated_cross: bool = False
+    ffn: str = "dense"  # dense | moe | none
+
+
+def decoder_layout(cfg: ModelConfig) -> tuple[int, list[Slot]]:
+    """(n_periods, slots-per-period) for the decoder stack."""
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        ffn = "moe" if cfg.num_experts else "dense"
+        return cfg.num_layers, [Slot("attn", ffn=ffn)]
+    if fam == "hybrid":
+        P = cfg.attn_period
+        assert cfg.num_layers % P == 0
+        slots = []
+        for i in range(P):
+            mixer = "attn" if i == P // 2 else "mamba"
+            ffn = "moe" if (i % cfg.moe_period == cfg.moe_offset) else "dense"
+            slots.append(Slot(mixer, ffn=ffn))
+        return cfg.num_layers // P, slots
+    if fam == "ssm":
+        P = cfg.slstm_period
+        assert cfg.num_layers % P == 0
+        slots = [Slot("slstm" if i == 0 else "mlstm", ffn="none") for i in range(P)]
+        return cfg.num_layers // P, slots
+    if fam == "vlm":
+        P = cfg.cross_attn_period
+        assert cfg.num_layers % P == 0
+        slots = [
+            Slot("attn", cross=(i == 0), gated_cross=True, ffn="dense")
+            for i in range(P)
+        ]
+        return cfg.num_layers // P, slots
+    if fam == "encdec":
+        return cfg.num_decoder_layers, [Slot("attn", cross=True, ffn="dense")]
+    raise ValueError(fam)
+
+
+def encoder_layout(cfg: ModelConfig) -> tuple[int, list[Slot]]:
+    return cfg.num_encoder_layers, [Slot("attn_nc", ffn="dense")]
+
+
+# ---------------------------------------------------------------- defs
+
+
+def _slot_defs(cfg: ModelConfig, slot: Slot) -> dict:
+    d = {"ln1": rmsnorm_defs(cfg.d_model)}
+    if slot.mixer in ("attn", "attn_nc"):
+        d["attn"] = attn.attn_defs(cfg)
+    elif slot.mixer == "mamba":
+        d["mamba"] = ssm_mod.mamba_defs(cfg)
+    elif slot.mixer == "mlstm":
+        d["mlstm"] = xlstm_mod.mlstm_defs(cfg)
+    elif slot.mixer == "slstm":
+        d["slstm"] = xlstm_mod.slstm_defs(cfg)
+    if slot.cross:
+        d["ln_cross"] = rmsnorm_defs(cfg.d_model)
+        d["cross"] = attn.attn_defs(cfg, cross=True, gated=slot.gated_cross)
+    if slot.ffn != "none":
+        d["ln2"] = rmsnorm_defs(cfg.d_model)
+        d["ffn"] = (
+            moe_mod.moe_defs(cfg) if slot.ffn == "moe" else
+            mlp_defs(cfg.d_model, cfg.d_ff, cfg.act)
+        )
+    return d
+
+
+def stack_param_defs(cfg: ModelConfig) -> dict:
+    """Full parameter tree for an architecture."""
+    n_p, slots = decoder_layout(cfg)
+    defs: dict[str, Any] = {
+        "embed": embedding_defs(cfg.vocab_size, cfg.d_model, cfg.tie_embeddings),
+        "final_norm": rmsnorm_defs(cfg.d_model),
+        "decoder": {
+            f"slot{i}": stack_defs(_slot_defs(cfg, s), n_p)
+            for i, s in enumerate(slots)
+        },
+    }
+    if cfg.family == "encdec":
+        n_e, eslots = encoder_layout(cfg)
+        defs["encoder"] = {
+            f"slot{i}": stack_defs(_slot_defs(cfg, s), n_e)
+            for i, s in enumerate(eslots)
+        }
+        defs["enc_norm"] = rmsnorm_defs(cfg.d_model)
+    return defs
+
+
+def cache_param_defs(cfg: ModelConfig, batch: int, max_seq: int, memory_len: int = 0) -> dict:
+    """Decode-cache tree, stacked per slot over periods."""
+    n_p, slots = decoder_layout(cfg)
+    out: dict[str, Any] = {}
+    for i, s in enumerate(slots):
+        c: dict[str, Any] = {}
+        if s.mixer == "attn":
+            c["kv"] = attn.cache_defs(cfg, batch, max_seq, n_p)
+        elif s.mixer == "mamba":
+            c["ssm"] = ssm_mod.mamba_state_defs(cfg, batch, n_p)
+        elif s.mixer == "mlstm":
+            c["mlstm"] = xlstm_mod.mlstm_state_defs(cfg, batch, n_p)
+        elif s.mixer == "slstm":
+            c["slstm"] = xlstm_mod.slstm_state_defs(cfg, batch, n_p)
+        if s.cross:
+            K, Dh = cfg.num_kv_heads, cfg.head_dim
+            c["cross_kv"] = {
+                "k": ParamDef((n_p, batch, memory_len, K, Dh), jnp.bfloat16,
+                              (None, "kv_batch", None, "tp", None), "zeros"),
+                "v": ParamDef((n_p, batch, memory_len, K, Dh), jnp.bfloat16,
+                              (None, "kv_batch", None, "tp", None), "zeros"),
+            }
+        out[f"slot{i}"] = c
+    return out
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _apply_slot(
+    p: dict,
+    slot: Slot,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mode: str,  # train | prefill | decode
+    positions: jax.Array,
+    index: jax.Array | None,
+    cache: dict | None,
+    memory: jax.Array | None,
+) -> tuple[jax.Array, dict, dict]:
+    new_cache: dict = {}
+    aux: dict = {}
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+
+    if slot.mixer in ("attn", "attn_nc"):
+        causal = slot.mixer == "attn"
+        q = attn.project_q(p["attn"], h, cfg, positions)
+        if mode == "decode":
+            k_new, v_new = attn.project_kv(p["attn"], h, cfg, positions)
+            new_kv = attn.cache_update_tree(
+                cache["kv"], k_new, v_new, index, window=cfg.sliding_window,
+            )
+            if cfg.sliding_window or not cfg.decode_seq_shard:
+                o = attn.decode_attention_tree(
+                    q, new_kv, index, window=cfg.sliding_window
+                )
+            else:
+                o = attn.seq_sharded_decode_attention_tree(q, new_kv, index)
+            new_cache["kv"] = new_kv
+        else:
+            k, v = attn.project_kv(p["attn"], h, cfg, positions)
+            o = attn.chunked_attention(
+                q, k, v, causal=causal, window=cfg.sliding_window
+            )
+            if mode == "prefill":
+                T = cache["kv"]["k"].shape[1]
+                kw = k[:, -T:] if k.shape[1] > T else k
+                vw = v[:, -T:] if v.shape[1] > T else v
+                new_cache["kv"] = attn.cache_update_tree(
+                    cache["kv"], kw, vw, jnp.array(0, jnp.int32), window=0,
+                )
+        out = attn.project_out(p["attn"], o, cfg)
+    elif slot.mixer == "mamba":
+        st = cache["ssm"] if mode != "train" else None
+        if mode == "train":
+            out = ssm_mod.mamba_apply(p["mamba"], h, cfg)
+        else:
+            out, st2 = ssm_mod.mamba_apply(
+                p["mamba"], h, cfg, state=st if mode == "decode" else None,
+                return_state=True,
+            )
+            new_cache["ssm"] = st2
+    elif slot.mixer == "mlstm":
+        st = cache["mlstm"] if mode != "train" else None
+        if mode == "train":
+            out = xlstm_mod.mlstm_apply(p["mlstm"], h, cfg)
+        else:
+            out, st2 = xlstm_mod.mlstm_apply(
+                p["mlstm"], h, cfg, state=st if mode == "decode" else None,
+                return_state=True,
+            )
+            new_cache["mlstm"] = st2
+    elif slot.mixer == "slstm":
+        st = cache["slstm"] if mode != "train" else None
+        if mode == "train":
+            out = xlstm_mod.slstm_apply(p["slstm"], h, cfg)
+        else:
+            out, st2 = xlstm_mod.slstm_apply(
+                p["slstm"], h, cfg, state=st if mode == "decode" else None,
+                return_state=True,
+            )
+            new_cache["slstm"] = st2
+    else:
+        raise ValueError(slot.mixer)
+    x = x + out
+    x = shard(x, "batch", "sp", None)
+
+    if slot.cross:
+        hc = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        qc = attn.project_q(p["cross"], hc, cfg, positions=None)
+        if mode == "decode":
+            ck, cv = cache["cross_kv"]["k"], cache["cross_kv"]["v"]
+            new_cache["cross_kv"] = {"k": ck, "v": cv}
+        else:
+            ck, cv = attn.project_kv(p["cross"], memory, cfg, positions=None)
+            if mode == "prefill":
+                new_cache["cross_kv"] = {
+                    "k": ck.astype(jnp.bfloat16), "v": cv.astype(jnp.bfloat16)
+                }
+        oc = attn.chunked_attention(qc, ck, cv, causal=False)
+        x = x + attn.project_out(p["cross"], oc, cfg)
+        x = shard(x, "batch", "sp", None)
+
+    if slot.ffn != "none":
+        hf = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if slot.ffn == "moe":
+            out, aux = moe_mod.moe_apply(p["ffn"], hf, cfg)
+        else:
+            out = mlp_apply(p["ffn"], hf, cfg.act)
+        x = x + out
+        x = shard(x, "batch", "sp", None)
+    return x, new_cache, aux
+
+
+def _run_stack(
+    params: dict,
+    slots: list[Slot],
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    positions: jax.Array,
+    index: jax.Array | None = None,
+    caches: dict | None = None,
+    memory: jax.Array | None = None,
+    remat: bool = False,
+) -> tuple[jax.Array, dict, dict]:
+    """Scan over periods. params/caches: {'slotN': stacked tree}."""
+
+    def period_fn(x, per_params, per_cache, memory):
+        new_caches = {}
+        aux_sum = None
+        for i, slot in enumerate(slots):
+            key = f"slot{i}"
+            x, nc, aux = _apply_slot(
+                per_params[key], slot, x, cfg,
+                mode=mode, positions=positions, index=index,
+                cache=per_cache.get(key) if per_cache else None,
+                memory=memory,
+            )
+            if nc:
+                new_caches[key] = nc
+            if aux:
+                aux_sum = aux if aux_sum is None else jax.tree.map(
+                    jnp.add, aux_sum, aux
+                )
+        return x, new_caches, (aux_sum or {})
+
+    if remat and mode == "train":
+        if cfg.remat_policy == "dots":
+            policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+            period_fn = jax.checkpoint(period_fn, policy=policy)
+        elif cfg.remat_policy == "block":
+            period_fn = jax.checkpoint(period_fn)
+
+    has_moe = any(s.ffn == "moe" for s in slots)
+    aux0 = (
+        {"moe_lb_loss": jnp.zeros((), jnp.float32),
+         "moe_z_loss": jnp.zeros((), jnp.float32),
+         "moe_drop_frac": jnp.zeros((), jnp.float32)}
+        if has_moe else {}
+    )
+
+    def body(carry, per_inputs):
+        x, aux_acc = carry
+        per_params, per_cache = per_inputs
+        x, new_cache, aux = period_fn(x, per_params, per_cache, memory)
+        if aux:
+            aux_acc = jax.tree.map(jnp.add, aux_acc, aux)
+        return (x, aux_acc), new_cache
+
+    cache_xs = caches if caches is not None else {}
+    (x, aux), new_caches = jax.lax.scan(body, (x, aux0), (params, cache_xs))
+    return x, new_caches, aux
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    *,
+    tokens: jax.Array | None = None,  # [B,S] int32 (decoder input ids)
+    inputs_embeds: jax.Array | None = None,  # [B,S,d] (stub frontends)
+    memory_embeds: jax.Array | None = None,  # [B,M,d] enc frames / img patches
+    mode: str = "train",
+    index: jax.Array | None = None,
+    caches: dict | None = None,
+    remat: bool = False,
+    logits_slice_last: bool = False,
+):
+    """Unified forward. Returns (logits, new_caches, aux)."""
+    n_p, slots = decoder_layout(cfg)
+
+    # Activation dtype follows the weights (bf16 compute / fp32 smoke): cast
+    # externally-supplied embeddings so the layer-scan carry dtype is stable.
+    wdtype = jax.tree.leaves(params["embed"])[0].dtype
+    if inputs_embeds is None:
+        x = embed(params["embed"], tokens)
+    else:
+        x = inputs_embeds.astype(wdtype)
+    if memory_embeds is not None:
+        memory_embeds = memory_embeds.astype(wdtype)
+    B, S = x.shape[0], x.shape[1]
+
+    if mode == "decode":
+        positions = index + jnp.arange(S)
+    else:
+        positions = jnp.arange(S)
+
+    memory = None
+    if cfg.family == "encdec" and mode != "decode":
+        n_e, eslots = encoder_layout(cfg)
+        epos = jnp.arange(memory_embeds.shape[1])
+        menc, _, _ = _run_stack(
+            params["encoder"], eslots, memory_embeds, cfg,
+            mode="train", positions=epos, remat=remat,
+        )
+        memory = rmsnorm(params["enc_norm"], menc, cfg.norm_eps)
+    elif cfg.family == "vlm":
+        memory = memory_embeds  # precomputed patch embeddings (stub frontend)
+
+    x, new_caches, aux = _run_stack(
+        params["decoder"], slots, x, cfg,
+        mode=mode, positions=positions, index=index,
+        caches=caches, memory=memory, remat=remat,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if logits_slice_last:
+        x = x[:, -1:]
+    logits = unembed(params["embed"], x)
+    return logits, new_caches, aux

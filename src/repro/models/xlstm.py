@@ -1,0 +1,322 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM (matrix memory, exponential gating) admits a chunk-parallel form:
+within a chunk the output is a gated-attention quadratic form; across chunks
+a stabilized (C, n, m) state is carried.  This keeps the backward-pass
+memory at O(S/L) chunk states instead of O(S) step states -- a naive
+sequential scan of the [B,H,512,512] matrix memory would need terabytes of
+residuals at train_4k (see EXPERIMENTS.md §Perf).
+
+sLSTM has hidden-to-gate recurrence (R matrices) and is inherently
+sequential; xLSTM[7:1] interleaving keeps it off the critical path.
+
+All gate math in fp32 log-space with max-stabilizers (Appendix A of
+arXiv:2405.04517).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import ParamDef
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+
+NEG_INF = -1e30
+
+
+# ================================================================= mLSTM
+
+
+def mlstm_defs(cfg: ModelConfig) -> dict:
+    d, H, Dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    HD = H * Dh
+    return {
+        "wq": ParamDef((d, HD), jnp.bfloat16, ("fsdp", "tp"), "scaled"),
+        "wk": ParamDef((d, HD), jnp.bfloat16, ("fsdp", "tp"), "scaled"),
+        "wv": ParamDef((d, HD), jnp.bfloat16, ("fsdp", "tp"), "scaled"),
+        "wz": ParamDef((d, HD), jnp.bfloat16, ("fsdp", "tp"), "scaled"),
+        "wo": ParamDef((HD, d), jnp.bfloat16, ("tp", "fsdp"), "scaled"),
+        "w_if": ParamDef((d, 2 * H), jnp.float32, ("fsdp", None), "scaled"),
+        "b_if": ParamDef((2 * H,), jnp.float32, (None,), "zeros"),
+        "conv_w": ParamDef((4, HD), jnp.bfloat16, (None, "tp"), "scaled"),
+        "conv_b": ParamDef((HD,), jnp.float32, ("tp",), "zeros"),
+        "hnorm": ParamDef((HD,), jnp.float32, ("tp",), "ones"),
+    }
+
+
+def mlstm_state_defs(cfg: ModelConfig, batch: int, n_layers: int) -> dict:
+    H, Dh = cfg.num_heads, cfg.head_dim
+    HD = H * Dh
+    return {
+        "C": ParamDef(
+            (n_layers, batch, H, Dh, Dh), jnp.float32,
+            (None, "kv_batch", None, None, "tp"), "zeros",
+        ),
+        "n": ParamDef(
+            (n_layers, batch, H, Dh), jnp.float32,
+            (None, "kv_batch", None, "tp"), "zeros",
+        ),
+        "m": ParamDef(
+            (n_layers, batch, H), jnp.float32, (None, "kv_batch", None), "zeros"
+        ),
+        "conv": ParamDef(
+            (n_layers, batch, 3, HD), jnp.bfloat16,
+            (None, "kv_batch", None, "tp"), "zeros",
+        ),
+    }
+
+
+def _mlstm_chunkwise(q, k, v, li, lf, state, chunk: int = 128):
+    """q,k,v: [B,S,H,Dh] (k pre-scaled); li,lf: [B,S,H] log gates.
+
+    state: (C [B,H,Dh,Dh], n [B,H,Dh], m [B,H]).  Returns (h, state').
+    """
+    B, S, H, Dh = q.shape
+    L = min(chunk, S)
+    nc = S // L
+    assert nc * L == S
+
+    def resh(x):
+        return x.reshape(B, nc, L, *x.shape[2:]).transpose(1, 0, 2, *range(3, x.ndim + 1))
+
+    qc, kc, vc = resh(q), resh(k), resh(v)  # [nc,B,L,H,Dh]
+    lic, lfc = resh(li), resh(lf)  # [nc,B,L,H]
+
+    def body(carry, inputs):
+        C0, n0, m0 = carry
+        qb, kb, vb, lib, lfb = inputs
+        qb = qb.astype(jnp.float32).transpose(0, 2, 1, 3)  # [B,H,L,Dh]
+        kb = kb.astype(jnp.float32).transpose(0, 2, 1, 3)
+        vb = vb.astype(jnp.float32).transpose(0, 2, 1, 3)
+        lib = lib.transpose(0, 2, 1)  # [B,H,L]
+        lfb = lfb.transpose(0, 2, 1)
+        b = jnp.cumsum(lfb, axis=-1)  # [B,H,L]
+        bL = b[..., -1:]
+
+        # intra-chunk log weights D[j,s] = b_j - b_s + li_s (s <= j)
+        Dm = b[..., :, None] - b[..., None, :] + lib[..., None, :]
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        Dm = jnp.where(causal, Dm, NEG_INF)
+        m_intra = jnp.max(Dm, axis=-1)  # [B,H,L]
+        m_inter = m0[..., None] + b  # [B,H,L]
+        mj = jnp.maximum(m_inter, m_intra)
+
+        Sqk = jnp.einsum("bhld,bhsd->bhls", qb, kb)  # [B,H,L,L]
+        w = jnp.exp(Dm - mj[..., None])
+        num = jnp.einsum("bhls,bhsd->bhld", w * Sqk, vb)
+        num = num + jnp.exp(m_inter - mj)[..., None] * jnp.einsum(
+            "bhld,bhvd->bhlv", qb, C0
+        )
+        den = jnp.sum(w * Sqk, axis=-1) + jnp.exp(m_inter - mj) * jnp.einsum(
+            "bhld,bhd->bhl", qb, n0
+        )
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-mj))[..., None]
+
+        # cross-chunk state update
+        m_new = jnp.maximum(
+            m0 + bL[..., 0], jnp.max(bL - b + lib, axis=-1)
+        )  # [B,H]
+        wS = jnp.exp(bL - b + lib - m_new[..., None])  # [B,H,L]
+        C_new = jnp.exp(m0 + bL[..., 0] - m_new)[..., None, None] * C0 + jnp.einsum(
+            "bhs,bhsv,bhsk->bhvk", wS, vb, kb
+        )
+        n_new = jnp.exp(m0 + bL[..., 0] - m_new)[..., None] * n0 + jnp.einsum(
+            "bhs,bhsk->bhk", wS, kb
+        )
+        return (C_new, n_new, m_new), h.transpose(0, 2, 1, 3)  # [B,L,H,Dh]
+
+    state, hs = jax.lax.scan(body, state, (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)
+    return h, state
+
+
+def mlstm_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state: dict | None = None,
+    return_state: bool = False,
+):
+    B, S, d = x.shape
+    H, Dh = cfg.num_heads, cfg.head_dim
+
+    # causal conv on the shared q/k path (xLSTM uses a small causal conv
+    # before the q/k projections; we conv the projected source)
+    qk_src = x @ p["wq"]  # [B,S,HD]
+    k_src = x @ p["wk"]
+    W = p["conv_w"].shape[0]
+    prev_c = state["conv"] if state is not None else jnp.zeros((B, W - 1, H * Dh), x.dtype)
+    src = jnp.concatenate([prev_c.astype(x.dtype), qk_src + k_src], axis=1)
+    conv = sum(src[:, i : i + S, :] * p["conv_w"][i] for i in range(W))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+    new_conv = src[:, -(W - 1) :, :]
+
+    q = (qk_src + conv).reshape(B, S, H, Dh)
+    k = ((k_src + conv) / math.sqrt(Dh)).reshape(B, S, H, Dh)
+    v = (x @ p["wv"]).reshape(B, S, H, Dh)
+    gates = x.astype(jnp.float32) @ p["w_if"] + p["b_if"]  # [B,S,2H]
+    li = gates[..., :H]  # input gate (log space, exp activation)
+    lf = jax.nn.log_sigmoid(gates[..., H:])  # forget gate
+
+    if state is not None:
+        st = (state["C"], state["n"], state["m"])
+    else:
+        st = (
+            jnp.zeros((B, H, Dh, Dh), jnp.float32),
+            jnp.zeros((B, H, Dh), jnp.float32),
+            jnp.zeros((B, H), jnp.float32),
+        )
+
+    if S == 1:  # decode: single recurrence step
+        C0, n0, m0 = st
+        qs = q[:, 0].astype(jnp.float32)
+        ks = k[:, 0].astype(jnp.float32)
+        vs = v[:, 0].astype(jnp.float32)
+        lis, lfs = li[:, 0], lf[:, 0]
+        m_new = jnp.maximum(lfs + m0, lis)
+        ip = jnp.exp(lis - m_new)
+        fp = jnp.exp(lfs + m0 - m_new)
+        C_new = fp[..., None, None] * C0 + ip[..., None, None] * (
+            vs[..., :, None] * ks[..., None, :]
+        )
+        n_new = fp[..., None] * n0 + ip[..., None] * ks
+        num = jnp.einsum("bhd,bhvd->bhv", qs, C_new)
+        den = jnp.einsum("bhd,bhd->bh", qs, n_new)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        h = h[:, None]  # [B,1,H,Dh]
+        st = (C_new, n_new, m_new)
+    else:
+        h, st = _mlstm_chunkwise(q, k, v, li, lf, st)
+
+    # per-head norm, output gate, down-projection
+    hf = h.reshape(B, S, H * Dh).astype(jnp.float32)
+    hh = h.astype(jnp.float32)
+    var = jnp.mean(jnp.square(hh), axis=-1, keepdims=True)
+    hn = (hh * jax.lax.rsqrt(var + cfg.norm_eps)).reshape(B, S, H * Dh)
+    hn = (hn * p["hnorm"]).astype(x.dtype)
+    z = jax.nn.silu(x @ p["wz"])
+    out = (hn * z) @ p["wo"]
+    out = shard(out, "batch", "sp", None)
+    if return_state:
+        C_new, n_new, m_new = st
+        return out, {"C": C_new, "n": n_new, "m": m_new, "conv": new_conv.astype(jnp.bfloat16)}
+    return out
+
+
+# ================================================================= sLSTM
+
+
+def slstm_defs(cfg: ModelConfig) -> dict:
+    d, H, Dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    HD = H * Dh
+    return {
+        "w": ParamDef((d, 4, HD), jnp.bfloat16, ("fsdp", None, "tp"), "scaled"),
+        "b": ParamDef((4, HD), jnp.float32, (None, "tp"), "zeros"),
+        # r's OUTPUT Dh dim is tp-sharded: the backward scan all-reduces a
+        # weight-shaped dr cotangent every timestep (unavoidable for an
+        # h-to-gate recurrence under batch sharding); sharding r makes that
+        # per-step reduction 16x smaller (§Perf, xlstm iteration 3).
+        "r": ParamDef((H, Dh, 4, Dh), jnp.bfloat16, (None, None, None, "slstm_r"), "scaled"),
+        "hnorm": ParamDef((HD,), jnp.float32, ("tp",), "ones"),
+        "wo": ParamDef((HD, d), jnp.bfloat16, ("tp", "fsdp"), "scaled"),
+    }
+
+
+def slstm_state_defs(cfg: ModelConfig, batch: int, n_layers: int) -> dict:
+    H, Dh = cfg.num_heads, cfg.head_dim
+    shp = (n_layers, batch, H, Dh)
+    ax = (None, "kv_batch", None, None)
+    return {
+        "c": ParamDef(shp, jnp.float32, ax, "zeros"),
+        "n": ParamDef(shp, jnp.float32, ax, "zeros"),
+        "h": ParamDef(shp, jnp.float32, ax, "zeros"),
+        "m": ParamDef((n_layers, batch, H), jnp.float32, (None, "kv_batch", None), "zeros"),
+    }
+
+
+def slstm_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state: dict | None = None,
+    return_state: bool = False,
+):
+    B, S, d = x.shape
+    H, Dh = cfg.num_heads, cfg.head_dim
+
+    wx = jnp.einsum("bsd,dgh->bsgh", x.astype(jnp.float32), p["w"].astype(jnp.float32))
+    wx = wx + p["b"]  # [B,S,4,HD]
+    wx = wx.reshape(B, S, 4, H, Dh)
+
+    if state is not None:
+        st = (state["c"], state["n"], state["h"], state["m"])
+    else:
+        z = jnp.zeros((B, H, Dh), jnp.float32)
+        st = (z, z, z, jnp.zeros((B, H), jnp.float32))
+
+    r = p["r"].astype(jnp.float32)
+
+    def step(carry, wx_t):
+        c, n, h, m = carry
+        rg = jnp.einsum("bhd,hdgk->bghk", h, r)  # [B,4,H,Dh]
+        g = wx_t.transpose(0, 2, 1, 3) + rg.transpose(0, 2, 1, 3)  # [B,H,4,Dh]
+        i_log = g[:, :, 0]
+        lf = jax.nn.log_sigmoid(g[:, :, 1])
+        zt = jnp.tanh(g[:, :, 2])
+        ot = jax.nn.sigmoid(g[:, :, 3])
+        # per-head scalar stabilizer (max over head dim of gate logits)
+        m_new = jnp.maximum(
+            jnp.max(lf, axis=-1) + m, jnp.max(i_log, axis=-1)
+        )
+        ip = jnp.exp(i_log - m_new[..., None])
+        fp = jnp.exp(lf + (m - m_new)[..., None])
+        c_new = fp * c + ip * zt
+        n_new = fp * n + ip
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    # Chunked sequential scan with a statically-UNROLLED inner segment
+    # (EXPERIMENTS.md §Perf, xlstm iteration): a per-timestep lax.scan makes
+    # XLA (a) re-read the recurrent weight r from HBM every step and (b)
+    # all-reduce the weight-shaped dr gradient across the data axis every
+    # step of the backward scan (S x per layer!).  Unrolling UNROLL steps
+    # inside each scan iteration keeps r live across the segment and lets
+    # the dr partial sums accumulate locally, cutting both weight traffic
+    # and collective count by UNROLL x.  Semantics identical (pure unroll).
+    # Train-only: the unroll pays for the BACKWARD scan (dr reductions);
+    # forward-only prefill regresses under it (more live intermediates per
+    # scan iteration -- observed on the prefill_32k dry-run cell).
+    UNROLL = 16
+    if (not return_state) and S % UNROLL == 0 and S > UNROLL:
+        wxc = wx.transpose(1, 0, 2, 3, 4).reshape(
+            S // UNROLL, UNROLL, B, 4, H, Dh
+        )
+
+        def chunk_step(carry, wx_chunk):
+            hs_u = []
+            for t in range(UNROLL):
+                carry, h_t = step(carry, wx_chunk[t])
+                hs_u.append(h_t)
+            return carry, jnp.stack(hs_u)
+
+        (c, n, h, m), hs = jax.lax.scan(chunk_step, st, wxc)
+        hs = hs.reshape(S, B, H, Dh)
+    else:
+        (c, n, h, m), hs = jax.lax.scan(
+            step, st, wx.transpose(1, 0, 2, 3, 4)
+        )  # hs: [S,B,H,Dh]
+    hseq = hs.transpose(1, 0, 2, 3)
+
+    var = jnp.mean(jnp.square(hseq), axis=-1, keepdims=True)
+    hn = (hseq * jax.lax.rsqrt(var + cfg.norm_eps)).reshape(B, S, H * Dh)
+    out = (hn * p["hnorm"]).astype(x.dtype) @ p["wo"]
+    out = shard(out, "batch", "sp", None)
+    if return_state:
+        return out, {"c": c, "n": n, "h": h, "m": m}
+    return out

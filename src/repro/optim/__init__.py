@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    adafactor,
+    get_optimizer,
+    opt_state_defs,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.schedule import warmup_cosine

@@ -1,0 +1,168 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor.
+
+Both expose ``state_defs(param_defs)`` so the dry-run can build abstract
+optimizer state for a 398B model without allocating it.  Adafactor's
+factored second moment is what makes 398B trainable on a single 256-chip
+pod (AdamW fp32 m+v would need ~21.8 GB/chip; see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import ParamDef, is_def
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable  # params -> opt_state
+    update: Callable  # (grads, state, params, lr, step) -> (new_params, new_state)
+    state_defs: Callable  # param_defs -> opt_state defs
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)
+    ]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ----------------------------------------------------------------- AdamW
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(f32, params), "v": jax.tree.map(f32, params)}
+
+    def state_defs(defs):
+        f32 = lambda d: ParamDef(d.shape, jnp.float32, d.axes, "zeros")
+        return {
+            "m": jax.tree.map(f32, defs, is_leaf=is_def),
+            "v": jax.tree.map(f32, defs, is_leaf=is_def),
+        }
+
+    def update(grads, state, params, lr, step):
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def leaf(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            upd = mh / (jnp.sqrt(vh) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return new_p, m, v
+
+        out = jax.tree.map(leaf, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer("adamw", init, update, state_defs)
+
+
+# -------------------------------------------------------------- Adafactor
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(eps=1e-30, clip_threshold=1.0, decay_pow=0.8, min_scale=1e-3) -> Optimizer:
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(leaf, params)}
+
+    def state_defs(defs):
+        def leaf(d: ParamDef):
+            ax = d.axes if d.axes else (None,) * len(d.shape)
+            if _factored(d.shape):
+                return {
+                    "vr": ParamDef(d.shape[:-1], jnp.float32, ax[:-1], "zeros"),
+                    "vc": ParamDef(
+                        d.shape[:-2] + d.shape[-1:], jnp.float32,
+                        ax[:-2] + ax[-1:], "zeros",
+                    ),
+                }
+            return {"v": ParamDef(d.shape, jnp.float32, ax, "zeros")}
+
+        return {"f": jax.tree.map(leaf, defs, is_leaf=is_def)}
+
+    def update(grads, state, params, lr, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-decay_pow)
+
+        def leaf(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(g.shape):
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                vhat = v
+                new_s = {"v": v}
+            upd = g * jax.lax.rsqrt(vhat + eps)
+            # update clipping by RMS
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(upd)) + eps)
+            upd = upd / jnp.maximum(1.0, rms_u / clip_threshold)
+            # relative step size
+            p32 = p.astype(jnp.float32)
+            scale = jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(p32))), min_scale)
+            new_p = (p32 - lr * scale * upd).astype(p.dtype)
+            return new_p, new_s
+
+        flat_out = jax.tree.map(
+            leaf, grads, state["f"], params,
+            is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x),
+        )
+        # flat_out leaves are tuples aligned with grads structure
+        new_params = jax.tree.map(
+            lambda o: o[0], flat_out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        new_state = jax.tree.map(
+            lambda o: o[1], flat_out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return new_params, {"f": new_state}
+
+    return Optimizer("adafactor", init, update, state_defs)
+
+
+def get_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return adamw()
+    if name == "adafactor":
+        return adafactor()
+    raise ValueError(name)
+
+
+def opt_state_defs(name: str, param_defs) -> Any:
+    return get_optimizer(name).state_defs(param_defs)

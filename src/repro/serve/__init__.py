@@ -1,0 +1,7 @@
+from repro.serve.steps import (
+    make_prefill_step,
+    make_decode_step,
+    serve_cache_defs,
+    init_cache,
+)
+from repro.serve.engine import ServeEngine, Request

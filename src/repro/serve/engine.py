@@ -1,0 +1,101 @@
+"""Minimal batched serving engine (continuous-batching-lite).
+
+Maintains a fixed-size slot table; new requests are prefilled into free
+slots, all active slots decode in lockstep.  On CPU this drives the
+example end-to-end serving driver; on TPU the same engine wraps the jitted
+prefill/decode steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve.steps import init_cache, make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_seq: int = 128):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.batch = batch_slots
+        self.prefill = jax.jit(make_prefill_step(cfg))
+        self.decode = jax.jit(make_decode_step(cfg))
+        self.cache = init_cache(cfg, batch_slots, max_seq)
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}
+        self.index = 0
+        self.tokens_out = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        # lockstep engine: admit up to `batch` requests with equal prompt len
+        while self.queue and len(self.active) < self.batch:
+            req = self.queue.pop(0)
+            self.active[req.rid] = req
+
+    def run(self, max_steps: int = 64) -> dict:
+        """Serve queued requests; returns stats."""
+        t0 = time.perf_counter()
+        served = []
+        while (self.queue or self.active) and max_steps > 0:
+            self._admit()
+            reqs = list(self.active.values())
+            S = max(len(r.prompt) for r in reqs)
+            toks = np.zeros((self.batch, S), np.int32)
+            for i, r in enumerate(reqs):
+                toks[i, S - len(r.prompt):] = r.prompt  # left-pad
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.cfg.family == "vlm":
+                batch["image_embeds"] = jnp.zeros(
+                    (self.batch, self.cfg.num_image_tokens, self.cfg.d_model),
+                    jnp.bfloat16,
+                )
+            if self.cfg.family == "encdec":
+                batch["frames"] = jnp.zeros(
+                    (self.batch, S, self.cfg.d_model), jnp.bfloat16
+                )
+            next_tok, self.cache = self.prefill(self.params, self.cache, batch)
+            index = jnp.array(S, jnp.int32)
+            cur = next_tok
+            n_new = max(r.max_new_tokens for r in reqs)
+            for step in range(min(n_new, max_steps)):
+                for i, r in enumerate(reqs):
+                    if len(r.out) < r.max_new_tokens:
+                        r.out.append(int(cur[i]))
+                        self.tokens_out += 1
+                cur, self.cache = self.decode(
+                    self.params, self.cache, cur[:, None], index
+                )
+                index = index + 1
+                max_steps -= 1
+            for r in reqs:
+                r.done = True
+                served.append(r)
+            self.active.clear()
+        dt = time.perf_counter() - t0
+        return {
+            "requests": len(served),
+            "tokens": self.tokens_out,
+            "wall_s": dt,
+            "tok_per_s": self.tokens_out / max(dt, 1e-9),
+        }

@@ -1,0 +1,57 @@
+"""Serving steps: prefill (builds caches) and single-token decode.
+
+decode_step is what the decode_* / long_* dry-run cells lower: one new token
+against a KV cache of seq_len, with the cache seq dim sharded over the
+``model`` axis (sequence-parallel decode; see models/attention.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import pytree as pt
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.models.transformer import forward
+
+
+def serve_cache_defs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    return registry.cache_defs(cfg, batch, max_seq)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    defs = serve_cache_defs(cfg, batch, max_seq)
+    return jax.tree.map(
+        lambda d: jnp.zeros(d.shape, d.dtype), defs, is_leaf=pt.is_def
+    )
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, cache, batch):
+        kwargs = {}
+        if cfg.family == "encdec":
+            kwargs["memory_embeds"] = batch["frames"]
+        if cfg.family == "vlm":
+            kwargs["memory_embeds"] = batch["image_embeds"]
+        logits, new_cache, _ = forward(
+            params, cfg, tokens=batch["tokens"], mode="prefill",
+            caches=cache, logits_slice_last=True, **kwargs,
+        )
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, tokens, index):
+        """tokens [B,1]; index: scalar position of the new token."""
+        logits, new_cache, _ = forward(
+            params, cfg, tokens=tokens, mode="decode", index=index,
+            caches=cache, logits_slice_last=True,
+        )
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    return decode_step

@@ -1,0 +1,7 @@
+from repro.train.losses import cross_entropy, total_loss
+from repro.train.step import (
+    TrainSettings,
+    make_train_step,
+    train_state_defs,
+    init_train_state,
+)

@@ -1,0 +1,37 @@
+"""Losses: masked cross-entropy (fp32 logsumexp), z-loss, MoE aux blend."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MOE_LB_WEIGHT = 0.01
+MOE_Z_WEIGHT = 0.001
+Z_LOSS_WEIGHT = 1e-4
+IGNORE = -1
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array):
+    """logits [B,S,V], targets [B,S] (IGNORE = masked). Returns (ce, z, acc)."""
+    logits = logits.astype(jnp.float32)
+    mask = (targets != IGNORE).astype(jnp.float32)
+    tgt = jnp.maximum(targets, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true_logit = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    ce = (lse - true_logit) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    z = jnp.sum(jnp.square(lse) * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == tgt) * mask) / denom
+    return jnp.sum(ce) / denom, z, acc
+
+
+def total_loss(logits, targets, aux: dict):
+    ce, z, acc = cross_entropy(logits, targets)
+    loss = ce + Z_LOSS_WEIGHT * z
+    metrics = {"ce": ce, "z_loss": z, "accuracy": acc}
+    if "moe_lb_loss" in aux:
+        loss = loss + MOE_LB_WEIGHT * aux["moe_lb_loss"]
+        loss = loss + MOE_Z_WEIGHT * aux["moe_z_loss"]
+        metrics.update(aux)
+    metrics["loss"] = loss
+    return loss, metrics

@@ -1,0 +1,160 @@
+"""Training step: microbatched grad accumulation, clipping, optimizer update.
+
+``train_state_defs`` gives the abstract state tree (params + optimizer
+moments + step) used by the multi-pod dry-run; ``make_train_step`` builds the
+jittable step used by both the dry-run (.lower().compile()) and the real CPU
+training examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import pytree as pt
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.models.transformer import forward
+from repro.optim import clip_by_global_norm, get_optimizer, warmup_cosine
+from repro.train.losses import total_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    microbatches: int = 1
+    max_grad_norm: float = 1.0
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    remat: bool = True
+
+
+def _master_defs(defs, cfg: ModelConfig):
+    """Canonical training params (master weights): fp32 by default, bf16 for
+    398B-scale configs (cfg.master_dtype); compute casts matmul weights to
+    bf16 inside the step (cast-before-gather keeps FSDP all-gathers at
+    2 bytes)."""
+    dtype = jnp.dtype(cfg.master_dtype)
+    return jax.tree.map(
+        lambda d: pt.ParamDef(d.shape, dtype, d.axes, d.init, d.init_scale),
+        defs, is_leaf=pt.is_def,
+    )
+
+
+def _fp32_defs(defs):  # backwards-compat alias used by tests
+    return jax.tree.map(
+        lambda d: pt.ParamDef(d.shape, jnp.float32, d.axes, d.init, d.init_scale),
+        defs, is_leaf=pt.is_def,
+    )
+
+
+def train_state_defs(cfg: ModelConfig) -> dict:
+    pdefs = _master_defs(registry.param_defs(cfg), cfg)
+    opt = get_optimizer(cfg.optimizer)
+    return {
+        "params": pdefs,
+        "opt": opt.state_defs(pdefs),
+        "step": pt.ParamDef((), jnp.int32, (), "zeros"),
+    }
+
+
+def init_train_state(cfg: ModelConfig, key) -> dict:
+    pdefs = _master_defs(registry.param_defs(cfg), cfg)
+    params = pt.materialize(pdefs, key)
+    opt = get_optimizer(cfg.optimizer)
+    return {
+        "params": params,
+        "opt": opt.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def cast_for_compute(params):
+    """fp32 master -> bf16 compute for rank>=2 weights; 1D scales stay fp32."""
+    def leaf(x):
+        if jnp.issubdtype(x.dtype, jnp.floating) and x.ndim >= 2:
+            return x.astype(jnp.bfloat16)
+        return x
+
+    return jax.tree.map(leaf, params)
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    """[B, ...] -> [n, B/n, ...] with the batch shard pinned to dim 1.
+
+    Without the explicit constraint GSPMD may propagate the batch sharding
+    to the *microbatch* dim of the reshape, which replicates every
+    microbatch slice on all data ranks (a 16x activation-memory blowup
+    observed on the 398B dry-run; see EXPERIMENTS.md §Dry-run).
+    """
+    from repro.dist.sharding import shard
+
+    def f(x):
+        B = x.shape[0]
+        x = x.reshape(n, B // n, *x.shape[1:])
+        return shard(x, None, "batch", *([None] * (x.ndim - 2)))
+
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(cfg: ModelConfig, settings: TrainSettings = TrainSettings()):
+    opt = get_optimizer(cfg.optimizer)
+
+    def loss_fn(params, mb):
+        kwargs = {}
+        if cfg.family == "encdec":
+            kwargs["memory_embeds"] = mb["frames"]
+        if cfg.family == "vlm":
+            kwargs["memory_embeds"] = mb["image_embeds"]
+        logits, _, aux = forward(
+            cast_for_compute(params), cfg, tokens=mb["tokens"], mode="train",
+            remat=settings.remat, **kwargs,
+        )
+        return total_loss(logits, mb["targets"], aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        n = settings.microbatches
+        if n == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = _split_micro(batch, n)
+
+            def acc_body(g_acc, mb):
+                (_, m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return g_acc, m
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, ms = jax.lax.scan(acc_body, g0, micro)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), ms)
+
+        grads, gnorm = clip_by_global_norm(grads, settings.max_grad_norm)
+        lr = warmup_cosine(
+            state["step"], peak_lr=settings.peak_lr,
+            warmup=settings.warmup, total=settings.total_steps,
+        )
+        new_params, new_opt = opt.update(
+            grads, state["opt"], params, lr, state["step"]
+        )
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see 1 CPU device; only launch/dryrun.py forces 512."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def ad_data():
+    from repro.data import netdata
+
+    return netdata.make_ad_dataset(features=7, n_train=2048, n_test=1024)
+
+
+@pytest.fixture(scope="session")
+def tc_data():
+    from repro.data import netdata
+
+    return netdata.make_tc_dataset(n_train=2048, n_test=1024)

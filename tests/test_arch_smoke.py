@@ -1,0 +1,159 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Every assigned arch instantiates its REDUCED config and runs one train step
+and a prefill+decode round-trip on CPU, asserting output shapes and no NaNs.
+The FULL configs are exercised only via the dry-run (no allocation).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (
+    SHAPES, applicable_shapes, get_config, get_smoke_config, list_archs,
+)
+from repro.models import registry
+from repro.serve.steps import init_cache, make_decode_step, make_prefill_step
+from repro.train.step import (
+    TrainSettings, cast_for_compute, init_train_state, make_train_step,
+)
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, B, S):
+    b = {
+        "tokens": jnp.zeros((B, S), jnp.int32),
+        "targets": jnp.zeros((B, S), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        b["frames"] = jnp.zeros((B, S, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        b["image_embeds"] = jnp.zeros(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return b
+
+
+def test_all_archs_assigned():
+    assert len(ARCHS) == 10
+    expected = {
+        "jamba-1.5-large-398b", "moonshot-v1-16b-a3b", "mixtral-8x7b",
+        "seamless-m4t-large-v2", "qwen3-1.7b", "qwen1.5-32b",
+        "starcoder2-15b", "qwen2-7b", "llama-3.2-vision-11b", "xlstm-1.3b",
+    }
+    assert set(ARCHS) == expected
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, TrainSettings(remat=True)))
+    B, S = 2, 32
+    state, m = step(state, _batch(cfg, B, S))
+    loss = float(m["loss"])
+    assert np.isfinite(loss) and loss > 0
+    assert np.isfinite(float(m["grad_norm"]))
+    assert int(state["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    params = cast_for_compute(state["params"])
+    B, S = 2, 32
+    cache = init_cache(cfg, B, S)
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+    batch = _batch(cfg, B, S)
+    batch.pop("targets")
+    tok, cache = prefill(params, cache, batch)
+    assert tok.shape == (B,) and tok.dtype == jnp.int32
+    for i in range(3):
+        tok, cache = decode(
+            params, cache, tok[:, None], jnp.array(S + i, jnp.int32)
+        )
+        assert tok.shape == (B,)
+        assert np.all(np.asarray(tok) >= 0)
+        assert np.all(np.asarray(tok) < cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_exact_values(arch):
+    """The FULL config matches the assignment table exactly."""
+    table = {
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    }
+    cfg = get_config(arch)
+    L, d, H, K, ff, V = table[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == K
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+
+
+def test_moe_configs():
+    jamba = get_config("jamba-1.5-large-398b")
+    assert (jamba.num_experts, jamba.num_experts_per_tok) == (16, 2)
+    moonshot = get_config("moonshot-v1-16b-a3b")
+    assert (moonshot.num_experts, moonshot.num_experts_per_tok) == (64, 6)
+    mixtral = get_config("mixtral-8x7b")
+    assert (mixtral.num_experts, mixtral.num_experts_per_tok) == (8, 2)
+
+
+def test_shape_applicability_rules():
+    """long_500k only for sub-quadratic archs (SSM/hybrid/SWA)."""
+    runs_long = {
+        a for a in ARCHS if "long_500k" in applicable_shapes(get_config(a))
+    }
+    assert runs_long == {"jamba-1.5-large-398b", "xlstm-1.3b", "mixtral-8x7b"}
+    # every arch decodes (no encoder-only arch assigned)
+    for a in ARCHS:
+        assert "decode_32k" in applicable_shapes(get_config(a))
+
+
+def test_param_counts_in_published_ballpark():
+    """Total params within a sane band of the published sizes."""
+    expect = {
+        "jamba-1.5-large-398b": (300e9, 500e9),
+        "mixtral-8x7b": (40e9, 56e9),
+        "qwen3-1.7b": (1.2e9, 2.6e9),
+        "qwen2-7b": (6e9, 9e9),
+        "starcoder2-15b": (12e9, 18e9),
+        "qwen1.5-32b": (28e9, 38e9),
+        "xlstm-1.3b": (0.9e9, 1.9e9),
+        # NB: the assignment pins 48L x 64e x d_ff=1408 which gives ~28B
+        # total (the published Moonlight-16B uses 27 layers); the assigned
+        # config is authoritative — see DESIGN.md §4.
+        "moonshot-v1-16b-a3b": (20e9, 32e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = registry.param_count(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n / 1e9:.2f}B not in [{lo / 1e9}, {hi / 1e9}]"
+
+
+def test_active_params_less_than_total_for_moe():
+    for arch in ("jamba-1.5-large-398b", "mixtral-8x7b", "moonshot-v1-16b-a3b"):
+        cfg = get_config(arch)
+        assert registry.active_param_count(cfg) < registry.param_count(cfg)
+
+
+def test_decode_cache_seq_sharding_flag():
+    cfg = get_config("qwen2-7b")
+    defs = registry.cache_defs(cfg, 4, 128)
+    k = defs["slot0"]["kv"]["k"]
+    assert k.axes[2] == "sp"  # cache seq dim sharded over model axis

@@ -1,0 +1,145 @@
+"""Optimization core: design space, RF surrogate, constrained BO (paper §3.2)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bo import ConstrainedBO, expected_improvement
+from repro.core.designspace import DesignSpace, Param, algorithm_space
+from repro.core.surrogate import RandomForest
+
+HSET = settings(max_examples=20, deadline=None)
+
+
+# ------------------------------------------------------------ design space
+
+
+@given(seed=st.integers(0, 2**31))
+@HSET
+def test_samples_respect_bounds_and_encode_to_unit(seed):
+    space = algorithm_space("dnn", n_features=7, num_classes=2)
+    rng = np.random.default_rng(seed)
+    cfg = space.sample(rng)
+    assert 1 <= cfg["n_layers"] <= 10
+    assert 3e-4 <= cfg["lr"] <= 3e-2
+    x = space.encode(cfg)
+    assert x.shape == (len(space.params),)
+    assert np.all(x >= -1e-6) and np.all(x <= 1 + 1e-6)
+
+
+@given(seed=st.integers(0, 2**31))
+@HSET
+def test_log_param_sampling(seed):
+    p = Param("lr", "real", 1e-4, 1e-1, log=True)
+    rng = np.random.default_rng(seed)
+    v = p.sample(rng)
+    assert 1e-4 <= v <= 1e-1
+    assert 0.0 <= p.encode(v) <= 1.0
+
+
+def test_space_size_estimate_positive():
+    space = algorithm_space("dnn", n_features=7, num_classes=2)
+    assert space.size_estimate() > 5  # >10^5 configurations
+
+
+# --------------------------------------------------------------- surrogate
+
+
+def test_rf_fits_deterministic_function():
+    rng = np.random.default_rng(0)
+    X = rng.random((300, 3)).astype(np.float32)
+    y = np.sin(4 * X[:, 0]) + X[:, 1] ** 2
+    rf = RandomForest(n_trees=16, seed=1).fit(X, y)
+    mu, sigma = rf.predict(X[:50])
+    assert np.mean(np.abs(mu - y[:50])) < 0.25
+    assert np.all(sigma >= 0)
+
+
+def test_rf_uncertainty_nonzero_where_data_noisy():
+    """Ensemble std is positive (EI needs it) and grows with target noise."""
+    rng = np.random.default_rng(0)
+    X = rng.random((300, 2)).astype(np.float32)
+    y_clean = X[:, 0]
+    y_noisy = X[:, 0] + rng.normal(0, 0.5, 300)
+    s_clean = RandomForest(n_trees=24, seed=2).fit(X, y_clean).predict(X[:50])[1]
+    s_noisy = RandomForest(n_trees=24, seed=2).fit(X, y_noisy).predict(X[:50])[1]
+    assert np.all(s_clean > 0) and np.all(s_noisy > 0)
+    assert s_noisy.mean() > s_clean.mean()
+
+
+def test_rf_proba_bounds():
+    rng = np.random.default_rng(3)
+    X = rng.random((100, 2)).astype(np.float32)
+    y = (X[:, 0] > 0.5).astype(np.float64)
+    clf = RandomForest(n_trees=8, seed=0).fit(X, y)
+    p = clf.predict_proba(X)
+    assert np.all(p >= 0) and np.all(p <= 1)
+
+
+# --------------------------------------------------------------------- EI
+
+
+def test_expected_improvement_properties():
+    mu = np.array([0.0, 1.0, 2.0])
+    sigma = np.array([1.0, 1.0, 1.0])
+    ei = expected_improvement(mu, sigma, best=1.0)
+    assert np.all(ei >= 0)
+    assert ei[2] > ei[1] > ei[0]
+    # zero uncertainty at the incumbent -> ~zero EI
+    ei0 = expected_improvement(np.array([1.0]), np.array([1e-9]), best=1.0)
+    assert ei0[0] == pytest.approx(0.0, abs=1e-6)
+
+
+# ------------------------------------------------------------ constrained BO
+
+
+def _toy_problem(cfg):
+    """Max at x=0.7,y=0.2 but feasible only when x+y<0.8."""
+    x, y = cfg["x"], cfg["y"]
+    value = -((x - 0.7) ** 2) - (y - 0.2) ** 2
+    feasible = (x + y) < 0.8
+    return value, feasible, {}
+
+
+def test_bo_finds_feasible_optimum():
+    """The optimum (0.7, 0.2) is infeasible (x+y>=0.8); the constrained
+    optimum -0.005 sits ON the boundary.  BO must stay feasible and beat
+    random search's expected best (~ -0.2 at this budget)."""
+    space = DesignSpace([
+        Param("x", "real", 0.0, 1.0), Param("y", "real", 0.0, 1.0),
+    ])
+    bo = ConstrainedBO(space, n_init=8, seed=0)
+    best = bo.run(_toy_problem, budget=60)
+    assert best is not None
+    assert best.config["x"] + best.config["y"] < 0.8
+    assert best.value > -0.12
+
+
+def test_bo_regret_curve_monotone_and_matches_history():
+    space = DesignSpace([Param("x", "real", 0.0, 1.0)])
+    bo = ConstrainedBO(space, n_init=4, seed=1)
+    bo.run(lambda c: (-(c["x"] - 0.3) ** 2, c["x"] < 0.9, {}), budget=15)
+    curve = bo.regret_curve()
+    assert len(curve) == 15
+    assert all(b >= a for a, b in zip(curve, curve[1:]))
+    assert curve[-1] == bo.best.value
+
+
+def test_bo_infeasible_points_excluded_from_best():
+    space = DesignSpace([Param("x", "real", 0.0, 1.0)])
+    bo = ConstrainedBO(space, n_init=4, seed=2)
+    # big values are infeasible — best must come from the feasible region
+    bo.run(lambda c: (c["x"], c["x"] < 0.5, {}), budget=20)
+    assert bo.best is not None
+    assert bo.best.config["x"] < 0.5
+    n_feas = sum(1 for o in bo.history if o.feasible)
+    assert 0 < n_feas < len(bo.history) or n_feas == len(bo.history)
+
+
+def test_bo_all_infeasible_returns_none():
+    space = DesignSpace([Param("x", "real", 0.0, 1.0)])
+    bo = ConstrainedBO(space, n_init=3, seed=3)
+    best = bo.run(lambda c: (float("nan"), False, {}), budget=6)
+    assert best is None

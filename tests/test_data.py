@@ -1,0 +1,99 @@
+"""Synthetic data pipelines: determinism, statistics, the paper's Fig-6
+reactivity property, and the LM token stream."""
+
+import numpy as np
+import pytest
+
+from repro.core import mlalgos
+from repro.data import netdata
+from repro.data.tokens import TokenDataset
+
+
+def test_ad_deterministic_and_balanced():
+    a = netdata.make_ad_dataset(features=7, n_train=512, n_test=256, seed=5)
+    b = netdata.make_ad_dataset(features=7, n_train=512, n_test=256, seed=5)
+    np.testing.assert_array_equal(a.train_x, b.train_x)
+    np.testing.assert_array_equal(a.train_y, b.train_y)
+    frac = a.train_y.mean()
+    assert 0.3 < frac < 0.6
+    assert a.num_features == 7 and a.num_classes == 2
+
+
+def test_ad_30_feature_variant():
+    d = netdata.make_ad_dataset(features=30, n_train=256, n_test=128)
+    assert d.num_features == 30
+
+
+def test_ad_capacity_accuracy_correlation(ad_data):
+    """Table-2 central effect: a bigger DNN beats a tiny one."""
+    small = mlalgos.train_dnn(ad_data, hidden=[4], epochs=6, seed=0)
+    big = mlalgos.train_dnn(ad_data, hidden=[48, 32, 16], epochs=6, seed=0)
+    f1_small = mlalgos.f1_score(ad_data.test_y, small.predict(ad_data.test_x))
+    f1_big = mlalgos.f1_score(ad_data.test_y, big.predict(ad_data.test_x))
+    assert f1_big > f1_small + 0.01
+
+
+def test_tc_five_classes(tc_data):
+    assert tc_data.num_classes == 5
+    assert set(np.unique(tc_data.train_y)) == set(range(5))
+
+
+def test_bd_flow_statistics():
+    """Fig. 6: botnet flows are low-volume/high-duration vs benign P2P."""
+    flows = netdata.make_bd_flows(n_flows=300, seed=0)
+    bot = [f for f in flows if f.label == 1]
+    ben = [f for f in flows if f.label == 0]
+    assert len(bot) > 20 and len(ben) > 20
+    mean_pkts = lambda fs: np.mean([len(f.sizes) for f in fs])
+    mean_ipt = lambda fs: np.mean([np.mean(f.ipts) for f in fs])
+    assert mean_pkts(bot) < mean_pkts(ben)      # low volume
+    assert mean_ipt(bot) > mean_ipt(ben)        # high duration / sparse
+
+
+def test_bd_partial_histograms_diverge_early():
+    """§5.1.1: per-packet partial histograms separate classes well before
+    flow end — the reaction-time argument for per-packet ML."""
+    data, test_flows = netdata.make_bd_dataset(n_flows=900, seed=1)
+    model = mlalgos.train_dnn(data, hidden=[32, 16], epochs=8, seed=0)
+
+    f1_full = mlalgos.f1_score(data.test_y, model.predict(data.test_x))
+    partial = netdata.bd_partial_eval_set(test_flows, checkpoints=(10,))
+    X10, y10 = partial[10]
+    f1_10 = mlalgos.f1_score(y10, model.predict(X10))
+    assert f1_full > 0.75
+    assert f1_10 > 0.6 * f1_full  # most of the signal in the first packets
+
+
+def test_token_dataset_deterministic_and_host_sharded():
+    d0 = TokenDataset(256, 32, 8, seed=3)
+    d1 = TokenDataset(256, 32, 8, seed=3)
+    b0, b1 = d0.batch_at(7), d1.batch_at(7)
+    np.testing.assert_array_equal(b0["tokens"], b1["tokens"])
+    # host sharding partitions the batch deterministically
+    h0 = TokenDataset(256, 32, 8, seed=3, host_id=0, num_hosts=2)
+    h1 = TokenDataset(256, 32, 8, seed=3, host_id=1, num_hosts=2)
+    a, b = h0.batch_at(0), h1.batch_at(0)
+    assert a["tokens"].shape == (4, 32)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_token_dataset_has_learnable_structure():
+    """Bigram structure: successor entropy << unigram entropy."""
+    d = TokenDataset(64, 128, 16, seed=0, branch=4)
+    b = d.batch_at(0)
+    toks, tgts = b["tokens"], b["targets"]
+    # empirical: fraction of transitions that follow the bigram table
+    follows = 0
+    total = 0
+    for i in range(toks.shape[0]):
+        for t in range(toks.shape[1]):
+            total += 1
+            if tgts[i, t] in d.succ[toks[i, t]]:
+                follows += 1
+    assert follows / total > 0.7
+
+
+def test_dataset_feature_subset(ad_data):
+    sub = ad_data.subset_features([0, 2, 4])
+    assert sub.num_features == 3
+    assert sub.feature_names == [ad_data.feature_names[i] for i in (0, 2, 4)]

@@ -1,0 +1,147 @@
+"""Platform resource models + backend codegen (paper §3.3, Tables 2/5)."""
+
+import numpy as np
+import pytest
+
+from repro.core import codegen, feasibility as feas, mlalgos
+from repro.core.alchemy import Platforms
+
+
+# ----------------------------------------------------------- Taurus model
+
+
+def test_taurus_calibration_paper_scale():
+    """A ~203-param DNN must land at the paper's Table-2 scale (24 CU/48 MU)."""
+    model = feas.TaurusModel()
+    # widths giving ~203 params: 7 -> 12 -> 8 -> 2 = 218 params
+    est = model.estimate("dnn", {"widths": [7, 12, 8, 2]})
+    o = est["options"][0]  # II=1
+    assert 15 <= o["cu"] <= 45, o
+    assert 25 <= o["mu"] <= 75, o
+    assert o["throughput_pps"] == 1e9  # 1 GPkt/s at II=1 (paper line rate)
+
+
+def test_taurus_ii_throughput_tradeoff():
+    """Paper §3.2.2: more loop iterations (II) halve throughput, halve CUs."""
+    model = feas.TaurusModel()
+    est = model.estimate("dnn", {"widths": [30, 64, 64, 2]})
+    o1, o2 = est["options"][0], est["options"][1]
+    assert o2["cu"] < o1["cu"]
+    assert o2["throughput_pps"] == o1["throughput_pps"] / 2
+
+
+def test_taurus_platform_feasibility_boundary():
+    p = Platforms.Taurus()
+    p.constrain(performance={"throughput": 1, "latency": 500},
+                resources={"rows": 16, "cols": 16})
+    small = p.check("dnn", {"widths": [7, 16, 2]})
+    assert small.feasible
+    huge = p.check("dnn", {"widths": [64] + [128] * 10 + [2]})
+    assert not huge.feasible
+    assert any("CU" in r or "throughput" in r for r in huge.reasons)
+
+
+def test_taurus_constraint_operator():
+    p = Platforms.Taurus() < {
+        "performance": {"throughput": 1, "latency": 500},
+        "resources": {"rows": 8, "cols": 8},
+    }
+    assert p.model.rows == 8
+    assert p.min_throughput_pps == 1e9
+    assert p.max_latency_ns == 500
+
+
+# --------------------------------------------------------------- MAT model
+
+
+def test_mat_mapping_rules():
+    """IIsy rules: kmeans = 1 MAT/cluster, svm = 1 MAT/feature,
+    tree = 1 MAT/level, DNN = ~12 MATs/layer (N2Net)."""
+    m = feas.MATModel()
+    assert m.mats_for("kmeans", {"k": 5, "n_features": 7}) == 5
+    assert m.mats_for("svm", {"n_features": 7, "n_classes": 3}) == 7
+    assert m.mats_for("tree", {"nodes": [{}] * 31, "depth": 4}) == 4
+    assert m.mats_for("dnn", {"widths": [7, 10, 10, 5, 2]}) == 48
+
+
+def test_tofino_platform_rejects_dnn():
+    p = Platforms.Tofino()
+    p.constrain(resources={"tables": 12})
+    assert "dnn" not in p.supported_algorithms()
+    rep = p.check("kmeans", {"k": 5, "n_features": 7})
+    assert rep.feasible
+    rep = p.check("kmeans", {"k": 20, "n_features": 7})
+    assert not rep.feasible
+
+
+# -------------------------------------------------------------- FPGA / TPU
+
+
+def test_fpga_estimate_scales_with_params():
+    p = Platforms.FPGA()
+    small = p.check("dnn", {"widths": [7, 10, 2]})
+    big = p.check("dnn", {"widths": [30, 64, 64, 2]})
+    assert small.feasible and big.feasible
+    assert big.resources["luts"] > small.resources["luts"]
+
+
+def test_tpu_platform_roofline_feasibility():
+    p = Platforms.TPU()
+    rep = p.check("dnn", {"widths": [7, 64, 2]})
+    assert rep.feasible
+    assert rep.throughput_pps > 1e7  # >10M pkt/s for a small fused MLP
+    p2 = Platforms.TPU() < {"performance": {"throughput": 1000, "latency": 1}}
+    rep2 = p2.check("dnn", {"widths": [7, 64, 2]})
+    assert not rep2.feasible  # 1000 GPkt/s is beyond the roofline
+
+
+def test_report_merge_semantics():
+    a = feas.FeasibilityReport(True, [], {"cu": 10, "mu": 5}, 10.0, 1e9)
+    b = feas.FeasibilityReport(True, [], {"cu": 7, "mu": 3}, 5.0, 5e8)
+    m = a.merge(b)
+    assert m.resources == {"cu": 17, "mu": 8}
+    assert m.latency_ns == 15.0
+    assert m.throughput_pps == 5e8  # min (paper §3.2.1 consistency rule)
+
+
+# ------------------------------------------------------------------ codegen
+
+
+@pytest.fixture(scope="module")
+def trained_models(ad_data):
+    dnn = mlalgos.train_dnn(ad_data, hidden=[16, 8], epochs=4, seed=0)
+    svm = mlalgos.train_svm(ad_data, c_reg=1.0, epochs=6, seed=0)
+    km = mlalgos.train_kmeans(ad_data, k=4, seed=0)
+    return {"dnn": dnn, "svm": svm, "kmeans": km}
+
+
+def _report():
+    return feas.FeasibilityReport(True, [], {"cu": 1, "mu": 1}, 1.0, 1e9)
+
+
+@pytest.mark.parametrize("algo", ["dnn", "svm", "kmeans"])
+def test_taurus_codegen_exact(algo, trained_models, ad_data):
+    tm = trained_models[algo]
+    pipe = codegen.taurus_codegen(f"t_{algo}", tm, _report())
+    assert pipe.verify(ad_data.test_x, max_mismatch_frac=0.0) == 0.0
+    assert "Accel {" in pipe.source
+    assert "Reduce" in pipe.source or "argm" in pipe.source
+
+
+@pytest.mark.parametrize("algo", ["svm", "kmeans"])
+def test_mat_codegen_quantization_bounded(algo, trained_models, ad_data):
+    tm = trained_models[algo]
+    pipe = codegen.mat_codegen(f"m_{algo}", tm, _report(), ad_data.train_x)
+    frac = pipe.verify(ad_data.test_x, max_mismatch_frac=0.03)
+    assert frac <= 0.03  # 512-bin quantized LUTs: <=3% label flips
+    assert "table score_f0" in pipe.source
+    assert "apply {" in pipe.source
+
+
+def test_dnn_codegen_uses_fused_kernel_math(trained_models, ad_data):
+    """The generated Taurus pipeline must execute the same math as the
+    trained model (mlalgos.mlp_forward) — via the fused_mlp kernel."""
+    tm = trained_models["dnn"]
+    pipe = codegen.taurus_codegen("ad", tm, _report())
+    X = ad_data.test_x[:256]
+    np.testing.assert_array_equal(pipe(X), tm.predict(X))

@@ -1,0 +1,64 @@
+"""Roofline math + autoshard design space (fast units; the compile-in-loop
+path is exercised by examples/autoshard_pod.py and the §Perf log)."""
+
+import json
+import os
+
+import pytest
+
+from repro.core.autoshard import layout_space
+from repro.launch.roofline import Cell, render_markdown
+
+
+def _cell(c, m, x, model_flops=1e15, hlo_total=2e15):
+    cell = Cell("a", "s", "pod", True)
+    cell.t_compute, cell.t_memory, cell.t_collective = c, m, x
+    cell.model_flops = model_flops
+    cell.hlo_flops_total = hlo_total
+    cell.peak_bytes = 2**30
+    return cell
+
+
+def test_dominant_and_bound():
+    c = _cell(1.0, 2.0, 3.0)
+    assert c.dominant == "collective"
+    assert c.t_bound == 3.0
+    assert _cell(5.0, 2.0, 3.0).dominant == "compute"
+
+
+def test_useful_ratio_and_fraction():
+    c = _cell(2.0, 1.0, 1.0, model_flops=1e15, hlo_total=2e15)
+    assert c.useful_ratio == pytest.approx(2.0)
+    # t_model_compute = (1e15/2e15) * 2.0 = 1.0; bound = 2.0 -> frac 0.5
+    assert c.roofline_fraction == pytest.approx(0.5)
+
+
+def test_render_markdown_includes_failures():
+    ok = _cell(1, 2, 3)
+    bad = Cell("b", "s", "pod", False)
+    bad.error = "boom"
+    md = render_markdown([ok, bad])
+    assert "FAILED" in md and "boom" in md
+    assert "**collective**" in md
+
+
+def test_layout_space_factorizations():
+    space = layout_space(256)
+    layouts = dict(zip(space.names, space.params))["layout"].values
+    assert (16, 16) in layouts and (1, 256) in layouts and (256, 1) in layouts
+    for dp, tp in layouts:
+        assert dp * tp == 256
+
+
+def test_autoshard_artifact_recorded():
+    """The §Perf BO run left its evaluation log on disk with a feasible
+    winner strictly better than the (16,16,micro=16) faithful baseline."""
+    path = "benchmarks/results/autoshard_qwen3_train.json"
+    if not os.path.exists(path):
+        pytest.skip("autoshard artifact not generated in this environment")
+    evals = json.load(open(path))
+    feas = [e for e in evals if e["feasible"]]
+    assert feas, "no feasible layout recorded"
+    best = min(feas, key=lambda e: max(e["t"]))
+    assert max(best["t"]) < 7.16  # beats the hand-tuned iteration-1 bound
+    assert all(e["peak"] > 0 for e in evals)
