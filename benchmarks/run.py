@@ -11,6 +11,7 @@ import time
 import traceback
 
 from benchmarks import (
+    dag_throughput,
     dryrun_roofline,
     fig4_regret,
     fig6_reaction_time,
@@ -30,6 +31,8 @@ BENCHES = {
     "fig4": ("Figure 4: BO regret", fig4_regret.main),
     "fig6": ("Figure 6: reaction time", fig6_reaction_time.main),
     "fig7": ("Figure 7: KMeans vs MATs", fig7_kmeans_mats.main),
+    "dag": ("whole-DAG JIT vs interpreted chaining pkt/s",
+            dag_throughput.main),
     "kernel": ("fused_mlp kernel roofline", kernel_roofline.main),
     "dryrun": ("dry-run roofline summary", dryrun_roofline.main),
 }

@@ -29,11 +29,18 @@ def main(budget: int = 8) -> dict:
     p.schedule(m)
     with Timer() as t:
         res = homunculus.generate(p, budget=budget, n_init=4, seed=0)
-        # NB: parens — Python chains bare a > b > c comparisons (alchemy.py)
+        from repro.core.alchemy import NATURAL_CHAINS_OK
+
+        if NATURAL_CHAINS_OK:
+            seq4 = m > m > m > m
+            mixed = m > (m | m) > m
+        else:  # interpreter defeats chained-comparison interception
+            seq4 = ((m > m) > m) > m
+            mixed = (m > (m | m)) > m
         strategies = {
-            "DNN > DNN > DNN > DNN": ((m > m) > m) > m,
+            "DNN > DNN > DNN > DNN": seq4,
             "DNN | DNN | DNN | DNN": m | m | m | m,
-            "DNN > (DNN | DNN) > DNN": (m > (m | m)) > m,
+            "DNN > (DNN | DNN) > DNN": mixed,
         }
         rows = chaining.strategy_table(strategies, res)
 

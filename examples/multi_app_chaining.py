@@ -42,11 +42,25 @@ for name in ("ad", "tc"):
 print("combined DAG resources:", res.dag_report.resources,
       f"(fits 16x16 grid: {res.dag_report.resources['cu'] <= 256})")
 
-# run packets through the chain: AD fires on its own features
+# run packets through the chain — whole DAG compiled into ONE jitted
+# program (AD gate as jnp.where masking), vs the eager per-stage path
 X = ad_loader().test_x[:512]
-verdict = np.asarray(res["ad"].pipeline(X))
-print(f"\nAD gate: {np.mean(verdict == 1):.1%} of packets flagged; "
-      f"only clean packets proceed to TC")
+dag = chaining.compile_dag(platform.scheduled, res)
+verdict = dag(X)
+eager = chaining.run_dag(platform.scheduled, res, X)
+assert np.array_equal(verdict, eager)
+print(f"\nAD gate: {np.mean(np.asarray(res['ad'].pipeline(X)) == 1):.1%} "
+      f"of packets flagged; flagged packets short-circuit TC")
+print(f"compiled DAG == eager DAG on {len(X)} packets: "
+      f"{np.array_equal(verdict, eager)}")
+
+# serve the compiled DAG through the micro-batching packet engine
+from repro.serve.packet_engine import PacketServeEngine
+
+eng = PacketServeEngine(dag, feature_dim=X.shape[1], max_batch=256)
+eng.submit(X)
+eng.flush()
+print("packet engine:", eng.stats())
 
 # ---- fusion: two models on split halves of the same feature space
 part1, part2 = ad_loader().split_half()

@@ -10,6 +10,10 @@ paper's listings::
 """
 
 from repro.core import alchemy
+from repro.core.chaining import compile_dag, run_dag
 from repro.core.dse import generate, search_model, GenerationResult
 
-__all__ = ["alchemy", "generate", "search_model", "GenerationResult"]
+__all__ = [
+    "alchemy", "generate", "search_model", "GenerationResult",
+    "compile_dag", "run_dag",
+]

@@ -1,0 +1,93 @@
+"""Strategies for the vendored hypothesis shim (see package docstring)."""
+
+from __future__ import annotations
+
+import random
+
+
+class SearchStrategy:
+    """Base: example(rng, i) draws one value; i==0 is the minimal case."""
+
+    def example(self, rng: random.Random, i: int = 1):
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.lo, self.hi = min_value, max_value
+
+    def example(self, rng, i=1):
+        return self.lo if i == 0 else rng.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float, max_value: float):
+        self.lo, self.hi = min_value, max_value
+
+    def example(self, rng, i=1):
+        return self.lo if i == 0 else rng.uniform(self.lo, self.hi)
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rng, i=1):
+        return False if i == 0 else rng.random() < 0.5
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, rng, i=1):
+        return self.elements[0] if i == 0 else rng.choice(self.elements)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, min_size=0, max_size=10):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def example(self, rng, i=1):
+        size = (self.min_size if i == 0
+                else rng.randint(self.min_size, self.max_size))
+        return [self.elements.example(rng, i) for _ in range(size)]
+
+
+class _DataObject:
+    """Interactive draws inside a test body (st.data())."""
+
+    def __init__(self, rng: random.Random, i: int):
+        self._rng, self._i = rng, i
+
+    def draw(self, strategy: SearchStrategy):
+        return strategy.example(self._rng, self._i)
+
+
+class _Data(SearchStrategy):
+    def example(self, rng, i=1):
+        return _DataObject(rng, i)
+
+
+def integers(min_value: int = 0, max_value: int = 2**31) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0) -> SearchStrategy:
+    return _Floats(min_value, max_value)
+
+
+def booleans() -> SearchStrategy:
+    return _Booleans()
+
+
+def sampled_from(elements) -> SearchStrategy:
+    return _SampledFrom(elements)
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int | None = 10) -> SearchStrategy:
+    return _Lists(elements, min_size, max_size)
+
+
+def data() -> SearchStrategy:
+    return _Data()

@@ -1,0 +1,3 @@
+"""repro: JAX/Pallas reproduction of Homunculus data-plane ML pipelines."""
+
+from repro import _compat  # noqa: F401  (jax forward-compat polyfills)

@@ -1,0 +1,53 @@
+"""Forward-compat polyfills for the pinned jax in this container.
+
+The codebase targets the current jax API (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``); the
+container pins jax 0.4.x where those live elsewhere or do not exist.  This
+module backfills the missing names once, at ``import repro`` time, so all
+source and tests stay written against the modern surface.  Every patch is
+guarded: on a jax that already provides the name, nothing is touched.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+import jax.sharding
+
+
+def _install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        jax.shard_map = _shard_map
+
+    # make_mesh: present since 0.4.35 but without the axis_types kwarg
+    try:
+        import inspect
+
+        sig = inspect.signature(jax.make_mesh)
+        has_axis_types = "axis_types" in sig.parameters
+    except (AttributeError, ValueError):
+        has_axis_types = False
+    if hasattr(jax, "make_mesh") and not has_axis_types:
+        _orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            del axis_types  # pre-explicit-sharding jax: all axes are Auto
+            return _orig_make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+
+_install()

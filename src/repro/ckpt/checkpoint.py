@@ -2,7 +2,9 @@
 
 Layout:
   <dir>/step_<N>/manifest.msgpack   leaf index: path, shape, dtype, crc32
-  <dir>/step_<N>/leaf_<i>.bin.zst   zstd-compressed raw array bytes
+  <dir>/step_<N>/leaf_<i>.bin.zst   compressed raw array bytes (zstd, or
+                                    zlib where zstandard is unavailable;
+                                    the codec is recorded in the manifest)
   <dir>/step_<N>/COMPLETE           atomic finalize marker (written last)
   <dir>/latest                      text file with newest complete step
 
@@ -29,9 +31,38 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # container without zstd: zlib fallback (see _CODEC)
+    zstandard = None
 
 _ZSTD_LEVEL = 3
+_CODEC = "zstd" if zstandard is not None else "zlib"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"   # zstd frame header
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=_ZSTD_LEVEL).compress(raw)
+    return zlib.compress(raw, _ZSTD_LEVEL)
+
+
+def _decompress(blob: bytes, codec: str) -> bytes:
+    """Codec comes from the manifest; pre-codec checkpoints are sniffed by
+    the zstd frame magic so either environment reads either format."""
+    if codec == "sniff":
+        codec = "zstd" if blob[:4] == _ZSTD_MAGIC else "zlib"
+    if codec == "zstd":
+        if zstandard is None:
+            raise IOError(
+                "checkpoint was written with zstd but the zstandard "
+                "module is unavailable in this environment"
+            )
+        return zstandard.ZstdDecompressor().decompress(blob)
+    if codec == "zlib":
+        return zlib.decompress(blob)
+    raise IOError(f"unknown checkpoint codec {codec!r}")
 
 
 def _resolve_dtype(name):
@@ -59,14 +90,14 @@ def save_checkpoint(ckpt_dir: str, state, step: int) -> str:
     os.makedirs(tmp_dir, exist_ok=True)
 
     leaves, treedef = _leaf_paths(state)
-    cctx = zstandard.ZstdCompressor(level=_ZSTD_LEVEL)
-    manifest = {"treedef": str(treedef), "leaves": [], "step": step}
+    manifest = {"treedef": str(treedef), "leaves": [], "step": step,
+                "codec": _CODEC}
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         raw = arr.tobytes()
         fname = f"leaf_{i:05d}.bin.zst"
         with open(os.path.join(tmp_dir, fname), "wb") as f:
-            f.write(cctx.compress(raw))
+            f.write(_compress(raw))
         manifest["leaves"].append(
             {
                 "file": fname,
@@ -125,11 +156,11 @@ def restore_checkpoint(ckpt_dir: str, like_tree, step: int | None = None,
     with open(os.path.join(step_dir, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
 
-    dctx = zstandard.ZstdDecompressor()
+    codec = manifest.get("codec", "sniff")
     arrays = []
     for meta in manifest["leaves"]:
         with open(os.path.join(step_dir, meta["file"]), "rb") as f:
-            raw = dctx.decompress(f.read())
+            raw = _decompress(f.read(), codec)
         if zlib.crc32(raw) != meta["crc32"]:
             raise IOError(f"crc mismatch in {meta['file']} (corrupt ckpt)")
         arr = np.frombuffer(raw, dtype=_resolve_dtype(meta["dtype"]))

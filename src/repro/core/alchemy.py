@@ -7,8 +7,9 @@ Constructs (paper Table 1):
   Platforms.Taurus() ...  backend target + resource/performance constraints
   m1 > m2                 sequential composition
   m1 | m2                 parallel composition
-                          (NB: Python chains bare comparisons — write
-                          (m1 > m2) > m3, not m1 > m2 > m3)
+                          (natural chains work: ``m1 > m2 > m3`` builds the
+                          3-stage Seq — Python's chained-comparison
+                          evaluation is intercepted via ``Seq.__bool__``)
   platform < {...}        constraint operator (sugar for .constrain)
   IOMap / @IOMapper       wiring between composed models
 
@@ -37,6 +38,8 @@ A program is exactly the paper's Figure-3 shape::
 from __future__ import annotations
 
 import dataclasses
+import sys
+import threading
 from typing import Any, Callable
 
 import numpy as np
@@ -104,13 +107,130 @@ def passthrough_iomap(features, upstream):
 
 
 # ------------------------------------------------------------ composition
+#
+# Python *chains* bare comparisons: ``m1 > m2 > m3`` evaluates as
+# ``(m1 > m2) and (m2 > m3)`` — naively the left Seq is silently dropped.
+# The fix: when Python truth-tests an intermediate ``Seq`` (the ``and``),
+# ``Seq.__bool__`` records (seq, last operand); the very next ``__gt__``
+# on that same operand extends the recorded Seq instead of starting a new
+# one, so natural chains build the full DAG.  Safety rails — a record is
+# only left when BOTH hold:
+#   * the truth-tested Seq is an unnamed temporary (CPython refcount ==
+#     eval stack + bool arg + getrefcount arg), so a variable-bound Seq
+#     (``s = a > b; if s: ...``) never records; and
+#   * the truth-test executes at a JUMP_IF_*_OR_POP opcode — the implicit
+#     ``and`` of a chained comparison — so ``if a > b: ...`` (POP_JUMP_*)
+#     and ``bool(a > b)`` (CALL) never record either;
+# and the record is consume-once, cleared by the next ``>``.  Both rails
+# are CPython-specific; ``_natural_chain_selfcheck`` probes the behavior
+# at import and warns (advising parentheses) where it does not hold.
+# (Caveat: tools that rewrite chained comparisons into non-short-circuit
+# form — e.g. pytest's assertion rewriter INSIDE an ``assert`` expression —
+# bypass the __bool__ hook; build the DAG in a plain statement there.)
+
+class _ChainState(threading.local):
+    """Per-thread pending records — concurrent DAG building in threads must
+    not cross-contaminate chains.  A STACK, not a slot: the right operand
+    of a chain may itself be a parenthesized chain (``a > b > (c > d > e)``)
+    whose inner record must coexist with the outer one."""
+
+    def __init__(self):
+        self.recs: list = []   # [(seq, last_operand, window), ...]
+
+
+_CHAIN = _ChainState()
+_CHAIN_DEPTH = 8    # pathological-nesting backstop
+_TEMP_REFS = 3      # CPython refcount of a stack temporary seen by __bool__
+_CHAIN_OPS = frozenset(
+    op for name, op in __import__("dis").opmap.items()
+    if name in ("JUMP_IF_FALSE_OR_POP", "JUMP_IF_TRUE_OR_POP")
+)
+
+
+def _chain_window():
+    """If the ``__bool__`` 3 frames up executes a chain's implicit and,
+    return (frame_id, lasti, jump_target) — the consuming ``__gt__`` must
+    run in that frame strictly inside (lasti, target].  None = not a chain.
+
+    Two bytecode checks make this precise on CPython <= 3.11:
+      * the current opcode is the chain's JUMP_IF_*_OR_POP; and
+      * the jump targets a ``ROT_TWO; POP_TOP`` cleanup block — ONLY
+        chained comparisons emit that epilogue; a plain ``and``/``or``
+        jumps to the end of its expression instead, so value-producing
+        conjunctions like ``(a > b) and f(b > c)`` never record.
+    Bytecode eras without the dedicated opcode (CPython 3.12) and
+    non-CPython frame layouts degrade to a permissive window (refcount
+    rail only; the import-time self-checks warn there)."""
+    if not _CHAIN_OPS:
+        return (None, 0, sys.maxsize)
+    try:
+        import dis
+
+        f = sys._getframe(2)
+        code = f.f_code.co_code
+        if code[f.f_lasti] not in _CHAIN_OPS:
+            return None
+        target = next(
+            (i.argval for i in dis.get_instructions(f.f_code)
+             if i.offset == f.f_lasti),
+            None,
+        )
+        if target is None:
+            return (id(f), f.f_lasti, sys.maxsize)
+        rot_two = dis.opmap.get("ROT_TWO")
+        pop_top = dis.opmap.get("POP_TOP")
+        if rot_two is not None and pop_top is not None:
+            if not (target + 2 < len(code)
+                    and code[target] == rot_two
+                    and code[target + 2] == pop_top):
+                return None     # an and/or jump, not a chain epilogue
+        return (id(f), f.f_lasti, target)
+    except Exception:  # pragma: no cover - permissive on odd interpreters
+        return (None, 0, sys.maxsize)
+
+
+def _chain_take(left_operand):
+    """Pop the newest pending chain whose last operand is ``left_operand``
+    AND whose bytecode window (between the chain's implicit-and jump and
+    its target) covers this ``>`` — a later, unrelated ``>`` on the same
+    operand falls outside and never absorbs a record.
+
+    Mismatching records stay put: a parenthesized operand like
+    ``a > b > (c > d)`` runs inner compositions between the outer record
+    and the outer extending ``__gt__``.  The window, not eager clearing,
+    is what expires records (same-frame records past their window are
+    pruned here)."""
+    try:
+        f = sys._getframe(2)
+        here = (id(f), f.f_lasti)
+    except Exception:  # pragma: no cover
+        here = None
+    recs = _CHAIN.recs
+    for i in range(len(recs) - 1, -1, -1):
+        node, operand, (fid, lo, hi) = recs[i]
+        if here is not None and fid == here[0] and here[1] > hi:
+            del recs[i]          # same frame, past its window: stale
+            continue
+        if operand is left_operand:
+            in_window = (fid is None or here is None
+                         or (fid == here[0] and lo < here[1] <= hi))
+            if in_window:
+                del recs[i:]     # consume; inner records above are done
+                return node
+    return None
 
 
 class _Composable:
     def __gt__(self, other):  # m1 > m2 : sequential
-        return Seq([self, _as_node(other)])
+        other = _as_node(other)
+        chained = _chain_take(self)
+        if chained is not None:
+            return Seq(chained.children + [other])
+        return Seq([self, other])
 
     def __or__(self, other):  # m1 | m2 : parallel
+        # NB: must not clear _CHAIN — ``a > b > (c | d)`` evaluates this
+        # mid-chain, after Seq.__bool__ and before the extending __gt__
         return Par([self, _as_node(other)])
 
 
@@ -125,7 +245,23 @@ class Seq(_Composable):
     children: list
 
     def __gt__(self, other):
-        return Seq(self.children + [_as_node(other)])
+        other = _as_node(other)
+        chained = _chain_take(self)
+        if chained is not None:
+            return Seq(chained.children + [other])
+        return Seq(self.children + [other])
+
+    def __bool__(self):
+        # truth-tested mid-chain (the implicit ``and``): remember this Seq
+        # so the next ``>`` on our last operand extends it — but only when
+        # we are an unnamed temporary AND the call site is a chain's
+        # JUMP_IF opcode; ``if seq:`` / ``bool(seq)`` are user truth-tests
+        if sys.getrefcount(self) <= _TEMP_REFS:
+            window = _chain_window()
+            if window is not None:
+                _CHAIN.recs.append((self, self.children[-1], window))
+                del _CHAIN.recs[:-_CHAIN_DEPTH]
+        return True
 
     def leaves(self) -> list["Model"]:
         out = []
@@ -146,6 +282,11 @@ class Par(_Composable):
 
     def __or__(self, other):
         return Par(self.children + [_as_node(other)])
+
+    def __bool__(self):
+        # never part of a chained comparison (| is a binary operator);
+        # pending records expire via their bytecode window, not here
+        return True
 
     def leaves(self) -> list["Model"]:
         out = []
@@ -201,6 +342,40 @@ class Model(_Composable):
 
     def __repr__(self):
         return f"Model({self.name!r}, metric={self.objective})"
+
+
+def _natural_chain_selfcheck() -> bool:
+    """Probe whether un-parenthesized chaining works on this interpreter."""
+    a, b, c = (Model.__new__(Model) for _ in range(3))
+    chain = a > b > c
+    return isinstance(chain, Seq) and len(chain.children) == 3
+
+
+def _chain_rails_selfcheck() -> bool:
+    """Probe the safety rails: a truth-tested temporary must NOT leak into
+    the next composition (fails on bytecode eras with no chain opcode,
+    e.g. CPython 3.12, where the rails degrade to refcount-only)."""
+    a, b, c = (Model.__new__(Model) for _ in range(3))
+    if a > b:
+        pass
+    probe = b > c
+    return len(probe.children) == 2
+
+
+NATURAL_CHAINS_OK = _natural_chain_selfcheck()
+CHAIN_RAILS_OK = _chain_rails_selfcheck()
+if not (NATURAL_CHAINS_OK and CHAIN_RAILS_OK):  # pragma: no cover
+    import warnings
+
+    warnings.warn(
+        "this Python implementation degrades Alchemy's chained-comparison "
+        "interception ("
+        + ("chains mis-parse" if not NATURAL_CHAINS_OK
+           else "truth-tests can leak into later compositions")
+        + "): prefer the parenthesized form (m1 > m2) > m3",
+        RuntimeWarning,
+        stacklevel=2,
+    )
 
 
 # --------------------------------------------------------------- Platforms

@@ -4,9 +4,17 @@ Alchemy's ``>`` / ``|`` build a DAG of models sharing one data plane.  This
 module executes a generated DAG over packets and accounts resources:
 
   * Execution semantics (network virtualization): every packet traverses
-    the DAG.  Sequential stages can gate (short-circuit) later stages —
-    e.g. AD in front of TC: packets flagged malicious skip classification.
-    Parallel stages all see the packet; verdicts are combined.
+    the DAG.  Sequential stages gate (short-circuit) later stages — e.g.
+    AD in front of TC: packets flagged positive (verdict > 0) keep that
+    verdict and skip downstream models; clean packets flow on.  Parallel
+    stages all see the packet; verdicts are combined ("or" = any branch
+    positive wins the max, "and" = min, "concat" = stacked matrix).
+  * Two execution paths with identical semantics:
+      - ``run_dag``      eager numpy reference, one pipeline at a time;
+      - ``compile_dag``  lowers the ENTIRE DAG into one jitted JAX program
+        by inlining every model's stage list (core.stageir) and expressing
+        the gate as ``jnp.where`` masking — no per-stage numpy hops, so
+        XLA schedules/fuses across model boundaries.
   * Resource semantics (Table 3): chained copies of the *same* model share
     weights and pipeline logic on the target, so total resources are
     constant in the number of copies and independent of the chaining
@@ -17,41 +25,129 @@ module executes a generated DAG over packets and accounts resources:
 
 from __future__ import annotations
 
-from typing import Any
+import functools
+from typing import Any, Callable
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import stageir
 from repro.core.alchemy import Model, Par, Seq
 from repro.core.dse import GenerationResult, ModelResult
 from repro.core.feasibility import FeasibilityReport
 
+COMBINES = ("or", "and", "concat")
 
-def run_dag(node, result: GenerationResult, X: np.ndarray,
-            *, combine: str = "or") -> np.ndarray:
+
+def _pipeline_of(result, name: str):
+    """Accept GenerationResult, {name: ModelResult} or {name: Pipeline}."""
+    entry = result[name]
+    return entry.pipeline if hasattr(entry, "pipeline") else entry
+
+
+# ------------------------------------------------------------ eager path
+
+
+def run_dag(node, result, X: np.ndarray, *, combine: str = "or"
+            ) -> np.ndarray:
     """Run every packet through the DAG; returns final per-packet verdicts.
 
-    ``combine``: how parallel branches merge ("or" = any positive class,
-    "concat" handled by returning the stacked matrix of branch outputs).
+    Eager numpy reference: each model's compiled pipeline runs separately,
+    verdicts merge on host.  ``compile_dag`` is the jitted equivalent and
+    matches this bit-for-bit.
     """
+    if combine not in COMBINES:
+        raise KeyError(f"combine must be one of {COMBINES}")
     X = np.asarray(X, np.float32)
 
     def eval_node(n) -> np.ndarray:
         if isinstance(n, Model):
-            return np.asarray(result[n.name].pipeline(X))
+            return np.asarray(_pipeline_of(result, n.name)(X))
         if isinstance(n, Seq):
             out = None
             for c in n.children:
                 nxt = eval_node(c)
-                out = nxt if out is None else np.maximum(out, nxt)
+                # gate: packets already flagged keep their verdict and
+                # short-circuit the downstream model
+                out = nxt if out is None else np.where(out > 0, out, nxt)
             return out
         if isinstance(n, Par):
             outs = [eval_node(c) for c in n.children]
             if combine == "or":
-                return np.maximum.reduce(outs)
+                return functools.reduce(np.maximum, outs)
+            if combine == "and":
+                return functools.reduce(np.minimum, outs)
             return np.stack(outs, -1)
         raise TypeError(type(n))
 
     return eval_node(node)
+
+
+# ---------------------------------------------------------- compiled path
+
+
+class CompiledDag:
+    """An entire Alchemy DAG lowered into ONE jitted JAX program."""
+
+    def __init__(self, fn: Callable, schedule: str, n_models: int):
+        self.fn = fn                    # jitted: jnp [N, F] -> verdicts
+        self.schedule = schedule
+        self.n_models = n_models
+
+    def __call__(self, X: np.ndarray) -> np.ndarray:
+        out = self.fn(jnp.asarray(X, np.float32))
+        return np.asarray(out, np.int32)
+
+    def __repr__(self):
+        return f"CompiledDag({self.schedule!r}, models={self.n_models})"
+
+
+def compile_dag(node, result, *, combine: str = "or",
+                fuse: bool = True) -> CompiledDag:
+    """Lower the whole DAG (Seq gating as jnp.where masks, Par merges) and
+    every model's stage list into a single jitted callable."""
+    if combine not in COMBINES:
+        raise KeyError(f"combine must be one of {COMBINES}")
+
+    def lower(n) -> Callable:
+        if isinstance(n, Model):
+            stages = _pipeline_of(result, n.name).stages
+            if fuse:
+                stages = stageir.fuse_pipeline_stages(stages)
+            return lambda x, _s=stages: stageir.apply_stages(_s, x)
+        if isinstance(n, Seq):
+            branches = [lower(c) for c in n.children]
+
+            def seq_fn(x):
+                out = branches[0](x)
+                for b in branches[1:]:
+                    # masked short-circuit: flagged packets hold their
+                    # verdict, clean ones take the next model's output
+                    out = jnp.where(out > 0, out, b(x))
+                return out
+
+            return seq_fn
+        if isinstance(n, Par):
+            branches = [lower(c) for c in n.children]
+
+            def par_fn(x):
+                outs = [b(x) for b in branches]
+                if combine == "or":
+                    return functools.reduce(jnp.maximum, outs)
+                if combine == "and":
+                    return functools.reduce(jnp.minimum, outs)
+                return jnp.stack(outs, -1)
+
+            return par_fn
+        raise TypeError(type(n))
+
+    fn = jax.jit(lower(node))
+    describe = node.describe() if hasattr(node, "describe") else str(node)
+    return CompiledDag(fn, describe, len(node.leaves()))
+
+
+# ----------------------------------------------------------- accounting
 
 
 def dag_resources(node, result: GenerationResult) -> FeasibilityReport:
@@ -66,6 +162,23 @@ def dag_resources(node, result: GenerationResult) -> FeasibilityReport:
         rep = r.report if rep is None else rep.merge(r.report)
     assert rep is not None
     return rep
+
+
+def dag_stage_summary(node, result) -> dict:
+    """Stage metadata over the DAG with identical-model dedup — the same
+    dedup rule as dag_resources, read off Pipeline.stages."""
+    seen: set[int] = set()
+    total = {"stages": [], "params": 0, "macs": 0}
+    for m in node.leaves():
+        pipe = _pipeline_of(result, m.name)
+        if id(pipe) in seen:
+            continue
+        seen.add(id(pipe))
+        s = stageir.stage_summary(pipe.stages)
+        total["stages"] += s["stages"]
+        total["params"] += s["params"]
+        total["macs"] += s["macs"]
+    return total
 
 
 def strategy_table(strategies: dict[str, Any], result: GenerationResult

@@ -60,6 +60,7 @@ class ModelResult:
             "metric": self.metric,
             "value": round(self.value, 4),
             "params": self.trained.param_count,
+            "stages": self.pipeline.stage_summary()["stages"],
             "resources": self.report.resources,
             "latency_ns": round(self.report.latency_ns, 1),
             "throughput_pps": self.report.throughput_pps,

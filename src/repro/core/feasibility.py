@@ -45,23 +45,36 @@ class FeasibilityReport:
 
 
 # ---------------------------------------------------------------- topology
+#
+# All shape/parameter accounting is read off the stage IR: a topology is
+# lowered to shape-only StageSpecs (core.stageir.lower_topology) and every
+# platform model below consumes stage metadata instead of re-deriving
+# layer shapes per backend.
+
+
+def _dense_specs(algorithm: str, topology: dict):
+    from repro.core.stageir import lower_topology
+
+    return lower_topology(algorithm, topology, form="dense")
+
+
+def _mat_specs(algorithm: str, topology: dict):
+    from repro.core.stageir import lower_topology
+
+    return lower_topology(algorithm, topology, form="mat")
 
 
 def dnn_layers(topology: dict) -> list[tuple[int, int]]:
-    w = topology["widths"]
-    return [(w[i], w[i + 1]) for i in range(len(w) - 1)]
+    """(n_in, n_out) per dense layer, via the stage IR."""
+    from repro.core.stageir import spec_layers
+
+    return spec_layers(_dense_specs("dnn", topology))
 
 
 def topology_params(algorithm: str, topology: dict) -> int:
-    if algorithm in ("dnn", "logreg"):
-        return sum(i * o + o for i, o in dnn_layers(topology))
-    if algorithm == "kmeans":
-        return topology["k"] * topology["n_features"]
-    if algorithm == "svm":
-        return topology["n_features"] * topology["n_classes"] + topology["n_classes"]
-    if algorithm == "tree":
-        return len(topology["nodes"])
-    raise KeyError(algorithm)
+    from repro.core.stageir import spec_params
+
+    return spec_params(_dense_specs(algorithm, topology))
 
 
 # ------------------------------------------------------------------ Taurus
@@ -101,17 +114,14 @@ class TaurusModel:
 
     def estimate(self, algorithm: str, topology: dict) -> dict:
         """-> {cu, mu, latency_ns, throughput_pps(ii=1..), ii_options}."""
-        if algorithm in ("dnn", "logreg"):
-            layers = dnn_layers(topology)
-        elif algorithm == "kmeans":
-            # distance to k centroids over F features == one (F -> k) layer
-            layers = [(topology["n_features"], topology["k"])]
-        elif algorithm == "svm":
-            layers = [(topology["n_features"], topology["n_classes"])]
-        elif algorithm == "tree":
+        from repro.core.stageir import spec_layers
+
+        specs = _dense_specs(algorithm, topology)
+        if algorithm == "tree":
             # comparator chain: ~1 CU per 2 nodes, 1 MU per 4 nodes
-            n = len(topology["nodes"])
-            depth = topology.get("depth", 8)
+            tree = specs[0]
+            n = tree.params
+            depth = tree.extra[0]
             return {
                 "options": [{
                     "ii": 1,
@@ -121,8 +131,9 @@ class TaurusModel:
                     "throughput_pps": self.clock_ghz * 1e9,
                 }]
             }
-        else:
-            raise KeyError(algorithm)
+        # every compute stage (dense layer / centroid table) maps to a
+        # map x reduce-tree template occupying CUs at the chosen II
+        layers = spec_layers(specs)
 
         options = []
         for ii in range(1, self.max_ii + 1):
@@ -155,16 +166,21 @@ class MATModel:
     dnn_mats_per_layer: int = 12
 
     def mats_for(self, algorithm: str, topology: dict) -> int:
+        """Table count read off the MAT-form stage specs (IIsy rules)."""
+        specs = _mat_specs(algorithm, topology)
         if algorithm == "kmeans":
-            return topology["k"]
-        if algorithm == "svm":
-            return topology["n_features"]
-        if algorithm == "logreg":
-            return dnn_layers(topology)[0][0]
+            # one MAT per cluster: the LUT stage's output arity
+            return next(s for s in specs if s.kind == "lut_gather").n_out
+        if algorithm in ("svm", "logreg"):
+            # one per-feature score table
+            return next(s for s in specs if s.kind == "lut_gather").n_in
         if algorithm == "tree":
-            return topology.get("depth", 8)
+            # one MAT per tree level
+            return specs[0].extra[0]
         if algorithm == "dnn":
-            return self.dnn_mats_per_layer * len(dnn_layers(topology))
+            # N2Net-style folding: ~12 MATs per dense layer
+            n_dense = sum(1 for s in specs if s.kind == "dense")
+            return self.dnn_mats_per_layer * n_dense
         raise KeyError(algorithm)
 
 
@@ -185,9 +201,12 @@ class FPGAModel:
     clock_mhz: float = 322.0        # CMAC-domain clock
 
     def estimate(self, algorithm: str, topology: dict) -> dict:
-        params = topology_params(algorithm, topology)
+        from repro.core.stageir import spec_layers, spec_params
+
+        specs = _dense_specs(algorithm, topology)
+        params = spec_params(specs)
         depth = (
-            len(dnn_layers(topology)) * 6
+            len(spec_layers(specs)) * 6
             if algorithm in ("dnn", "logreg") else 8
         )
         return {
@@ -217,14 +236,12 @@ class TPUModel:
     launch_overhead_us: float = 3.0
 
     def estimate(self, algorithm: str, topology: dict) -> dict:
+        from repro.core.stageir import spec_layers
         from repro.kernels.fused_mlp.kernel import LANE, vmem_bytes
 
-        if algorithm in ("dnn", "logreg"):
-            n_layers = len(dnn_layers(topology))
-        elif algorithm in ("svm", "kmeans"):
-            n_layers = 1
-        else:  # tree -> predicated select chain, negligible
-            n_layers = 1
+        # each compute stage is one MXU tile-op of the fused kernel; tree
+        # lowers to a predicated select chain, counted as one launch stage
+        n_layers = max(1, len(spec_layers(_dense_specs(algorithm, topology))))
         vmem = vmem_bytes(n_layers, self.batch)
         flops_per_pkt = n_layers * 2 * LANE * LANE  # padded MXU tiles
         bytes_per_pkt = 2 * LANE * 4                # stream in + out, f32

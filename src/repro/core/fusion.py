@@ -58,6 +58,44 @@ class FusedModel:
         widths = list(self.trunk_widths) + [sum(self.heads)]
         return {"widths": widths, "act": "relu"}
 
+    def task_stages(self, task: int):
+        """Lower trunk + one head into the stage IR (FusedMLP + argmax):
+        the same per-task pipeline the Taurus backend would emit."""
+        from repro.core.stageir import FusedMLP, Reduce
+
+        weights = [np.asarray(l["w"]) for l in self.params["trunk"]]
+        biases = [np.asarray(l["b"]) for l in self.params["trunk"]]
+        head = self.params["heads"][task]
+        weights.append(np.asarray(head["w"]))
+        biases.append(np.asarray(head["b"]))
+        return [FusedMLP(weights, biases), Reduce("argmax")]
+
+    def task_pipeline(self, task: int, report=None):
+        """Executable per-task Pipeline built from the fused stage list."""
+        from repro.core.codegen import Pipeline, _spatial_dnn
+        from repro.core.feasibility import FeasibilityReport
+        from repro.core.mlalgos import TrainedModel
+
+        topo = self.topology(task)
+        report = report or FeasibilityReport(True, [], {}, 0.0, 0.0)
+        # per-task count: trunk + this task's head only (NOT all heads) —
+        # keeps the stage_summary()["params"] == model.param_count invariant
+        n_params = sum(
+            int(l["w"].size + l["b"].size) for l in self.params["trunk"]
+        ) + int(self.params["heads"][task]["w"].size
+                + self.params["heads"][task]["b"].size)
+        trained = TrainedModel(
+            "dnn", topo, self.params,
+            lambda X, _t=task: self.predict(_t, X),
+            n_params, self.heads[task], {"fused_task": task},
+        )
+        name = f"fused_task{task}"
+        return Pipeline(
+            name, "taurus", "dnn", self.task_stages(task),
+            _spatial_dnn(name, topo["widths"], report.resources),
+            report, trained,
+        )
+
     def predict(self, task: int, X: np.ndarray) -> np.ndarray:
         logits = _fused_forward(
             self.params, jnp.asarray(X, jnp.float32)

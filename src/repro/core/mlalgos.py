@@ -335,9 +335,12 @@ def train_tree(
             nodes[node_id] = {"leaf": int(np.bincount(ys, minlength=C).argmax())}
             return node_id
         f, thr, _ = best
+        # thresholds live at f32 so the numpy walk and the jitted
+        # TreeTraverse stage (f32 compare) make identical split decisions
+        thr = float(np.float32(thr))
         l_id = build(idx[X[idx, f] <= thr], depth + 1)
         r_id = build(idx[X[idx, f] > thr], depth + 1)
-        nodes[node_id] = {"feat": int(f), "thr": float(thr),
+        nodes[node_id] = {"feat": int(f), "thr": thr,
                           "left": l_id, "right": r_id}
         return node_id
 

@@ -1,0 +1,457 @@
+"""Stage-based pipeline IR (paper §3.3, refactored).
+
+Every backend lowers a ``TrainedModel`` into a typed list of ``Stage`` ops
+instead of an opaque per-backend closure.  The vocabulary mirrors what the
+paper's templates instantiate on hardware:
+
+  ``FeatureSelect``     pick the feature subset a model consumes
+  ``Dense``             one affine layer (+ optional ReLU) — a Taurus
+                        map x reduce-tree dot-product template
+  ``FusedMLP``          a whole ReLU-MLP executed as ONE Pallas kernel
+                        launch (the Taurus MapReduce grid on TPU)
+  ``CentroidDistance``  squared distances to K centroids (KMeans table)
+  ``Quantize``          per-feature range tables: value -> bucket id
+  ``LUTGather``         per-feature MATs: bucket -> per-class partials,
+                        summed across features
+  ``TreeTraverse``      level-synchronous decision-tree walk (one MAT per
+                        level on a switch)
+  ``Reduce``            argmax / argmin over class scores
+  ``LabelMap``          cluster/leaf id -> class id
+
+Two layers of the stack consume the same IR:
+
+  * execution — ``compile_stages`` folds the stage list into one jitted
+    JAX program (``apply_stages`` is the traceable form chaining uses to
+    inline entire DAGs into a single XLA program);
+  * accounting — ``lower_topology`` produces shape-only ``StageSpec``s from
+    which the platform resource models (core.feasibility) read layer
+    shapes, parameter counts and table counts instead of re-deriving them
+    per backend.
+
+A peephole pass (``fuse_pipeline_stages``) rewrites FusedMLP -> Reduce into
+``FusedClassify``, which runs the argmax inside the Pallas kernel so class
+ids, not logits, cross the kernel boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# bucket count of the MAT range tables — single source of truth for both
+# the executable lowering (codegen._quantize_tables) and the shape-only
+# accounting specs below
+MAT_BINS = 512
+
+# =========================================================== concrete stages
+
+
+class Stage:
+    """One typed pipeline op: apply() is traceable jnp, meta() is the
+    resource metadata feasibility accounting reads."""
+
+    kind: str = "stage"
+
+    def apply(self, h: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def meta(self) -> dict:
+        return {}
+
+    def __repr__(self):
+        m = self.meta()
+        inner = ", ".join(f"{k}={v}" for k, v in m.items())
+        return f"{type(self).__name__}({inner})"
+
+
+@dataclasses.dataclass(repr=False)
+class FeatureSelect(Stage):
+    idx: np.ndarray                      # feature indices to keep
+
+    kind = "feature_select"
+
+    def apply(self, h):
+        return h[:, jnp.asarray(np.asarray(self.idx, np.int32))]
+
+    def meta(self):
+        return {"n_out": len(self.idx)}
+
+
+@dataclasses.dataclass(repr=False)
+class Dense(Stage):
+    w: np.ndarray                        # [n_in, n_out]
+    b: np.ndarray                        # [n_out]
+    act: str | None = None               # None | "relu"
+
+    kind = "dense"
+
+    def apply(self, h):
+        out = h @ jnp.asarray(self.w, jnp.float32) + jnp.asarray(
+            self.b, jnp.float32
+        )
+        if self.act == "relu":
+            out = jax.nn.relu(out)
+        return out
+
+    def meta(self):
+        n_in, n_out = self.w.shape
+        return {"n_in": n_in, "n_out": n_out,
+                "params": int(self.w.size + self.b.size),
+                "macs": int(self.w.size)}
+
+
+@dataclasses.dataclass(repr=False)
+class FusedMLP(Stage):
+    """Whole ReLU-MLP -> logits in one fused Pallas kernel launch."""
+
+    weights: list[np.ndarray]
+    biases: list[np.ndarray]
+
+    kind = "fused_mlp"
+
+    def apply(self, h):
+        from repro.kernels.fused_mlp import fused_mlp
+
+        return fused_mlp(
+            h,
+            [jnp.asarray(w) for w in self.weights],
+            [jnp.asarray(b) for b in self.biases],
+        )
+
+    def meta(self):
+        return {
+            "widths": [int(self.weights[0].shape[0])]
+            + [int(w.shape[1]) for w in self.weights],
+            "params": int(sum(w.size + b.size
+                              for w, b in zip(self.weights, self.biases))),
+            "macs": int(sum(w.size for w in self.weights)),
+            "layers": len(self.weights),
+        }
+
+
+@dataclasses.dataclass(repr=False)
+class FusedClassify(Stage):
+    """FusedMLP + argmax folded into the kernel: class ids out, no logits
+    round-trip through HBM.  Produced by ``fuse_pipeline_stages``."""
+
+    weights: list[np.ndarray]
+    biases: list[np.ndarray]
+
+    kind = "fused_classify"
+
+    def apply(self, h):
+        from repro.kernels.fused_mlp import fused_mlp_classify
+
+        return fused_mlp_classify(
+            h,
+            [jnp.asarray(w) for w in self.weights],
+            [jnp.asarray(b) for b in self.biases],
+        )
+
+    def meta(self):
+        return FusedMLP(self.weights, self.biases).meta()
+
+
+@dataclasses.dataclass(repr=False)
+class CentroidDistance(Stage):
+    centroids: np.ndarray                # [K, F']
+
+    kind = "centroid_distance"
+
+    def apply(self, h):
+        cent = jnp.asarray(self.centroids, jnp.float32)
+        return jnp.sum((h[:, None, :] - cent[None]) ** 2, -1)
+
+    def meta(self):
+        k, f = self.centroids.shape
+        return {"n_in": f, "n_out": k, "params": int(self.centroids.size),
+                "macs": int(self.centroids.size)}
+
+
+@dataclasses.dataclass(repr=False)
+class Quantize(Stage):
+    edges: np.ndarray                    # [F, BINS-1] range-table edges
+
+    kind = "quantize"
+
+    def apply(self, h):
+        edges = jnp.asarray(self.edges, jnp.float32)
+        return jax.vmap(
+            lambda col, e: jnp.searchsorted(e, col), in_axes=(1, 0),
+            out_axes=1,
+        )(h, edges)
+
+    def meta(self):
+        f, bins = self.edges.shape
+        return {"n_features": f, "bins": bins + 1}
+
+
+@dataclasses.dataclass(repr=False)
+class LUTGather(Stage):
+    tables: np.ndarray                   # [F, BINS, C] per-feature partials
+
+    kind = "lut_gather"
+
+    def apply(self, bins):
+        tables = jnp.asarray(self.tables, jnp.float32)
+        partial = jax.vmap(
+            lambda b, t: t[b], in_axes=(1, 0), out_axes=1
+        )(bins, tables)                  # [N, F, C]
+        return partial.sum(1)
+
+    def meta(self):
+        f, bins, c = self.tables.shape
+        return {"n_features": f, "bins": bins, "n_out": c,
+                "params": int(self.tables.size)}
+
+
+@dataclasses.dataclass(repr=False)
+class TreeTraverse(Stage):
+    """Level-synchronous CART walk: ``depth`` rounds of gather/compare —
+    the tensor form of one MAT per tree level."""
+
+    feat: np.ndarray                     # [n_nodes] split feature (0 at leaf)
+    thr: np.ndarray                      # [n_nodes] f32 threshold
+    left: np.ndarray                     # [n_nodes] child ids (self at leaf)
+    right: np.ndarray
+    leaf_class: np.ndarray               # [n_nodes] class at leaf (0 inner)
+    is_leaf: np.ndarray                  # [n_nodes] bool
+    depth: int
+
+    kind = "tree_traverse"
+
+    @classmethod
+    def from_nodes(cls, nodes: list[dict], depth: int) -> "TreeTraverse":
+        n = len(nodes)
+        feat = np.zeros(n, np.int32)
+        thr = np.zeros(n, np.float32)
+        left = np.arange(n, dtype=np.int32)
+        right = np.arange(n, dtype=np.int32)
+        leaf_class = np.zeros(n, np.int32)
+        is_leaf = np.zeros(n, bool)
+        for i, nd in enumerate(nodes):
+            if "leaf" in nd:
+                is_leaf[i] = True
+                leaf_class[i] = nd["leaf"]
+            else:
+                feat[i] = nd["feat"]
+                thr[i] = np.float32(nd["thr"])
+                left[i] = nd["left"]
+                right[i] = nd["right"]
+        return cls(feat, thr, left, right, leaf_class, is_leaf, depth)
+
+    def apply(self, h):
+        feat = jnp.asarray(self.feat)
+        thr = jnp.asarray(self.thr)
+        left = jnp.asarray(self.left)
+        right = jnp.asarray(self.right)
+        leaf_class = jnp.asarray(self.leaf_class)
+        is_leaf = jnp.asarray(self.is_leaf)
+        nid = jnp.zeros(h.shape[0], jnp.int32)
+        for _ in range(self.depth + 1):
+            x_f = jnp.take_along_axis(h, feat[nid][:, None], axis=1)[:, 0]
+            child = jnp.where(x_f <= thr[nid], left[nid], right[nid])
+            nid = jnp.where(is_leaf[nid], nid, child)
+        return leaf_class[nid]
+
+    def meta(self):
+        return {"n_nodes": len(self.feat), "depth": self.depth,
+                "params": int(len(self.feat))}
+
+
+@dataclasses.dataclass(repr=False)
+class Reduce(Stage):
+    op: str                              # argmax | argmin
+
+    kind = "reduce"
+
+    def apply(self, scores):
+        fn = jnp.argmax if self.op == "argmax" else jnp.argmin
+        return fn(scores, -1)
+
+    def meta(self):
+        return {"op": self.op}
+
+
+@dataclasses.dataclass(repr=False)
+class LabelMap(Stage):
+    table: np.ndarray                    # [K] id -> class
+
+    kind = "label_map"
+
+    def apply(self, ids):
+        return jnp.asarray(np.asarray(self.table, np.int32))[ids]
+
+    def meta(self):
+        return {"n_in": len(self.table)}
+
+
+# ---------------------------------------------------------------- execution
+
+
+def apply_stages(stages: list[Stage], x: jax.Array) -> jax.Array:
+    """Traceable whole-pipeline application (what chaining inlines)."""
+    h = x
+    for s in stages:
+        h = s.apply(h)
+    return h
+
+
+def fuse_pipeline_stages(stages: list[Stage]) -> list[Stage]:
+    """Peephole: FusedMLP -> Reduce(argmax) becomes FusedClassify (argmax
+    runs inside the Pallas kernel)."""
+    out: list[Stage] = []
+    i = 0
+    while i < len(stages):
+        s = stages[i]
+        nxt = stages[i + 1] if i + 1 < len(stages) else None
+        if (isinstance(s, FusedMLP) and isinstance(nxt, Reduce)
+                and nxt.op == "argmax"):
+            out.append(FusedClassify(s.weights, s.biases))
+            i += 2
+            continue
+        out.append(s)
+        i += 1
+    return out
+
+
+def compile_stages(stages: list[Stage], *, fuse: bool = True
+                   ) -> Callable[[jax.Array], jax.Array]:
+    """JIT the whole stage list into one XLA program."""
+    run_list = fuse_pipeline_stages(stages) if fuse else list(stages)
+
+    @jax.jit
+    def run(x):
+        return apply_stages(run_list, x)
+
+    return run
+
+
+def stage_summary(stages: list[Stage]) -> dict:
+    """Aggregate stage metadata (params/macs/tables) for reports."""
+    params = macs = 0
+    for s in stages:
+        m = s.meta()
+        params += m.get("params", 0)
+        macs += m.get("macs", 0)
+    return {
+        "stages": [s.kind for s in stages],
+        "params": int(params),
+        "macs": int(macs),
+    }
+
+
+# ===================================================== shape-only stage specs
+#
+# The feasibility oracle runs before anything is trained, so it lowers a
+# *topology* into StageSpecs — same vocabulary, shapes only.
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    kind: str
+    n_in: int = 0
+    n_out: int = 0
+    params: int = 0
+    extra: tuple = ()                    # kind-specific (depth, bins, ...)
+
+    @property
+    def is_layer(self) -> bool:
+        """Does this spec occupy compute as one dense layer (CU rows)?"""
+        return self.kind in ("dense", "centroid_distance")
+
+
+def lower_topology(algorithm: str, topology: dict, *, form: str = "dense"
+                   ) -> list[StageSpec]:
+    """Topology dict -> abstract stage list for one backend family.
+
+    ``form="dense"``: Taurus/FPGA/TPU MapReduce lowering.
+    ``form="mat"``:   IIsy-style match-action-table lowering.
+    """
+    if form == "dense":
+        return _lower_dense(algorithm, topology)
+    if form == "mat":
+        return _lower_mat(algorithm, topology)
+    raise KeyError(form)
+
+
+def _dense_widths(topology: dict) -> list[int]:
+    return list(topology["widths"])
+
+
+def _lower_dense(algorithm: str, topology: dict) -> list[StageSpec]:
+    if algorithm in ("dnn", "logreg"):
+        w = _dense_widths(topology)
+        specs = [
+            StageSpec("dense", w[i], w[i + 1], w[i] * w[i + 1] + w[i + 1])
+            for i in range(len(w) - 1)
+        ]
+        return specs + [StageSpec("reduce")]
+    if algorithm == "svm":
+        f, c = topology["n_features"], topology["n_classes"]
+        return [StageSpec("dense", f, c, f * c + c), StageSpec("reduce")]
+    if algorithm == "kmeans":
+        f, k = topology["n_features"], topology["k"]
+        return [
+            StageSpec("centroid_distance", f, k, f * k),
+            StageSpec("reduce"),
+            StageSpec("label_map", k, k),
+        ]
+    if algorithm == "tree":
+        n = len(topology["nodes"])
+        depth = topology.get("depth", 8)
+        return [StageSpec("tree_traverse", 0, 0, n, extra=(depth,))]
+    raise KeyError(f"dense lowering does not map {algorithm}")
+
+
+def _lower_mat(algorithm: str, topology: dict, bins: int = MAT_BINS
+               ) -> list[StageSpec]:
+    if algorithm == "svm":
+        f, c = topology["n_features"], topology["n_classes"]
+        return [
+            StageSpec("quantize", f, f, extra=(bins,)),
+            StageSpec("lut_gather", f, c, f * bins * c, extra=(bins,)),
+            StageSpec("reduce"),
+        ]
+    if algorithm == "logreg":
+        w = _dense_widths(topology)
+        f, c = w[0], w[-1]
+        return [
+            StageSpec("quantize", f, f, extra=(bins,)),
+            StageSpec("lut_gather", f, c, f * bins * c, extra=(bins,)),
+            StageSpec("reduce"),
+        ]
+    if algorithm == "kmeans":
+        f, k = topology["n_features"], topology["k"]
+        return [
+            StageSpec("quantize", f, f, extra=(bins,)),
+            StageSpec("lut_gather", f, k, f * bins * k, extra=(bins,)),
+            StageSpec("reduce"),
+            StageSpec("label_map", k, k),
+        ]
+    if algorithm == "tree":
+        n = len(topology["nodes"])
+        depth = topology.get("depth", 8)
+        return [StageSpec("tree_traverse", 0, 0, n, extra=(depth,))]
+    if algorithm == "dnn":
+        # N2Net-style: each dense layer burns ~12 MATs; keep the dense
+        # shapes so the accounting can read layer count
+        w = _dense_widths(topology)
+        return [
+            StageSpec("dense", w[i], w[i + 1], w[i] * w[i + 1] + w[i + 1])
+            for i in range(len(w) - 1)
+        ] + [StageSpec("reduce")]
+    raise KeyError(f"MAT lowering does not map {algorithm}")
+
+
+def spec_layers(specs: list[StageSpec]) -> list[tuple[int, int]]:
+    """(n_in, n_out) of every compute layer — what Taurus maps to CU rows."""
+    return [(s.n_in, s.n_out) for s in specs if s.is_layer]
+
+
+def spec_params(specs: list[StageSpec]) -> int:
+    return sum(s.params for s in specs)

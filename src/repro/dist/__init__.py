@@ -1,0 +1,6 @@
+"""Distribution substrate: logical-axis sharding rules, gradient
+compression, and pipeline parallelism."""
+
+from repro.dist import compression, pipeline, sharding
+
+__all__ = ["compression", "pipeline", "sharding"]

@@ -1,0 +1,165 @@
+"""Logical-axis sharding rules and the ambient mesh context.
+
+Models annotate activations with *logical* axis names ("batch", "tp", ...);
+an ``AxisRules`` table maps each logical name to one or more *physical* mesh
+axes.  Resolution is mesh-aware: physical axes absent from the current mesh
+are dropped (the dim is replicated), and no physical axis is assigned twice
+in one spec — the standard GSPMD validity rules.
+
+``mesh_context(mesh, rules)`` installs the ambient (mesh, rules) pair;
+``shard(x, *logical)`` is a no-op outside a context, so model code runs
+unchanged on a single CPU device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ------------------------------------------------------------------- rules
+
+
+class AxisRules:
+    """Mapping logical axis name -> physical mesh axis (or tuple of them)."""
+
+    def __init__(self, table: dict[str, str | tuple[str, ...] | None]):
+        self.table = dict(table)
+
+    def resolve(self, logical: Sequence[str | None], mesh) -> P:
+        """Logical axes -> PartitionSpec valid on ``mesh``.
+
+        * logical names missing from the table resolve to None (replicated);
+        * physical axes not present in ``mesh.shape`` are dropped;
+        * a physical axis is used at most once per spec (first dim wins);
+        * trailing Nones are trimmed.
+        """
+        used: set[str] = set()
+        out: list = []
+        for name in logical:
+            entry = self.table.get(name) if name is not None else None
+            if entry is None:
+                out.append(None)
+                continue
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            kept = [
+                a for a in axes if a in mesh.shape and a not in used
+            ]
+            used.update(kept)
+            if not kept:
+                out.append(None)
+            elif len(kept) == 1:
+                out.append(kept[0])
+            else:
+                out.append(tuple(kept))
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+
+# Default: data-parallel batch (over pods too), 1D tensor parallelism on
+# "model", FSDP parameter sharding on "data".
+DEFAULT_RULES = AxisRules({
+    "batch": ("pod", "data"),
+    "kv_batch": ("pod", "data"),
+    "moe_group": ("pod", "data"),
+    "fsdp": "data",
+    "tp": "model",
+    "ep": "model",
+    "sp": None,          # sequence replicated by default
+    "vocab": "model",
+})
+
+# Prefill: long sequences — shard the sequence dim over the model axis so
+# attention working sets fit; weights stay as in DEFAULT_RULES.
+PREFILL_RULES = AxisRules({
+    **DEFAULT_RULES.table,
+    "sp": "model",
+})
+
+# Decode for >5B-param models: replicate the (tiny) activations, keep
+# weights 2D-sharded over (data, model); KV caches stay batch-sharded.
+DECODE_RULES = AxisRules({
+    **DEFAULT_RULES.table,
+    "batch": None,
+    "sp": None,
+    "fsdp": "data",
+})
+
+
+# ----------------------------------------------------------- mesh context
+
+_STATE = threading.local()
+
+
+def current_mesh():
+    return getattr(_STATE, "mesh", None)
+
+
+def current_rules() -> AxisRules:
+    return getattr(_STATE, "rules", None) or DEFAULT_RULES
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, rules: AxisRules = DEFAULT_RULES):
+    """Install (mesh, rules) as the ambient sharding context."""
+    prev = (current_mesh(), getattr(_STATE, "rules", None))
+    _STATE.mesh, _STATE.rules = mesh, rules
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh, _STATE.rules = prev
+
+
+def axis_size(logical: str) -> int:
+    """Product of mesh-axis sizes the logical axis maps to (1 if no mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    entry = current_rules().table.get(logical)
+    if entry is None:
+        return 1
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def _fit_spec(shape: tuple[int, ...], spec: P, mesh) -> P:
+    """Drop mesh axes that do not divide their dim (replicate instead)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        kept, prod = [], 1
+        for a in axes:
+            size = mesh.shape[a]
+            if dim % (prod * size) == 0:
+                kept.append(a)
+                prod *= size
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Constrain ``x`` to the resolved logical sharding (no-op w/o mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = current_rules().resolve(logical, mesh)
+    fitted = _fit_spec(x.shape, spec, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, fitted))

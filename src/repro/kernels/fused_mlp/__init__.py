@@ -1,2 +1,6 @@
-from repro.kernels.fused_mlp.ops import fused_mlp, fused_mlp_reference
+from repro.kernels.fused_mlp.ops import (
+    fused_mlp,
+    fused_mlp_classify,
+    fused_mlp_reference,
+)
 from repro.kernels.fused_mlp.kernel import vmem_bytes, LANE

@@ -44,6 +44,58 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, *, n_layers: int):
     o_ref[...] = h.astype(o_ref.dtype)
 
 
+def _classify_kernel(x_ref, w_ref, b_ref, o_ref, *, n_layers: int,
+                     num_classes: int):
+    """Fused MLP + argmax: class ids leave the kernel, logits never touch
+    HBM.  Padded lanes >= num_classes are masked to -inf before the argmax,
+    so the result equals argmax over the first num_classes logits."""
+    h = x_ref[...].astype(jnp.float32)
+    for l in range(n_layers):
+        w = w_ref[l].astype(jnp.float32)
+        h = jnp.dot(h, w, preferred_element_type=jnp.float32)
+        h = h + b_ref[l][None, :]
+        if l < n_layers - 1:
+            h = jnp.maximum(h, 0.0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+    h = jnp.where(lane < num_classes, h, -jnp.inf)
+    cls = jnp.argmax(h, axis=1).astype(jnp.int32)
+    o_ref[...] = jnp.broadcast_to(cls[:, None], o_ref.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_layers", "num_classes", "block_b",
+                              "interpret")
+)
+def fused_mlp_classify_padded(
+    x_pad: jax.Array,     # [B_pad, LANE]
+    w_stack: jax.Array,   # [L, LANE, LANE]
+    b_stack: jax.Array,   # [L, LANE]
+    *,
+    n_layers: int,
+    num_classes: int,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+) -> jax.Array:
+    """-> [B_pad, LANE] int32, class id broadcast across lanes (take col 0)."""
+    B = x_pad.shape[0]
+    assert B % block_b == 0
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        functools.partial(
+            _classify_kernel, n_layers=n_layers, num_classes=num_classes
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((n_layers, LANE, LANE), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_layers, LANE), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, LANE), jnp.int32),
+        interpret=interpret,
+    )(x_pad, w_stack, b_stack)
+
+
 def pad_to_lane(arr: jax.Array, axis: int) -> jax.Array:
     n = arr.shape[axis]
     pad = (-n) % LANE

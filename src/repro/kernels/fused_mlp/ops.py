@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.kernels.fused_mlp.kernel import (
     DEFAULT_BLOCK_B,
     LANE,
+    fused_mlp_classify_padded,
     fused_mlp_padded,
     pack_params,
     pad_to_lane,
@@ -28,6 +29,22 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _prepare(x, weights, interpret, block_b):
+    """Shared kernel preamble for both entry points.
+
+    -> None when the model is outside the fused kernel's envelope (wide
+    layers -> XLA reference path), else (x_pad, block_b, interpret)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, F = x.shape
+    if F > LANE or any(w.shape[1] > LANE for w in weights):
+        return None
+    block_b = min(block_b, max(8, B))
+    pad_b = (-B) % block_b
+    x_pad = pad_to_lane(jnp.pad(x, ((0, pad_b), (0, 0))), 1)
+    return x_pad, block_b, interpret
+
+
 def fused_mlp(
     x: jax.Array,
     weights: list[jax.Array],
@@ -37,23 +54,38 @@ def fused_mlp(
     interpret: bool | None = None,
 ) -> jax.Array:
     """x: [B, F] -> logits [B, num_classes]."""
-    if interpret is None:
-        interpret = not _on_tpu()
-    B, F = x.shape
-    C = weights[-1].shape[1]
-    if F > LANE or any(w.shape[1] > LANE for w in weights):
-        # wide model: out of the fused kernel's envelope -> XLA reference
+    prep = _prepare(x, weights, interpret, block_b)
+    if prep is None:
         return mlp_ref(x, weights, biases)
-
+    x_pad, block_b, interpret = prep
     w_stack, b_stack = pack_params(weights, biases)
-    block_b = min(block_b, max(8, B))
-    pad_b = (-B) % block_b
-    x_pad = pad_to_lane(jnp.pad(x, ((0, pad_b), (0, 0))), 1)
     out = fused_mlp_padded(
         x_pad, w_stack, b_stack,
         n_layers=len(weights), block_b=block_b, interpret=interpret,
     )
-    return out[:B, :C]
+    return out[:x.shape[0], :weights[-1].shape[1]]
+
+
+def fused_mlp_classify(
+    x: jax.Array,
+    weights: list[jax.Array],
+    biases: list[jax.Array],
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x: [B, F] -> class ids [B] int32, argmax fused into the kernel."""
+    prep = _prepare(x, weights, interpret, block_b)
+    if prep is None:
+        return jnp.argmax(mlp_ref(x, weights, biases), -1).astype(jnp.int32)
+    x_pad, block_b, interpret = prep
+    w_stack, b_stack = pack_params(weights, biases)
+    out = fused_mlp_classify_padded(
+        x_pad, w_stack, b_stack,
+        n_layers=len(weights), num_classes=weights[-1].shape[1],
+        block_b=block_b, interpret=interpret,
+    )
+    return out[:x.shape[0], 0]
 
 
 def fused_mlp_reference(x, weights, biases):

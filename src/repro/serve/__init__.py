@@ -5,3 +5,4 @@ from repro.serve.steps import (
     init_cache,
 )
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.packet_engine import PacketServeEngine, ServeStats

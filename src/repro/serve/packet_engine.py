@@ -1,0 +1,144 @@
+"""Batched packet-serving engine for generated data-plane pipelines.
+
+The LM ``ServeEngine`` (serve/engine.py) batches token requests into fixed
+decode slots; ``PacketServeEngine`` is its data-plane sibling: it
+micro-batches incoming packets into a FIXED batch shape and pushes them
+through ONE compiled program — a ``CompiledDag`` (whole-DAG jit from
+core.chaining) or a single ``Pipeline``.  The fixed shape means the XLA
+executable is compiled exactly once; ragged tails are zero-padded and the
+padding verdicts sliced off, so steady-state serving never re-traces.
+
+Typical use::
+
+    dag = chaining.compile_dag(ad > tc, result)
+    eng = PacketServeEngine(dag, feature_dim=7, max_batch=512)
+    eng.submit(packets)           # any [n, F] chunk, any n
+    verdicts = eng.flush()        # all pending verdicts, in arrival order
+    print(eng.stats())
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Iterable, Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeStats:
+    packets: int = 0
+    batches: int = 0
+    pad_packets: int = 0           # zero-rows added to fill the last batch
+    wall_s: float = 0.0
+
+    @property
+    def pkt_per_s(self) -> float:
+        return self.packets / max(self.wall_s, 1e-9)
+
+    def as_dict(self) -> dict:
+        return {
+            "packets": self.packets,
+            "batches": self.batches,
+            "pad_packets": self.pad_packets,
+            "wall_s": round(self.wall_s, 6),
+            "pkt_per_s": round(self.pkt_per_s, 1),
+        }
+
+
+class PacketServeEngine:
+    """Micro-batching front-end over one compiled pipeline/DAG callable."""
+
+    def __init__(self, pipeline: Callable[[np.ndarray], np.ndarray], *,
+                 feature_dim: int, max_batch: int = 256):
+        self.pipeline = pipeline
+        self.feature_dim = int(feature_dim)
+        self.max_batch = int(max_batch)
+        self._queue: collections.deque[np.ndarray] = collections.deque()
+        self._pending = 0
+        self.stats_ = ServeStats()
+        # warm the executable so steady-state timing excludes compilation
+        self.pipeline(np.zeros((self.max_batch, self.feature_dim),
+                               np.float32))
+
+    # ------------------------------------------------------------ intake
+
+    def submit(self, packets: np.ndarray) -> None:
+        """Enqueue a [n, F] chunk of packets (any n >= 1).
+
+        The chunk is copied: callers typically reuse one read buffer per
+        chunk, and the queue may hold rows across several flushes."""
+        pkts = np.array(packets, np.float32)   # always copies
+        if pkts.ndim == 1:
+            pkts = pkts[None, :]
+        if pkts.shape[1] != self.feature_dim:
+            raise ValueError(
+                f"expected {self.feature_dim} features, got {pkts.shape[1]}"
+            )
+        self._queue.append(pkts)
+        self._pending += len(pkts)
+
+    @property
+    def pending(self) -> int:
+        return self._pending
+
+    # ----------------------------------------------------------- serving
+
+    def _take(self, n: int) -> np.ndarray:
+        """Pop exactly n rows off the queue head (views where possible)."""
+        taken, got = [], 0
+        while got < n:
+            head = self._queue[0]
+            need = n - got
+            if len(head) <= need:
+                taken.append(self._queue.popleft())
+                got += len(head)
+            else:
+                taken.append(head[:need])
+                self._queue[0] = head[need:]   # view; no copy of the tail
+                got = n
+        self._pending -= n
+        return taken[0] if len(taken) == 1 else np.concatenate(taken, 0)
+
+    def _run_batch(self, batch: np.ndarray) -> np.ndarray:
+        n = len(batch)
+        pad = self.max_batch - n
+        if pad:
+            batch = np.concatenate(
+                [batch, np.zeros((pad, self.feature_dim), np.float32)]
+            )
+            self.stats_.pad_packets += pad
+        t0 = time.perf_counter()
+        verdicts = np.asarray(self.pipeline(batch))
+        self.stats_.wall_s += time.perf_counter() - t0
+        self.stats_.batches += 1
+        self.stats_.packets += n
+        return verdicts[:n]
+
+    def flush(self) -> np.ndarray:
+        """Serve everything pending; verdicts come back in arrival order."""
+        outs = []
+        while self._pending:
+            outs.append(
+                self._run_batch(self._take(min(self.max_batch,
+                                               self._pending)))
+            )
+        if not outs:
+            return np.zeros((0,), np.int32)
+        return outs[0] if len(outs) == 1 else np.concatenate(outs, 0)
+
+    def serve_stream(self, chunks: Iterable[np.ndarray]
+                     ) -> Iterator[np.ndarray]:
+        """Pull-through mode: yield verdicts per full micro-batch as the
+        input stream arrives (tail flushed at end)."""
+        for chunk in chunks:
+            self.submit(chunk)
+            while self._pending >= self.max_batch:
+                yield self._run_batch(self._take(self.max_batch))
+        if self._pending:
+            yield self.flush()
+
+    def stats(self) -> dict:
+        return self.stats_.as_dict()

@@ -1,0 +1,50 @@
+"""Auto-loaded (via PYTHONPATH=src) to install jax forward-compat
+polyfills before any user code runs — subprocess test scripts use modern
+jax names (jax.shard_map, jax.sharding.AxisType) before importing repro.
+
+Python imports only the FIRST sitecustomize on sys.path, so this module
+also chain-loads the next one (a venv's coverage bootstrap etc.) that it
+would otherwise shadow.  Failures are reported to stderr, never raised —
+interpreter startup must not break.
+"""
+
+import os
+import sys
+
+_SRC_DIR = os.path.dirname(os.path.abspath(__file__))
+
+# NB: this imports jax at interpreter startup for every process carrying
+# PYTHONPATH=src — the cost that buys subprocess scripts the modern jax
+# names before they import repro.  Set REPRO_SKIP_COMPAT=1 to opt out for
+# jax-free tooling.
+if os.environ.get("REPRO_SKIP_COMPAT") != "1":
+    try:
+        from repro import _compat  # noqa: F401
+    except Exception as e:  # pragma: no cover - never block startup
+        sys.stderr.write(
+            f"[repro] sitecustomize: jax compat polyfills not installed: "
+            f"{e!r}\n"
+        )
+
+
+def _chain_load_next_sitecustomize():
+    import importlib.machinery
+    import importlib.util
+
+    paths = [
+        p for p in sys.path
+        if os.path.abspath(p or os.getcwd()) != _SRC_DIR
+    ]
+    spec = importlib.machinery.PathFinder.find_spec("sitecustomize", paths)
+    if spec is None or spec.origin is None:
+        return
+    if os.path.abspath(spec.origin) == os.path.abspath(__file__):
+        return
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+
+
+try:
+    _chain_load_next_sitecustomize()
+except Exception as e:  # pragma: no cover
+    sys.stderr.write(f"[repro] sitecustomize: chain-load failed: {e!r}\n")

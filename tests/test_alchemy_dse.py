@@ -45,12 +45,16 @@ def test_dataloader_normalizes_paper_dict_form():
 
 
 def test_composition_operators():
+    from repro.core.alchemy import NATURAL_CHAINS_OK
+
     a, b, c = _model("a"), _model("b"), _model("c")
-    # NB: Python *chains* comparison operators (a > b > c == (a>b) and
-    # (b>c)), so multi-stage chains need parens — documented in alchemy.py.
-    seq = (a > b) > c
+    # natural chaining works where the interpreter supports the
+    # chained-comparison interception (CPython); parenthesized composition
+    # builds the same DAG everywhere
+    seq = (a > b > c) if NATURAL_CHAINS_OK else ((a > b) > c)
     assert isinstance(seq, Seq) and len(seq.children) == 3
     assert seq.describe() == "a > b > c"
+    assert ((a > b) > c).describe() == seq.describe()
     par = a | b
     assert isinstance(par, Par)
     mixed = a > (b | c)
