@@ -13,6 +13,7 @@ import traceback
 from benchmarks import (
     dag_throughput,
     dryrun_roofline,
+    dse_throughput,
     fig4_regret,
     fig6_reaction_time,
     fig7_kmeans_mats,
@@ -33,6 +34,8 @@ BENCHES = {
     "fig7": ("Figure 7: KMeans vs MATs", fig7_kmeans_mats.main),
     "dag": ("whole-DAG JIT vs interpreted chaining pkt/s",
             dag_throughput.main),
+    "dse": ("sequential vs batched DSE candidates/sec",
+            dse_throughput.main),
     "kernel": ("fused_mlp kernel roofline", kernel_roofline.main),
     "dryrun": ("dry-run roofline summary", dryrun_roofline.main),
 }

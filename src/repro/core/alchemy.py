@@ -430,6 +430,14 @@ class Platform:
     def check(self, algorithm: str, topology: dict) -> feas.FeasibilityReport:
         raise NotImplementedError
 
+    def check_batch(self, algorithm: str, topologies: list[dict]
+                    ) -> list[feas.FeasibilityReport]:
+        """Feasibility verdicts for a whole candidate batch.  Platforms with
+        a vectorizable resource model override this (Taurus reads the stage
+        metadata of the entire batch in one numpy pass); the base form just
+        maps ``check``."""
+        return [self.check(algorithm, t) for t in topologies]
+
     def supported_algorithms(self) -> list[str]:
         raise NotImplementedError
 
@@ -452,7 +460,14 @@ class TaurusPlatform(Platform):
         return ["dnn", "logreg", "svm", "kmeans"]
 
     def check(self, algorithm, topology) -> feas.FeasibilityReport:
-        est = self.model.estimate(algorithm, topology)
+        return self._verdict(self.model.estimate(algorithm, topology))
+
+    def check_batch(self, algorithm, topologies
+                    ) -> list[feas.FeasibilityReport]:
+        return [self._verdict(est)
+                for est in self.model.estimate_batch(algorithm, topologies)]
+
+    def _verdict(self, est: dict) -> feas.FeasibilityReport:
         budget_cu = self.model.total_cu
         budget_mu = self.model.total_mu
         min_thr = self.min_throughput_pps

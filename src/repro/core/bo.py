@@ -9,6 +9,13 @@ The objective is treated as a noisy black box: the BO never sees model
 internals, only (config -> metric, feasible) pairs — exactly the paper's
 formulation ("we cannot access other information than the output y ...
 given an input value x").
+
+``suggest_batch(k)`` is the population-parallel form the batched DSE racer
+consumes: q-EI approximated by greedy Kriging-believer fantasies — pick the
+cEI argmax, pretend its outcome equals the surrogate mean, refit, pick the
+next — so the k proposals spread instead of piling onto one optimum.  Both
+the batched and the sequential evaluation paths consume the same proposal
+stream, which is what makes them comparable run-for-run.
 """
 
 from __future__ import annotations
@@ -124,6 +131,56 @@ class ConstrainedBO:
         score = ei * p_feas
         return cands[int(np.argmax(score))]
 
+    def suggest_batch(self, k: int) -> list[dict]:
+        """Propose k configurations at once (q-EI via greedy fantasies).
+
+        Init phase: k uniform-random samples.  Too little feasible signal:
+        the top-k of the feasibility-probability ranking.  Otherwise the
+        Kriging-believer loop: argmax cEI, append (x, mu(x)) as a fantasy
+        observation, refit the surrogate, repeat — each refit sees the
+        fantasies, so successive picks explore away from each other.
+        """
+        if k <= 0:
+            return []
+        if len(self.history) < self.n_init:
+            return self.space.sample_n(self.rng, k)
+
+        feas = self.feasible_history
+        cands = self.space.sample_n(self.rng, self.n_cand)
+        Xc = self.space.encode_batch(cands)
+
+        p_feas = np.ones(len(cands))
+        if any(not o.feasible for o in self.history):
+            Xf = self.space.encode_batch([o.config for o in self.history])
+            yf = np.array([1.0 if o.feasible else 0.0 for o in self.history])
+            clf = RandomForest(seed=int(self.rng.integers(2**31)),
+                               **self.rf_kwargs).fit(Xf, yf)
+            p_feas = clf.predict_proba(Xc)
+
+        if len(feas) < 2:
+            score = p_feas + 1e-3 * self.rng.random(len(cands))
+            top = np.argsort(-score)[:k]
+            return [cands[int(i)] for i in top]
+
+        Xo = self.space.encode_batch([o.config for o in feas])
+        yo = np.array([o.value for o in feas])
+        X_fit, y_fit = Xo, yo
+        avail = np.ones(len(cands), bool)
+        picked: list[dict] = []
+        for _ in range(min(k, len(cands))):
+            rf = RandomForest(seed=int(self.rng.integers(2**31)),
+                              **self.rf_kwargs).fit(X_fit, y_fit)
+            mu, sigma = rf.predict(Xc)
+            ei = expected_improvement(mu, sigma, float(y_fit.max()))
+            score = np.where(avail, ei * p_feas, -np.inf)
+            j = int(np.argmax(score))
+            avail[j] = False
+            picked.append(cands[j])
+            # Kriging believer: fantasize the surrogate mean as the outcome
+            X_fit = np.concatenate([X_fit, Xc[j:j + 1]])
+            y_fit = np.concatenate([y_fit, mu[j:j + 1]])
+        return picked
+
     def observe(self, config: dict, value: float, feasible: bool,
                 info: dict | None = None) -> None:
         self.history.append(Observation(config, float(value), bool(feasible),
@@ -145,4 +202,27 @@ class ConstrainedBO:
             self.observe(cfg, value, feasible, info)
             if callback:
                 callback(it, self.history[-1])
+        return self.best
+
+    def run_batched(
+        self,
+        evaluate_batch: Callable[[list[dict]],
+                                 list[tuple[float, bool, dict]]],
+        budget: int,
+        *,
+        batch_size: int = 8,
+        callback: Callable[[int, Observation], None] | None = None,
+    ) -> Observation | None:
+        """Batched loop: propose ``batch_size`` configs per iteration and
+        hand them to ``evaluate_batch`` (which may train them in one vmapped
+        program).  Total evaluations still equal ``budget``."""
+        done = 0
+        while done < budget:
+            cfgs = self.suggest_batch(min(batch_size, budget - done))
+            for cfg, (value, feasible, info) in zip(
+                    cfgs, evaluate_batch(cfgs)):
+                self.observe(cfg, value, feasible, info)
+                if callback:
+                    callback(done, self.history[-1])
+                done += 1
         return self.best

@@ -8,11 +8,19 @@ BO-guided DSE, feasibility testing, and final code generation.
      pre-prune algorithms whose *minimal* configuration already violates the
      platform (the paper's "rule out as many algorithms as possible");
   3. race a ConstrainedBO per algorithm (the paper runs "multiple parallel
-     runs", footnote 1);  evaluate = train -> metric  x  platform.check ->
-     feasible;
+     runs", footnote 1) in interleaved rounds: each live racer proposes a
+     *batch* of K configurations per round (q-EI fantasies), the batch is
+     trained population-parallel (vmapped buckets for DNN/logreg, a worker
+     pool for the numpy algorithms, all behind the content-addressed
+     trained-candidate cache) and feasibility-checked in one pass
+     (``platform.check_batch`` reads stage metadata for the whole batch);
   4. pick the best feasible configuration across algorithms, codegen the
      pipeline (§3.3), attach regret curves (Fig. 4) and the per-iteration
      history.
+
+``eval_mode="sequential"`` trains the *same proposal stream* one config at
+a time through ``mlalgos.train`` — the reference path the batched engine is
+tested against (same best config under a fixed seed).
 
 Multi-model scheduling: each of the n scheduled models is allocated 1/n of
 the platform's resources during its own search (the paper's §5.1.3 split),
@@ -27,8 +35,6 @@ from __future__ import annotations
 import copy
 import dataclasses
 import time
-from typing import Callable
-
 import numpy as np
 
 from repro.core import codegen, mlalgos
@@ -36,6 +42,11 @@ from repro.core.alchemy import Model, Par, Platform, Seq
 from repro.core.bo import ConstrainedBO, Observation
 from repro.core.designspace import algorithm_space
 from repro.core.feasibility import FeasibilityReport
+from repro.core.traincache import (
+    GLOBAL_CACHE,
+    CandidateCache,
+    candidate_key,
+)
 
 # ------------------------------------------------------------------ result
 
@@ -100,27 +111,74 @@ def _metric_value(metric: str, trained: mlalgos.TrainedModel, data) -> float:
     )
 
 
-def make_evaluator(
+def evaluate_candidates(
     platform: Platform,
     algorithm: str,
     data,
     metric: str,
+    configs: list[dict],
     *,
     seed: int = 0,
-) -> Callable[[dict], tuple[float, bool, dict]]:
-    """The black box f: config -> (objective, feasible, info)  (§3.2.3)."""
+    mode: str = "batched",
+    cache: CandidateCache | None = GLOBAL_CACHE,
+    workers: int | None = None,
+) -> list[tuple[float, bool, dict]]:
+    """Evaluate a whole proposal batch — the black box f of §3.2.3, one
+    round at a time: resolve the trained-candidate cache, train the misses
+    (``mode="batched"``: vmapped buckets / worker pool;
+    ``mode="sequential"``: one ``mlalgos.train`` call each — the reference
+    path), then feasibility-check every topology in one ``check_batch``.
+    Results come back in proposal order.  ``cache``: the process-wide
+    ``GLOBAL_CACHE`` by default, any private ``CandidateCache``, or ``None``
+    to disable memoization."""
+    keys = [
+        candidate_key(algorithm, c, seed, data) if cache is not None else None
+        for c in configs
+    ]
+    trained: list[mlalgos.TrainedModel | None] = [
+        cache.get(k) if cache is not None else None for k in keys
+    ]
+    # unique misses (first occurrence trains; duplicates share the result)
+    miss_idx: list[int] = []
+    first_of: dict[str, int] = {}
+    for i, tm in enumerate(trained):
+        if tm is not None:
+            continue
+        k = keys[i]
+        if k is not None:
+            if k in first_of:
+                continue
+            first_of[k] = i
+        miss_idx.append(i)
 
-    def evaluate(config: dict) -> tuple[float, bool, dict]:
-        trained = mlalgos.train(algorithm, data, config, seed=seed)
-        rep = platform.check(algorithm, trained.topology)
-        value = _metric_value(metric, trained, data)
-        return value, rep.feasible, {
-            "trained": trained,
-            "report": rep,
-            "params": trained.param_count,
-        }
+    miss_cfgs = [configs[i] for i in miss_idx]
+    if mode == "sequential":
+        fresh = [mlalgos.train(algorithm, data, c, seed=seed)
+                 for c in miss_cfgs]
+    elif mode == "batched":
+        fresh = mlalgos.train_batch(algorithm, data, miss_cfgs, seed=seed,
+                                    workers=workers)
+    else:
+        raise KeyError(f"eval_mode {mode!r} (batched|sequential)")
+    for i, tm in zip(miss_idx, fresh):
+        trained[i] = tm
+        if cache is not None:
+            cache.put(keys[i], tm)
+    for i, tm in enumerate(trained):
+        if tm is None:  # in-batch duplicate of a fresh miss
+            trained[i] = trained[first_of[keys[i]]]
 
-    return evaluate
+    reports = platform.check_batch(
+        algorithm, [tm.topology for tm in trained]
+    )
+    return [
+        (
+            _metric_value(metric, tm, data),
+            rep.feasible,
+            {"trained": tm, "report": rep, "params": tm.param_count},
+        )
+        for tm, rep in zip(trained, reports)
+    ]
 
 
 def _min_config(algorithm: str, space) -> dict:
@@ -198,6 +256,17 @@ def _probe_topology(algo: str, cfg: dict, data) -> dict:
 # ----------------------------------------------------------------- search
 
 
+@dataclasses.dataclass
+class _Racer:
+    """One algorithm's lane in the round-interleaved BO race."""
+
+    algorithm: str
+    bo: ConstrainedBO
+    pending_seeds: list[dict]
+    remaining: int
+    iteration: int = 0
+
+
 def search_model(
     platform: Platform,
     model: Model,
@@ -207,8 +276,19 @@ def search_model(
     seed: int = 0,
     max_neurons: int = 64,
     callback=None,
+    eval_mode: str = "batched",
+    batch_k: int = 8,
+    cache: CandidateCache | None = GLOBAL_CACHE,
+    workers: int | None = None,
 ) -> ModelResult:
-    """Run the full DSE for one Model on one platform."""
+    """Run the full DSE for one Model on one platform.
+
+    Racers are interleaved round-robin; each round a live racer proposes up
+    to ``batch_k`` configs (``suggest_batch``) which are evaluated together
+    by ``evaluate_candidates``.  Per-algorithm budgets and the small-model
+    seed anchors match the sequential engine eval-for-eval, so regret
+    curves remain comparable across modes.
+    """
     t0 = time.perf_counter()
     data = model.data()
     metric = model.objective
@@ -219,36 +299,55 @@ def search_model(
             f"no candidate algorithm is feasible on {platform.kind}: {dropped}"
         )
 
-    best: tuple[float, str, Observation, ConstrainedBO] | None = None
-    histories: list[Observation] = []
-    regret: list[float] = []
-    # race the algorithms (paper: parallel runs; here round-robin budget)
+    racers: list[_Racer] = []
     for ai, algo in enumerate(algorithms):
         space = algorithm_space(
             algo, n_features=data.num_features,
             num_classes=data.num_classes, max_neurons=max_neurons,
         )
         bo = ConstrainedBO(space, n_init=n_init, seed=seed + 17 * ai)
-        evaluate = make_evaluator(platform, algo, data, metric, seed=seed)
         algo_budget = max(4, budget // len(algorithms))
-        # seed the history with small-model anchors (count against budget)
-        for sc in _seed_configs(algo, space)[:max(2, algo_budget // 4)]:
-            value, feasible, info = evaluate(sc)
-            bo.observe(sc, value, feasible, info)
-            algo_budget -= 1
-        bo.run(
-            evaluate, max(algo_budget, 2),
-            callback=(lambda it, obs: callback(algo, it, obs))
-            if callback else None,
-        )
-        histories += bo.history
-        prev = regret[-1] if regret else -np.inf
-        for o in bo.history:
-            if o.feasible and np.isfinite(o.value):
-                prev = max(prev, o.value)
-            regret.append(prev)
-        if bo.best is not None and (best is None or bo.best.value > best[0]):
-            best = (bo.best.value, algo, bo.best, bo)
+        # small-model anchors seed the history (count against the budget)
+        seeds = _seed_configs(algo, space)[:max(2, algo_budget // 4)]
+        racers.append(_Racer(
+            algorithm=algo, bo=bo, pending_seeds=seeds,
+            remaining=len(seeds) + max(algo_budget - len(seeds), 2),
+        ))
+
+    histories: list[Observation] = []
+    regret: list[float] = []
+    incumbent = -np.inf
+    while any(r.remaining > 0 for r in racers):
+        for r in racers:
+            if r.remaining <= 0:
+                continue
+            k = min(batch_k, r.remaining)
+            if r.pending_seeds:
+                props = r.pending_seeds[:k]
+                r.pending_seeds = r.pending_seeds[k:]
+            else:
+                props = r.bo.suggest_batch(k)
+            outs = evaluate_candidates(
+                platform, r.algorithm, data, metric, props, seed=seed,
+                mode=eval_mode, cache=cache, workers=workers,
+            )
+            for cfg, (value, feasible, info) in zip(props, outs):
+                r.bo.observe(cfg, value, feasible, info)
+                obs = r.bo.history[-1]
+                histories.append(obs)
+                if feasible and np.isfinite(value):
+                    incumbent = max(incumbent, value)
+                regret.append(incumbent)
+                if callback:
+                    callback(r.algorithm, r.iteration, obs)
+                r.iteration += 1
+            r.remaining -= len(props)
+
+    best: tuple[float, str, Observation] | None = None
+    for r in racers:
+        b = r.bo.best
+        if b is not None and (best is None or b.value > best[0]):
+            best = (b.value, r.algorithm, b)
 
     if best is None:
         raise RuntimeError(
@@ -257,7 +356,7 @@ def search_model(
             f" / {platform.resources})"
         )
 
-    value, algo, obs, _ = best
+    value, algo, obs = best
     trained = obs.info["trained"]
     report = obs.info["report"]
     pipeline = codegen.generate_pipeline(
@@ -315,6 +414,10 @@ def generate(
     seed: int = 0,
     max_neurons: int = 64,
     callback=None,
+    eval_mode: str = "batched",
+    batch_k: int = 8,
+    cache: CandidateCache | None = GLOBAL_CACHE,
+    workers: int | None = None,
 ) -> GenerationResult:
     """The paper's ``homunculus.generate(platform)``."""
     assert platform.scheduled is not None, "call platform.schedule(...) first"
@@ -331,6 +434,8 @@ def generate(
         res = search_model(
             sub, m, budget=budget, n_init=n_init, seed=seed,
             max_neurons=max_neurons, callback=callback,
+            eval_mode=eval_mode, batch_k=batch_k, cache=cache,
+            workers=workers,
         )
         results[m.name] = res
     # alias results for duplicate leaf names (chained copies)

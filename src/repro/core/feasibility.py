@@ -102,6 +102,8 @@ class TaurusModel:
         return self.rows * self.cols
 
     def _layer_costs(self, layers: list[tuple[int, int]], ii: int):
+        # NB: estimate_batch vectorizes these exact formulas — keep the two
+        # in lockstep (tests/test_dse_parallel.py pins check == check_batch)
         cus = mus = 0
         stages = 0
         for n_in, n_out in layers:
@@ -146,6 +148,59 @@ class TaurusModel:
                 "throughput_pps": self.clock_ghz * 1e9 / ii,
             })
         return {"options": options}
+
+    def estimate_batch(self, algorithm: str, topologies: list[dict]
+                       ) -> list[dict]:
+        """``estimate`` for a whole candidate batch in one numpy pass.
+
+        Every topology is lowered to stage specs once; the per-layer
+        CU/MU/stage costs for ALL candidates and ALL initiation intervals
+        are then computed on padded [B, L] arrays (padding masked out, so a
+        phantom layer never charges the max(1, ...) floor).  Exactly
+        equivalent to mapping ``estimate`` (tested), just without the
+        per-candidate Python re-derivation.
+        """
+        from repro.core.stageir import spec_layers
+
+        if algorithm == "tree" or not topologies:
+            return [self.estimate(algorithm, t) for t in topologies]
+        import numpy as np
+
+        layer_lists = [
+            spec_layers(_dense_specs(algorithm, t)) for t in topologies
+        ]
+        B = len(layer_lists)
+        L = max(len(ls) for ls in layer_lists)
+        n_in = np.zeros((B, L), np.int64)
+        n_out = np.zeros((B, L), np.int64)
+        mask = np.zeros((B, L), bool)
+        for b, ls in enumerate(layer_lists):
+            for i, (fi, fo) in enumerate(ls):
+                n_in[b, i], n_out[b, i], mask[b, i] = fi, fo, True
+        macs = n_in * n_out
+        words = macs + 3 * n_out          # weights + bias + dbl-buffered act
+        stages = np.where(
+            mask,
+            1 + np.ceil(np.log2(np.maximum(n_in, 2))).astype(np.int64),
+            0,
+        ).sum(1)
+        out: list[dict] = [{"options": []} for _ in range(B)]
+        for ii in range(1, self.max_ii + 1):
+            cus = np.where(
+                mask, np.maximum(1, -(-macs // (self.vec * ii))), 0
+            ).sum(1)
+            mus = np.where(
+                mask, np.maximum(1, -(-words // self.mu_words)), 0
+            ).sum(1)
+            for b in range(B):
+                out[b]["options"].append({
+                    "ii": ii,
+                    "cu": int(cus[b]),
+                    "mu": int(mus[b]),
+                    "latency_ns": int(stages[b]) / self.clock_ghz,
+                    "throughput_pps": self.clock_ghz * 1e9 / ii,
+                })
+        return out
 
 
 # ----------------------------------------------------------------- MAT/PISA

@@ -30,9 +30,16 @@ from repro.data.netdata import Dataset
 
 def f1_score(y_true: np.ndarray, y_pred: np.ndarray, *, num_classes: int = 2,
              average: str = "auto") -> float:
-    """Binary F1 (positive class = 1) or macro F1 for multiclass."""
+    """Binary F1 (positive class = 1) or macro F1 for multiclass.
+
+    Degenerate inputs score 0.0 (sklearn's zero_division=0 convention):
+    empty arrays, an empty positive class, or a class absent from both
+    y_true and y_pred all contribute 0 rather than NaN.
+    """
     y_true = np.asarray(y_true)
     y_pred = np.asarray(y_pred)
+    if y_true.size == 0:
+        return 0.0
     if average == "auto":
         average = "binary" if num_classes == 2 else "macro"
     classes = [1] if average == "binary" else list(range(num_classes))
@@ -48,7 +55,10 @@ def f1_score(y_true: np.ndarray, y_pred: np.ndarray, *, num_classes: int = 2,
 
 
 def accuracy(y_true, y_pred) -> float:
-    return float(np.mean(np.asarray(y_true) == np.asarray(y_pred)))
+    y_true = np.asarray(y_true)
+    if y_true.size == 0:
+        return 0.0
+    return float(np.mean(y_true == np.asarray(y_pred)))
 
 
 def v_measure(labels: np.ndarray, clusters: np.ndarray) -> float:
@@ -56,6 +66,8 @@ def v_measure(labels: np.ndarray, clusters: np.ndarray) -> float:
     labels = np.asarray(labels)
     clusters = np.asarray(clusters)
     n = len(labels)
+    if n == 0:
+        return 0.0
     ls, cs = np.unique(labels), np.unique(clusters)
     cont = np.zeros((len(ls), len(cs)))
     for i, l in enumerate(ls):
@@ -137,9 +149,14 @@ def mlp_forward(params: list[dict], x: jax.Array) -> jax.Array:
     return h
 
 
-@partial(jax.jit, static_argnames=("nsteps", "batch", "l2"))
-def _mlp_train_loop(params, x, y, key, lr, *, nsteps: int, batch: int,
+def _mlp_train_body(params, masks, x, y, key, lr, *, nsteps: int, batch: int,
                     l2: float = 1e-4):
+    """Adam training loop shared by the sequential and the vmapped-bucket
+    trainers.  ``masks`` zeroes gradients of padded entries: zero-padded
+    params with masked grads never move, so a padded lane of a vmapped
+    bucket computes the same math as an unpadded sequential run (padded
+    units output relu(0)=0 and their outgoing weights stay 0, contributing
+    exact +0.0 terms to every dot product)."""
     n = x.shape[0]
 
     def loss_fn(p, xb, yb):
@@ -158,6 +175,7 @@ def _mlp_train_loop(params, x, y, key, lr, *, nsteps: int, batch: int,
         key, kb = jax.random.split(key)
         idx = jax.random.randint(kb, (batch,), 0, n)
         g = jax.grad(loss_fn)(p, x[idx], y[idx])
+        g = jax.tree.map(jnp.multiply, g, masks)
         t = i.astype(jnp.float32) + 1.0
         m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
         v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
@@ -172,6 +190,51 @@ def _mlp_train_loop(params, x, y, key, lr, *, nsteps: int, batch: int,
         step, (params, m, v, key), jnp.arange(nsteps)
     )
     return params
+
+
+@partial(jax.jit, static_argnames=("nsteps", "batch", "l2"))
+def _mlp_train_loop(params, x, y, key, lr, *, nsteps: int, batch: int,
+                    l2: float = 1e-4):
+    masks = jax.tree.map(jnp.ones_like, params)
+    return _mlp_train_body(params, masks, x, y, key, lr,
+                           nsteps=nsteps, batch=batch, l2=l2)
+
+
+@partial(jax.jit, static_argnames=("nsteps", "batch", "l2"))
+def _mlp_train_bucket(params, masks, x, y, key, lrs, *, nsteps: int,
+                      batch: int, l2: float = 1e-4):
+    """One jitted program training a whole bucket of same-padded-shape
+    candidates: vmap over stacked params/masks/learning rates, the dataset
+    and the minibatch RNG stream shared across lanes (exactly what each
+    sequential run would draw)."""
+
+    def one(p, msk, lr):
+        return _mlp_train_body(p, msk, x, y, key, lr,
+                               nsteps=nsteps, batch=batch, l2=l2)
+
+    return jax.vmap(one)(params, masks, lrs)
+
+
+def _finalize_dnn(params: list[dict], widths: list[int], num_classes: int,
+                  config: dict) -> TrainedModel:
+    """Package trained numpy MLP params as a TrainedModel (shared by the
+    sequential and the vmapped-batch trainers, so both emit identical
+    artifacts)."""
+    params = jax.tree.map(np.asarray, params)
+
+    def predict(X):
+        logits = mlp_forward(
+            [{k: jnp.asarray(v) for k, v in l.items()} for l in params],
+            jnp.asarray(X, jnp.float32),
+        )
+        return np.asarray(jnp.argmax(logits, -1), np.int32)
+
+    n_params = sum(int(l["w"].size + l["b"].size) for l in params)
+    return TrainedModel(
+        "dnn",
+        {"widths": widths, "act": "relu"},
+        params, predict, n_params, num_classes, config,
+    )
 
 
 def train_dnn(
@@ -195,21 +258,145 @@ def train_dnn(
         params, x, y, jax.random.PRNGKey(seed + 1), jnp.float32(lr),
         nsteps=int(nsteps), batch=batch,
     )
-    params = jax.tree.map(np.asarray, params)
+    return _finalize_dnn(params, widths, C, config or {"hidden": hidden})
 
-    def predict(X):
-        logits = mlp_forward(
-            [{k: jnp.asarray(v) for k, v in l.items()} for l in params],
-            jnp.asarray(X, jnp.float32),
+
+# ------------------------------------------- population-parallel DNN training
+#
+# The DSE engine (core.dse) proposes a *batch* of K configurations per BO
+# iteration.  DNN/logreg candidates are bucketed by (layer count, minibatch
+# size, step count); within a bucket every layer is zero-padded to the
+# bucket-max width, gradients are masked to the real entries, and ONE
+# jitted vmap trains the whole bucket.  Each candidate is initialized from
+# the same PRNG stream as train_dnn, so a bucket lane reproduces the
+# sequential trainer's result for that config.
+
+
+def _dnn_hidden(config: dict) -> list[int]:
+    """Hidden widths a DSE config denotes (mirrors train()'s dnn branch)."""
+    return [config[f"h{i}"] for i in range(int(config.get("n_layers", 0)))
+            if config.get(f"h{i}", 0) > 0]
+
+
+def _dnn_job(data: Dataset, config: dict, algorithm: str
+             ) -> tuple[list[int], float, int, int]:
+    """(widths, lr, batch, nsteps) exactly as the sequential path computes
+    them — the bucket key and the cache key both hang off these.  The
+    defaults here MUST mirror train()'s dnn branch / train_logreg /
+    train_dnn (drift breaks the batched==sequential contract, caught by
+    tests/test_dse_parallel.py)."""
+    F, C = data.num_features, data.num_classes
+    if algorithm == "logreg":
+        widths = [F, C]
+        lr, batch, epochs = float(config.get("lr", 0.1)), 256, 30
+    else:
+        widths = [F] + _dnn_hidden(config) + [C]
+        lr = float(config.get("lr", 3e-3))
+        batch = int(config.get("batch", 256))
+        epochs = int(config.get("epochs", 12))
+    nsteps = max(1, epochs * len(data.train_x) // batch)
+    return widths, lr, batch, int(nsteps)
+
+
+def _pad_mlp_params(params: list[dict], widths: list[int],
+                    padded: list[int]) -> tuple[list[dict], list[dict]]:
+    """Zero-pad per-layer params into the bucket shape + matching 0/1 masks."""
+    pp, mm = [], []
+    for i in range(len(padded) - 1):
+        w = np.zeros((padded[i], padded[i + 1]), np.float32)
+        b = np.zeros((padded[i + 1],), np.float32)
+        mw, mb = np.zeros_like(w), np.zeros_like(b)
+        w[: widths[i], : widths[i + 1]] = np.asarray(params[i]["w"])
+        b[: widths[i + 1]] = np.asarray(params[i]["b"])
+        mw[: widths[i], : widths[i + 1]] = 1.0
+        mb[: widths[i + 1]] = 1.0
+        pp.append({"w": w, "b": b})
+        mm.append({"w": mw, "b": mb})
+    return pp, mm
+
+
+def train_dnn_batch(data: Dataset, configs: list[dict], *, seed: int = 0,
+                    algorithm: str = "dnn") -> list[TrainedModel]:
+    """Train many DNN/logreg candidates with one vmapped run per bucket."""
+    out: list[TrainedModel | None] = [None] * len(configs)
+    jobs = [(ci, *_dnn_job(data, cfg, algorithm)) for ci, cfg in
+            enumerate(configs)]
+    buckets: dict[tuple, list[tuple]] = {}
+    for job in jobs:
+        ci, widths, lr, batch, nsteps = job
+        buckets.setdefault((len(widths), batch, nsteps), []).append(job)
+
+    x = jnp.asarray(data.train_x)
+    y = jnp.asarray(data.train_y)
+    C = data.num_classes
+    for (_, batch, nsteps), js in buckets.items():
+        padded = [max(j[1][i] for j in js) for i in range(len(js[0][1]))]
+        inits, masks = [], []
+        for _, widths, _, _, _ in js:
+            p = _mlp_init(jax.random.PRNGKey(seed), widths)
+            pp, mm = _pad_mlp_params(p, widths, padded)
+            inits.append(pp)
+            masks.append(mm)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
+        mstacked = jax.tree.map(lambda *xs: jnp.stack(xs), *masks)
+        lrs = jnp.asarray([j[2] for j in js], jnp.float32)
+        trained = _mlp_train_bucket(
+            stacked, mstacked, x, y, jax.random.PRNGKey(seed + 1), lrs,
+            nsteps=nsteps, batch=batch,
         )
-        return np.asarray(jnp.argmax(logits, -1), np.int32)
+        trained = jax.tree.map(np.asarray, trained)
+        for lane, (ci, widths, _, _, _) in enumerate(js):
+            p = [
+                {"w": layer["w"][lane][: widths[i], : widths[i + 1]].copy(),
+                 "b": layer["b"][lane][: widths[i + 1]].copy()}
+                for i, layer in enumerate(trained)
+            ]
+            tm = _finalize_dnn(p, widths, C, dict(configs[ci]))
+            tm.algorithm = algorithm
+            out[ci] = tm
+    return out
 
-    n_params = sum(int(l["w"].size + l["b"].size) for l in params)
-    return TrainedModel(
-        "dnn",
-        {"widths": widths, "act": "relu"},
-        params, predict, n_params, C, config or {"hidden": hidden},
-    )
+
+def train_batch(algorithm: str, data: Dataset, configs: list[dict], *,
+                seed: int = 0, workers: int | None = None
+                ) -> list[TrainedModel]:
+    """Population-parallel ``train``: vmapped buckets for dnn/logreg, a
+    thread pool fanning out the numpy algorithms."""
+    if not configs:
+        return []
+    if algorithm in ("dnn", "logreg"):
+        return train_dnn_batch(data, configs, seed=seed, algorithm=algorithm)
+    if len(configs) == 1:
+        return [train(algorithm, data, configs[0], seed=seed)]
+    import concurrent.futures
+    import os
+
+    workers = workers or min(8, os.cpu_count() or 1, len(configs))
+    with concurrent.futures.ThreadPoolExecutor(workers) as pool:
+        return list(pool.map(
+            lambda cfg: train(algorithm, data, cfg, seed=seed), configs
+        ))
+
+
+def effective_config(algorithm: str, config: dict, data: Dataset) -> dict:
+    """The subset of a DSE config that actually reaches ``train`` — the
+    content half of the trained-candidate cache key.  Two configs with the
+    same effective form train to the same model (e.g. dnn h_i beyond
+    n_layers are dead parameters)."""
+    if algorithm == "dnn":
+        widths, lr, batch, nsteps = _dnn_job(data, config, algorithm)
+        return {"widths": widths, "lr": lr, "batch": batch, "nsteps": nsteps}
+    if algorithm == "logreg":
+        return {"lr": float(config.get("lr", 0.1))}
+    if algorithm == "kmeans":
+        n_feat = int(config.get("n_features", data.num_features))
+        return {"k": int(config["k"]),
+                "n_features": min(n_feat, data.num_features)}
+    if algorithm == "svm":
+        return {"c_reg": float(config.get("c_reg", 1.0))}
+    if algorithm == "tree":
+        return {"max_depth": int(config.get("max_depth", 6))}
+    raise KeyError(algorithm)
 
 
 # ----------------------------------------------------------------- KMeans
@@ -386,8 +573,7 @@ def train(algorithm: str, data: Dataset, config: dict, *, seed: int = 0
           ) -> TrainedModel:
     """Uniform entry point the DSE loop calls with a BO-suggested config."""
     if algorithm == "dnn":
-        hidden = [config[f"h{i}"] for i in range(config["n_layers"])
-                  if config.get(f"h{i}", 0) > 0]
+        hidden = _dnn_hidden(config)
         return train_dnn(
             data, hidden=hidden, lr=config.get("lr", 3e-3),
             batch=config.get("batch", 256), epochs=config.get("epochs", 12),

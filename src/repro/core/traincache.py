@@ -1,0 +1,96 @@
+"""Content-addressed trained-candidate cache for the DSE engine.
+
+The Homunculus search races one ConstrainedBO per candidate algorithm and is
+re-entered by every benchmark/example/re-run; without memoization the same
+(algorithm, config, seed, dataset) quadruple is retrained over and over —
+seed-config anchors alone are retrained once per racer.  The cache key is
+*content-addressed*:
+
+  * the dataset contributes a sha1 over its training split
+    (``Dataset.fingerprint``), not an object id, so two loaders producing
+    identical arrays share entries;
+  * the config contributes only its *effective* form
+    (``mlalgos.effective_config``) — the parameters that actually reach
+    ``train`` — so e.g. two DNN configs differing in dead ``h_i`` slots
+    (beyond ``n_layers``) hit the same entry.
+
+Feasibility reports are NOT cached: they depend on the platform, which the
+multi-model scheduler resplits per search (§5.1.3), so they are recomputed
+from the cached topology instead.
+
+The key deliberately does NOT include the evaluation mode: batched and
+sequential training compute the same job (that equivalence is its own
+tested contract), so either may serve the other's hits.  When *comparing*
+the two modes, hand each run a private ``CandidateCache()`` — with the
+shared default the second run would replay the first run's models and the
+comparison would be vacuous (see tests/test_dse_parallel.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+from repro.core import mlalgos
+from repro.data.netdata import Dataset
+
+
+def candidate_key(algorithm: str, config: dict, seed: int,
+                  data: Dataset) -> str:
+    """Stable content hash of one training job."""
+    eff = mlalgos.effective_config(algorithm, config, data)
+    blob = json.dumps(
+        [algorithm, int(seed), data.fingerprint(),
+         {k: repr(v) for k, v in sorted(eff.items())}],
+        sort_keys=True,
+    )
+    return hashlib.sha1(blob.encode()).hexdigest()
+
+
+@dataclasses.dataclass
+class CandidateCache:
+    """In-process trained-model store with hit/miss accounting.
+
+    LRU-bounded: ``max_entries`` caps how many TrainedModels (full weight
+    arrays) stay resident, so a long-lived process racing many datasets /
+    seeds does not grow without bound.  The default comfortably holds
+    several full ``generate()`` searches.
+    """
+
+    _store: dict[str, mlalgos.TrainedModel] = dataclasses.field(
+        default_factory=dict)
+    max_entries: int = 1024
+    hits: int = 0
+    misses: int = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(self, key: str) -> mlalgos.TrainedModel | None:
+        hit = self._store.get(key)
+        if hit is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+            self._store[key] = self._store.pop(key)   # mark most-recent
+        return hit
+
+    def put(self, key: str, trained: mlalgos.TrainedModel) -> None:
+        self._store.pop(key, None)
+        self._store[key] = trained
+        while len(self._store) > self.max_entries:    # evict least-recent
+            self._store.pop(next(iter(self._store)))
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.hits = self.misses = 0
+
+    def stats(self) -> dict:
+        return {"entries": len(self._store), "hits": self.hits,
+                "misses": self.misses}
+
+
+# process-wide default: racing BOs across algorithms, repeated generate()
+# calls, and the benchmarks all share it unless handed a private cache
+GLOBAL_CACHE = CandidateCache()

@@ -44,6 +44,24 @@ class Dataset:
     def num_features(self) -> int:
         return self.train_x.shape[1]
 
+    def fingerprint(self) -> str:
+        """Content hash of what training sees (train split + class count) —
+        the dataset half of the trained-candidate cache key.  Computed once
+        and memoized on the instance; arrays are treated as immutable after
+        construction (everything in this repo copies instead of mutating)."""
+        if getattr(self, "_fingerprint", None) is None:
+            import hashlib
+
+            h = hashlib.sha1()
+            for a in (self.train_x, self.train_y):
+                a = np.ascontiguousarray(a)
+                h.update(str(a.shape).encode())
+                h.update(str(a.dtype).encode())
+                h.update(a.tobytes())
+            h.update(str(self.num_classes).encode())
+            self._fingerprint = h.hexdigest()
+        return self._fingerprint
+
     def subset_features(self, idx: list[int]) -> "Dataset":
         return Dataset(
             name=f"{self.name}[{len(idx)}f]",

@@ -1,0 +1,105 @@
+"""Edge cases for the Table-2 / Fig-7 metrics (f1_score, v_measure).
+
+The DSE loop feeds these metrics whatever a candidate model emits — a
+degenerate model collapsing to one class, an empty evaluation slice, a
+class missing from both y_true and y_pred — and a NaN here poisons the BO's
+regret bookkeeping silently (NaN propagates through max()).  Degenerate
+inputs must score 0.0, never divide by zero.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mlalgos import accuracy, evaluate_metric, f1_score, v_measure
+
+HSET = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------- f1_score
+
+
+def test_f1_empty_arrays_is_zero_not_nan():
+    assert f1_score(np.array([]), np.array([]), num_classes=2) == 0.0
+    assert accuracy(np.array([]), np.array([])) == 0.0
+    assert evaluate_metric("f1", [], [], num_classes=2) == 0.0
+
+
+def test_f1_empty_positive_class():
+    # binary F1 scores class 1; no positives anywhere -> 0, not 0/0
+    y = np.zeros(8, np.int32)
+    assert f1_score(y, y, num_classes=2) == 0.0
+    # positives exist in y_true but the model never predicts them
+    y_true = np.array([0, 0, 1, 1])
+    assert f1_score(y_true, np.zeros(4, np.int32), num_classes=2) == 0.0
+    # model predicts positives that never occur
+    assert f1_score(np.zeros(4, np.int32), y_true, num_classes=2) == 0.0
+
+
+def test_f1_all_one_class_predictions_multiclass():
+    y_true = np.array([0, 1, 2, 0, 1, 2])
+    y_pred = np.zeros(6, np.int32)
+    got = f1_score(y_true, y_pred, num_classes=3)
+    # class 0: prec 2/6, rec 2/2 -> f1 = 0.5; classes 1, 2: 0
+    assert got == pytest.approx(0.5 / 3)
+
+
+def test_f1_multiclass_with_missing_class():
+    # num_classes=4 but class 3 absent from y_true AND y_pred: it must
+    # contribute 0 to the macro mean (sklearn zero_division=0), not NaN
+    y_true = np.array([0, 1, 2, 0, 1, 2])
+    y_pred = np.array([0, 1, 2, 0, 1, 2])
+    assert f1_score(y_true, y_pred, num_classes=4) == pytest.approx(3 / 4)
+    assert f1_score(y_true, y_pred, num_classes=3) == pytest.approx(1.0)
+
+
+def test_f1_perfect_binary():
+    y = np.array([0, 1, 1, 0, 1])
+    assert f1_score(y, y, num_classes=2) == 1.0
+
+
+@given(n=st.integers(1, 40), seed=st.integers(0, 2**31))
+@HSET
+def test_f1_always_finite_in_unit_interval(n, seed):
+    rng = np.random.default_rng(seed)
+    for c in (2, 3, 5):
+        y_true = rng.integers(0, c, n)
+        y_pred = rng.integers(0, c, n)
+        got = f1_score(y_true, y_pred, num_classes=c)
+        assert np.isfinite(got) and 0.0 <= got <= 1.0
+
+
+# --------------------------------------------------------------- v_measure
+
+
+def test_v_measure_empty_is_zero_not_nan():
+    assert v_measure(np.array([]), np.array([])) == 0.0
+
+
+def test_v_measure_single_cluster_and_single_class():
+    labels = np.array([0, 0, 1, 1])
+    # everything in one cluster: homogeneity collapses -> 0
+    assert v_measure(labels, np.zeros(4, np.int32)) == 0.0
+    # one label class, clusters split it: completeness collapses -> 0
+    assert v_measure(np.zeros(4, np.int32), np.array([0, 1, 0, 1])) == 0.0
+    # one class AND one cluster: both entropies vanish -> perfect (1.0)
+    assert v_measure(np.zeros(4, np.int32), np.zeros(4, np.int32)) == 1.0
+
+
+def test_v_measure_perfect_clustering():
+    labels = np.array([0, 0, 1, 1, 2, 2])
+    clusters = np.array([2, 2, 0, 0, 1, 1])  # same partition, renamed ids
+    assert v_measure(labels, clusters) == pytest.approx(1.0)
+
+
+@given(n=st.integers(1, 40), seed=st.integers(0, 2**31))
+@HSET
+def test_v_measure_finite_and_permutation_invariant(n, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 3, n)
+    clusters = rng.integers(0, 4, n)
+    got = v_measure(labels, clusters)
+    assert np.isfinite(got) and 0.0 <= got <= 1.0 + 1e-12
+    # relabeling cluster ids must not change the score
+    perm = rng.permutation(5)
+    assert v_measure(labels, perm[clusters]) == pytest.approx(got)

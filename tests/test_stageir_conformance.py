@@ -1,0 +1,160 @@
+"""Property-based conformance suite for the stage-IR lowering contract.
+
+docs/pipeline_ir.md promises three invariants that every backend must keep
+as new backends/stages land; this suite pins them over *randomly configured
+trained models* (vendored hypothesis shim — example 0 is always the minimal
+configuration, so boundary topologies are exercised every run):
+
+  1. compiled == eager: ``Pipeline.run`` (the jitted, peephole-fused stage
+     program) equals the eager unfused stage walk bit-for-bit, on every
+     backend;
+  2. execution == training math: dense backends match
+     ``TrainedModel.predict`` exactly; the MAT backend is
+     quantization-bounded (<=3% label flips at 512 bins), trees exact;
+  3. accounting == execution: the shape-only ``lower_topology`` specs that
+     feasibility charges carry the same layer shapes / parameter counts /
+     table arities as the executable stages actually run.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codegen, feasibility as feas, mlalgos, stageir
+from repro.core.stageir import (
+    CentroidDistance,
+    Dense,
+    FusedMLP,
+    LUTGather,
+    Quantize,
+    TreeTraverse,
+    apply_stages,
+    lower_topology,
+    spec_layers,
+    spec_params,
+    stage_summary,
+)
+from repro.data import netdata
+
+pytestmark = pytest.mark.slow
+
+HSET = settings(max_examples=5, deadline=None)
+
+# small fixed datasets: one binary, one 5-class (both 7 features); widths
+# drawn from a small menu so jit-compile caches carry across examples
+_AD = netdata.make_ad_dataset(features=7, n_train=384, n_test=192)
+_TC = netdata.make_tc_dataset(n_train=384, n_test=192)
+
+_HIDDEN = ((4,), (8,), (4, 8), (8, 8))
+
+
+def _train(algo: str, draw, data):
+    if algo in ("dnn", "logreg"):
+        cfg = {"lr": 3e-3, "batch": 128, "epochs": 1}
+        if algo == "dnn":
+            hidden = draw(st.sampled_from(_HIDDEN))
+            cfg["n_layers"] = len(hidden)
+            for i, h in enumerate(hidden):
+                cfg[f"h{i}"] = h
+        return mlalgos.train(algo, data, cfg, seed=1)
+    if algo == "kmeans":
+        cfg = {"k": draw(st.integers(1, 6)),
+               "n_features": draw(st.integers(2, data.num_features))}
+        return mlalgos.train(algo, data, cfg, seed=1)
+    if algo == "svm":
+        return mlalgos.train("svm", data, {"c_reg": 1.0}, seed=1)
+    if algo == "tree":
+        return mlalgos.train(
+            "tree", data, {"max_depth": draw(st.integers(2, 4))}, seed=1)
+    raise KeyError(algo)
+
+
+def _run_compiled(stages, X):
+    return np.asarray(stageir.compile_stages(stages)(
+        jnp.asarray(X, jnp.float32)))
+
+
+def _run_eager(stages, X):
+    return np.asarray(apply_stages(stages, jnp.asarray(X, jnp.float32)))
+
+
+# ------------------------------------------------- dense (taurus/fpga/tpu)
+
+
+@given(data=st.data(),
+       algo=st.sampled_from(["dnn", "logreg", "svm", "kmeans"]),
+       multiclass=st.booleans())
+@HSET
+def test_dense_backend_conformance(data, algo, multiclass):
+    ds = _TC if multiclass else _AD
+    trained = _train(algo, data.draw, ds)
+    stages = codegen.taurus_stages(trained)
+    X = ds.test_x
+
+    # (1) jitted+fused whole-pipeline program == eager unfused stage walk
+    np.testing.assert_array_equal(_run_compiled(stages, X),
+                                  _run_eager(stages, X))
+    # (2) execution math == training math, exactly (same argmax tie-break)
+    pipe = codegen.taurus_codegen("c", trained, _report())
+    np.testing.assert_array_equal(pipe(X), trained.predict(X))
+
+    # (3) the specs feasibility charges == the stages execution runs
+    specs = lower_topology(trained.algorithm, trained.topology, form="dense")
+    assert spec_params(specs) == stage_summary(stages)["params"]
+    assert feas.topology_params(trained.algorithm, trained.topology) \
+        == trained.param_count
+    exec_layers = []
+    for s in stages:
+        if isinstance(s, FusedMLP):
+            m = s.meta()["widths"]
+            exec_layers += list(zip(m, m[1:]))
+        elif isinstance(s, Dense):
+            exec_layers.append((s.meta()["n_in"], s.meta()["n_out"]))
+        elif isinstance(s, CentroidDistance):
+            exec_layers.append((s.meta()["n_in"], s.meta()["n_out"]))
+    assert spec_layers(specs) == exec_layers
+
+
+# ----------------------------------------------------------- MAT (tofino)
+
+
+@given(data=st.data(), algo=st.sampled_from(["svm", "logreg", "kmeans",
+                                             "tree"]))
+@HSET
+def test_mat_backend_conformance(data, algo):
+    ds = _AD
+    trained = _train(algo, data.draw, ds)
+    stages = codegen.mat_stages(trained, ds.train_x)
+    X = ds.test_x
+
+    # (1) compiled == eager, bit-for-bit, on the MAT dataflow too
+    np.testing.assert_array_equal(_run_compiled(stages, X),
+                                  _run_eager(stages, X))
+    # (2) tree is exact; quantized LUT forms are 3%-bounded (the contract)
+    pipe = codegen.mat_codegen("c", trained, _report(), ds.train_x)
+    if algo == "tree":
+        np.testing.assert_array_equal(pipe(X), trained.predict(X))
+    else:
+        assert pipe.verify(X, max_mismatch_frac=0.03) <= 0.03
+
+    # (3) MAT specs charge what the executable tables hold
+    specs = lower_topology(algo, trained.topology, form="mat")
+    mats = feas.MATModel().mats_for(algo, trained.topology)
+    if algo == "tree":
+        trav = next(s for s in stages if isinstance(s, TreeTraverse))
+        assert mats == trav.depth
+        assert specs[0].params == trav.meta()["n_nodes"]
+    else:
+        quant = next(s for s in stages if isinstance(s, Quantize))
+        lut = next(s for s in stages if isinstance(s, LUTGather))
+        qspec = next(s for s in specs if s.kind == "quantize")
+        lspec = next(s for s in specs if s.kind == "lut_gather")
+        assert qspec.extra[0] == quant.meta()["bins"] == stageir.MAT_BINS
+        assert lspec.params == lut.meta()["params"] == lut.tables.size
+        assert mats == (lut.meta()["n_out"] if algo == "kmeans"
+                        else lut.meta()["n_features"])
+
+
+def _report():
+    return feas.FeasibilityReport(True, [], {"cu": 1, "mu": 1}, 1.0, 1e9)
