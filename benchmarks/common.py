@@ -37,3 +37,13 @@ class Timer:
 
     def __exit__(self, *a):
         self.wall_s = time.perf_counter() - self.t0
+
+
+def bench_pps(fn, X, repeats: int = 20) -> float:
+    """Measured items/sec of ``fn(X)``: one warm-up call (compile), then
+    ``repeats`` timed calls — the shared methodology of the pkt/s benches."""
+    fn(X)
+    with Timer() as t:
+        for _ in range(repeats):
+            fn(X)
+    return repeats * len(X) / t.wall_s

@@ -1,15 +1,20 @@
-"""Whole-DAG JIT vs interpreted chaining: packets/sec microbench.
+"""Whole-DAG JIT vs interpreted chaining vs Pallas backend: pkt/s bench.
 
 Builds a 3-model chain (DNN gate > SVM | KMeans) on the AD dataset, then
-measures end-to-end packet throughput two ways:
+measures end-to-end packet throughput three ways:
 
   * interpreted — ``chaining.run_dag``: each model's pipeline runs as its
     own jitted call, verdicts merge in numpy between stages;
   * compiled    — ``chaining.compile_dag``: the whole DAG is ONE jitted
-    XLA program (stage lists inlined, gating as jnp.where masks).
+    XLA program (stage lists inlined, gating as jnp.where masks);
+  * pallas      — ``compile_dag(..., backend="pallas")``: kernel-eligible
+    pipelines inside the DAG run as fused Pallas kernel launches
+    (docs/pipeline_ir.md#pallas-lowering-contract).
 
-Both paths produce bit-identical verdicts (asserted); the delta is pure
-dispatch/glue overhead removed by whole-DAG compilation.  Emits JSON like
+All paths produce bit-identical verdicts (asserted).  A second table pins
+the per-pipeline contract on the fused-MLP (DNN) pipeline: the Pallas
+backend must serve >= the interpreted stage-apply path in pkt/s (asserted —
+this is the ROADMAP "fast as the hardware allows" gate).  Emits JSON like
 the other benches.
 
   PYTHONPATH=src python -m benchmarks.dag_throughput
@@ -26,7 +31,7 @@ from repro.core.alchemy import Model
 from repro.data import netdata
 from repro.serve.packet_engine import PacketServeEngine
 
-from benchmarks.common import Timer, render_table, save_result
+from benchmarks.common import bench_pps, render_table, save_result
 
 BATCHES = (256, 1024, 4096)
 REPEATS = 20
@@ -57,27 +62,28 @@ def build_chain(seed: int = 0):
 
 
 def bench(fn, X, repeats: int = REPEATS) -> float:
-    fn(X)  # warm-up / compile
-    with Timer() as t:
-        for _ in range(repeats):
-            fn(X)
-    return repeats * len(X) / t.wall_s
+    return bench_pps(fn, X, repeats)
 
 
 def main() -> dict:
     d, node, pipes = build_chain()
     dag = chaining.compile_dag(node, pipes)
+    dag_pallas = chaining.compile_dag(node, pipes, backend="pallas")
 
     ver_eager = chaining.run_dag(node, pipes, d.test_x)
     ver_jit = dag(d.test_x)
     assert np.array_equal(ver_eager, ver_jit), "compiled DAG diverged"
+    assert np.array_equal(ver_eager, dag_pallas(d.test_x)), \
+        "pallas DAG diverged"
 
     rows = []
     for n in BATCHES:
         X = d.test_x[:n]
         interp = bench(lambda x: chaining.run_dag(node, pipes, x), X)
         whole = bench(dag, X)
-        eng = PacketServeEngine(dag, feature_dim=d.num_features, max_batch=n)
+        pallas = bench(dag_pallas, X)
+        eng = PacketServeEngine(dag_pallas, feature_dim=d.num_features,
+                                max_batch=n)
 
         def served(x, _e=eng):
             _e.submit(x)
@@ -88,19 +94,59 @@ def main() -> dict:
             "batch": n,
             "interp_pps": round(interp),
             "dagjit_pps": round(whole),
+            "pallas_pps": round(pallas),
             "engine_pps": round(engine),
-            "speedup": round(whole / interp, 2),
+            "dagjit_x": round(whole / interp, 2),    # the PR-1 baseline ratio
+            "pallas_x": round(pallas / interp, 2),
         })
 
     print("\n== whole-DAG JIT vs interpreted chaining (pkt/s) ==")
     print(render_table(
-        rows, ["batch", "interp_pps", "dagjit_pps", "engine_pps", "speedup"]
+        rows, ["batch", "interp_pps", "dagjit_pps", "pallas_pps",
+               "engine_pps", "dagjit_x", "pallas_x"]
     ))
+
+    # per-pipeline backend gate: the fused-MLP (DNN) pipeline served by the
+    # Pallas backend must beat the interpreted stage-apply path
+    from repro.core import stageir
+
+    stages = pipes["ad"].stages
+    run_interp = stageir.compile_stages(stages, backend="interpret")
+    run_pallas = stageir.compile_stages(stages, backend="pallas")
+    assert run_pallas.backend == "pallas", "DNN pipeline must lower to pallas"
+    X = d.test_x[:BATCHES[-1]]
+    assert np.array_equal(np.asarray(run_interp(X)),
+                          np.asarray(run_pallas(X))), "pallas diverged"
+    backend_rows = []
+    for n in BATCHES:
+        Xn = d.test_x[:n]
+        ipps = bench(lambda x: np.asarray(run_interp(x)), Xn)
+        ppps = bench(lambda x: np.asarray(run_pallas(x)), Xn)
+        backend_rows.append({
+            "batch": n,
+            "interp_pps": round(ipps),
+            "pallas_pps": round(ppps),
+            "speedup": round(ppps / ipps, 2),
+        })
+    print("\n== fused-MLP pipeline: interpreter vs Pallas backend (pkt/s) ==")
+    print(render_table(
+        backend_rows, ["batch", "interp_pps", "pallas_pps", "speedup"]
+    ))
+    best = max(r["speedup"] for r in backend_rows)
+    assert best >= 1.0, (
+        f"Pallas backend slower than the interpreter on the fused-MLP "
+        f"pipeline ({best}x)"
+    )
+
     payload = {
         "schedule": dag.schedule,
         "verdicts_match": True,
+        "model_backends": dag_pallas.model_backends,
         "rows": rows,
-        "max_speedup": max(r["speedup"] for r in rows),
+        "backend_rows": backend_rows,
+        # same definition as the PR-1 baseline: whole-DAG jit vs interpreted
+        "max_speedup": max(r["dagjit_x"] for r in rows),
+        "pallas_vs_interp_max_speedup": best,
     }
     save_result("dag_throughput", payload)
     return payload

@@ -1,17 +1,24 @@
 """Fused-MLP kernel roofline (the TPU per-packet pipeline, beyond-paper
 backend): analytic packets/s vs depth on the v5e target + interpret-mode
-correctness spot-check on CPU."""
+correctness spot-check on CPU + measured interpreter-vs-Pallas serving
+throughput for the same topologies (the two engines of
+``stageir.compile_stages``)."""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import stageir
 from repro.core.feasibility import TPUModel
+from repro.core.stageir import FusedMLP, Reduce
 from repro.kernels.fused_mlp import fused_mlp, vmem_bytes
 from repro.kernels.fused_mlp.ref import mlp_ref
 
-from benchmarks.common import Timer, render_table, save_result
+from benchmarks.common import Timer, bench_pps, render_table, save_result
+
+MEASURE_BATCH = 4096
+MEASURE_REPEATS = 10
 
 
 def main() -> dict:
@@ -31,18 +38,39 @@ def main() -> dict:
             err = float(jnp.max(jnp.abs(
                 fused_mlp(x, ws, bs) - mlp_ref(x, ws, bs)
             )))
+            # measured serving throughput: interpreter vs Pallas backend
+            stages = [FusedMLP([np.asarray(w) for w in ws],
+                               [np.asarray(b) for b in bs]),
+                      Reduce("argmax")]
+            run_i = stageir.compile_stages(stages, backend="interpret")
+            run_p = stageir.compile_stages(stages, backend="pallas")
+            X = jnp.asarray(
+                rng.normal(size=(MEASURE_BATCH, widths[0])), jnp.float32
+            )
+            np.testing.assert_array_equal(np.asarray(run_i(X)),
+                                          np.asarray(run_p(X)))
+            interp_pps = bench_pps(
+                lambda x: np.asarray(run_i(x)), X, MEASURE_REPEATS
+            )
+            pallas_pps = bench_pps(
+                lambda x: np.asarray(run_p(x)), X, MEASURE_REPEATS
+            )
             rows.append({
                 "layers": depth,
                 "vmem_KiB": vmem_bytes(depth) // 1024,
                 "roofline_gpkt_s": round(est["throughput_pps"] / 1e9, 3),
                 "latency_us": round(est["latency_ns"] / 1e3, 2),
+                "interp_mpkt_s": round(interp_pps / 1e6, 2),
+                "pallas_mpkt_s": round(pallas_pps / 1e6, 2),
+                "pallas_backend": run_p.backend,
                 "interpret_err": f"{err:.1e}",
             })
 
-    print("\n== fused_mlp kernel: VMEM + roofline throughput (v5e target) ==")
+    print("\n== fused_mlp kernel: VMEM + roofline + measured serving ==")
     print(render_table(rows, list(rows[0])))
     for r in rows:
         assert float(r["interpret_err"]) < 1e-3
+        assert r["pallas_backend"] == "pallas"
     payload = {"rows": rows, "wall_s": round(t.wall_s, 1)}
     save_result("kernel_roofline", payload)
     return payload

@@ -1,8 +1,11 @@
 """Serve packets through a generated pipeline — the data plane in action.
 
 Generates the AD pipeline (fused-MLP Pallas artifact), then streams batched
-"packets" through it, reporting CPU wall throughput and the projected TPU
-roofline throughput the feasibility oracle promised.
+"packets" through it on BOTH execution engines — the jitted stage
+interpreter and the Pallas backend (whole pipeline as one fused kernel
+launch, docs/pipeline_ir.md#pallas-lowering-contract) — reporting CPU wall
+throughput per engine and the projected TPU roofline throughput the
+feasibility oracle promised.
 
   PYTHONPATH=src python examples/serve_packets.py
 """
@@ -41,24 +44,33 @@ data = ad_loader()
 pipe = r.pipeline
 print("stage list:", [s.kind for s in pipe.stages])
 
-# stream packets through the micro-batching engine (CPU interpret mode;
-# TPU runs the same fused kernel): fixed batch shape -> compiled once
+# stream packets through the micro-batching engine on both execution
+# engines: fixed batch shape -> compiled once per engine
 from repro.serve.packet_engine import PacketServeEngine
 
-eng = PacketServeEngine(pipe, feature_dim=data.num_features, max_batch=256)
-t0 = time.perf_counter()
-malicious = 0
-chunks = (data.test_x[s:s + 97] for s in range(0, len(data.test_x), 97))
-for verdicts in eng.serve_stream(chunks):
-    malicious += int(np.sum(verdicts == 1))
-wall = time.perf_counter() - t0
-stats = eng.stats()
-n_packets = stats["packets"]
+verdict_sets = {}
+for backend in ("interpret", "pallas"):
+    eng = PacketServeEngine(pipe, feature_dim=data.num_features,
+                            max_batch=256, backend=backend)
+    t0 = time.perf_counter()
+    malicious = 0
+    chunks = (data.test_x[s:s + 97] for s in range(0, len(data.test_x), 97))
+    got = []
+    for verdicts in eng.serve_stream(chunks):
+        malicious += int(np.sum(verdicts == 1))
+        got.append(verdicts)
+    wall = time.perf_counter() - t0
+    stats = eng.stats()
+    n_packets = stats["packets"]
+    verdict_sets[backend] = np.concatenate(got)
 
-print(f"\nstreamed {n_packets} packets in {wall:.2f}s "
-      f"({stats['pkt_per_s']:,.0f} pkt/s pipeline-only, "
-      f"{stats['batches']} micro-batches, {stats['pad_packets']} pad rows)")
-print(f"flagged malicious: {malicious} ({malicious / n_packets:.1%})")
+    print(f"\n[{stats['backend']}] streamed {n_packets} packets in "
+          f"{wall:.2f}s ({stats['pkt_per_s']:,.0f} pkt/s pipeline-only, "
+          f"{stats['batches']} micro-batches, {stats['pad_packets']} pad rows)")
+    print(f"flagged malicious: {malicious} ({malicious / n_packets:.1%})")
+
+assert np.array_equal(verdict_sets["interpret"], verdict_sets["pallas"]), \
+    "the two execution engines must agree bit-for-bit on dense pipelines"
 print(f"TPU roofline projection (oracle): "
       f"{r.report.throughput_pps:,.0f} pkt/s, "
       f"latency {r.report.latency_ns / 1e3:.1f} us/batch")

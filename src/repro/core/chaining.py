@@ -88,33 +88,71 @@ def run_dag(node, result, X: np.ndarray, *, combine: str = "or"
 
 
 class CompiledDag:
-    """An entire Alchemy DAG lowered into ONE jitted JAX program."""
+    """An entire Alchemy DAG lowered into ONE jitted JAX program.
 
-    def __init__(self, fn: Callable, schedule: str, n_models: int):
+    ``model_backends`` records, per model name, which execution engine that
+    pipeline actually lowered to ("pallas" = one fused kernel launch,
+    "interpret" = inlined stage walk); ``backend`` summarizes ("pallas" /
+    "interpret" / "mixed").  ``with_backend`` recompiles the same DAG for a
+    different engine (what ``PacketServeEngine(backend=...)`` calls)."""
+
+    def __init__(self, fn: Callable, schedule: str, n_models: int,
+                 model_backends: dict[str, str] | None = None,
+                 rebuild: Callable[[str], "CompiledDag"] | None = None):
         self.fn = fn                    # jitted: jnp [N, F] -> verdicts
         self.schedule = schedule
         self.n_models = n_models
+        self.model_backends = model_backends or {}
+        self._rebuild = rebuild
+
+    @property
+    def backend(self) -> str:
+        kinds = set(self.model_backends.values()) or {"interpret"}
+        return kinds.pop() if len(kinds) == 1 else "mixed"
+
+    def with_backend(self, backend: str) -> "CompiledDag":
+        if self._rebuild is None:
+            raise ValueError("this CompiledDag cannot be recompiled")
+        return self._rebuild(backend)
 
     def __call__(self, X: np.ndarray) -> np.ndarray:
         out = self.fn(jnp.asarray(X, np.float32))
         return np.asarray(out, np.int32)
 
     def __repr__(self):
-        return f"CompiledDag({self.schedule!r}, models={self.n_models})"
+        return (f"CompiledDag({self.schedule!r}, models={self.n_models}, "
+                f"backend={self.backend!r})")
 
 
-def compile_dag(node, result, *, combine: str = "or",
-                fuse: bool = True) -> CompiledDag:
+def compile_dag(node, result, *, combine: str = "or", fuse: bool = True,
+                backend: str = "interpret") -> CompiledDag:
     """Lower the whole DAG (Seq gating as jnp.where masks, Par merges) and
-    every model's stage list into a single jitted callable."""
+    every model's stage list into a single jitted callable.
+
+    ``backend="pallas"`` picks the execution engine per-pipeline: each
+    kernel-eligible model becomes one fused Pallas kernel launch inside the
+    DAG program (docs/pipeline_ir.md#pallas-lowering-contract); ineligible
+    models fall back to the inlined stage walk.  The mix actually compiled
+    is reported on ``CompiledDag.model_backends``."""
     if combine not in COMBINES:
         raise KeyError(f"combine must be one of {COMBINES}")
+    if backend not in stageir.EXEC_BACKENDS:
+        raise KeyError(f"backend must be one of {stageir.EXEC_BACKENDS}")
+    model_backends: dict[str, str] = {}
 
     def lower(n) -> Callable:
         if isinstance(n, Model):
             stages = _pipeline_of(result, n.name).stages
             if fuse:
                 stages = stageir.fuse_pipeline_stages(stages)
+            if backend == "pallas":
+                from repro.core import pallas_backend
+
+                kernel_fn = pallas_backend.lower_stages_pallas(stages)
+                if kernel_fn is not None:
+                    model_backends[n.name] = "pallas"
+                    return kernel_fn
+            model_backends[n.name] = "interpret"
             return lambda x, _s=stages: stageir.apply_stages(_s, x)
         if isinstance(n, Seq):
             branches = [lower(c) for c in n.children]
@@ -144,7 +182,12 @@ def compile_dag(node, result, *, combine: str = "or",
 
     fn = jax.jit(lower(node))
     describe = node.describe() if hasattr(node, "describe") else str(node)
-    return CompiledDag(fn, describe, len(node.leaves()))
+    return CompiledDag(
+        fn, describe, len(node.leaves()), model_backends,
+        rebuild=lambda b: compile_dag(
+            node, result, combine=combine, fuse=fuse, backend=b
+        ),
+    )
 
 
 # ----------------------------------------------------------- accounting

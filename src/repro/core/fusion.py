@@ -70,8 +70,13 @@ class FusedModel:
         biases.append(np.asarray(head["b"]))
         return [FusedMLP(weights, biases), Reduce("argmax")]
 
-    def task_pipeline(self, task: int, report=None):
-        """Executable per-task Pipeline built from the fused stage list."""
+    def task_pipeline(self, task: int, report=None,
+                      exec_backend: str = "interpret"):
+        """Executable per-task Pipeline built from the fused stage list.
+
+        ``exec_backend="pallas"`` serves the trunk+head MLP as one fused
+        Pallas kernel launch (it is always kernel-eligible: FusedMLP →
+        Reduce lowers onto kernels/fused_mlp)."""
         from repro.core.codegen import Pipeline, _spatial_dnn
         from repro.core.feasibility import FeasibilityReport
         from repro.core.mlalgos import TrainedModel
@@ -93,7 +98,7 @@ class FusedModel:
         return Pipeline(
             name, "taurus", "dnn", self.task_stages(task),
             _spatial_dnn(name, topo["widths"], report.resources),
-            report, trained,
+            report, trained, exec_backend=exec_backend,
         )
 
     def predict(self, task: int, X: np.ndarray) -> np.ndarray:

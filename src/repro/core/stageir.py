@@ -22,7 +22,9 @@ Two layers of the stack consume the same IR:
 
   * execution — ``compile_stages`` folds the stage list into one jitted
     JAX program (``apply_stages`` is the traceable form chaining uses to
-    inline entire DAGs into a single XLA program);
+    inline entire DAGs into a single XLA program); with
+    ``backend="pallas"`` kernel-eligible pipelines lower onto ONE fused
+    Pallas kernel launch instead (core.pallas_backend);
   * accounting — ``lower_topology`` produces shape-only ``StageSpec``s from
     which the platform resource models (core.feasibility) read layer
     shapes, parameter counts and table counts instead of re-deriving them
@@ -319,16 +321,60 @@ def fuse_pipeline_stages(stages: list[Stage]) -> list[Stage]:
     return out
 
 
-def compile_stages(stages: list[Stage], *, fuse: bool = True
-                   ) -> Callable[[jax.Array], jax.Array]:
-    """JIT the whole stage list into one XLA program."""
+EXEC_BACKENDS = ("interpret", "pallas")
+
+
+class CompiledStages:
+    """A jitted whole-pipeline executable with backend provenance.
+
+    Callable like the function ``compile_stages`` used to return;
+    ``backend`` records what actually serves ("pallas" when the pipeline
+    lowered onto a fused kernel, "interpret" otherwise — including the
+    fallback case where Pallas was requested but the stage sequence is
+    outside the kernel envelope), ``requested_backend`` what was asked."""
+
+    def __init__(self, fn: Callable, backend: str, requested: str):
+        self.fn = jax.jit(fn)
+        self.backend = backend
+        self.requested_backend = requested
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.fn(x)
+
+    def __repr__(self):
+        return f"CompiledStages(backend={self.backend!r})"
+
+
+def compile_stages(stages: list[Stage], *, fuse: bool = True,
+                   backend: str = "interpret") -> CompiledStages:
+    """Compile the whole stage list into one XLA program.
+
+    ``backend`` selects the execution engine:
+
+    * ``"interpret"`` (default) — walk the stage list (each ``Stage.apply``
+      traced into a single jitted program);
+    * ``"pallas"`` — lower the whole pipeline onto ONE fused Pallas kernel
+      launch (``core.pallas_backend``) when the stage sequence is
+      kernel-eligible per docs/pipeline_ir.md#pallas-lowering-contract;
+      ineligible pipelines (or an unavailable Pallas toolchain) fall back
+      to the interpreter.
+
+    The returned ``CompiledStages`` is callable and reports the backend
+    that actually serves via ``.backend``."""
+    if backend not in EXEC_BACKENDS:
+        raise KeyError(f"backend must be one of {EXEC_BACKENDS}")
     run_list = fuse_pipeline_stages(stages) if fuse else list(stages)
 
-    @jax.jit
-    def run(x):
-        return apply_stages(run_list, x)
+    if backend == "pallas":
+        from repro.core import pallas_backend
 
-    return run
+        kernel_fn = pallas_backend.lower_stages_pallas(run_list)
+        if kernel_fn is not None:
+            return CompiledStages(kernel_fn, "pallas", backend)
+
+    return CompiledStages(
+        lambda x: apply_stages(run_list, x), "interpret", backend
+    )
 
 
 def stage_summary(stages: list[Stage]) -> dict:

@@ -3,4 +3,4 @@ from repro.kernels.fused_mlp.ops import (
     fused_mlp_classify,
     fused_mlp_reference,
 )
-from repro.kernels.fused_mlp.kernel import vmem_bytes, LANE
+from repro.kernels.fused_mlp.kernel import vmem_bytes, snap_lane, LANE

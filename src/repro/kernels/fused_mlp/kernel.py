@@ -15,8 +15,13 @@ equivalent is a single Pallas kernel where
 
 Zero padding is self-masking: padded weight columns/rows are 0 and padded
 biases are 0, so padded activations stay identically 0 through ReLU chains.
+Because the pad lanes are exact zeros, the padded matmul is bit-identical
+to the unpadded one, so the lane width is a pure tuning knob: the padded
+entry points accept any ``lane`` (the Pallas serving backend snaps it to
+the model width in interpret mode instead of paying 128-wide tiles on CPU;
+on TPU it stays ``LANE`` = the MXU tile).
 
-Grid: (B / block_b,).  VMEM working set = L*128*128*4 B of weights
+Grid: (B / block_b,).  VMEM working set = L*lane*lane*4 B of weights
 (+2 batch tiles), which core.feasibility checks against the VMEM budget.
 """
 
@@ -28,8 +33,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANE = 128  # MXU/VREG lane width: all layer widths pad to this
+LANE = 128  # MXU/VREG lane width: TPU layer widths pad to this
 DEFAULT_BLOCK_B = 256
+
+
+def snap_lane(widths: list[int], *, interpret: bool) -> int:
+    """Lane width for a model whose widest layer is max(widths).
+
+    On TPU (interpret=False) this is always ``LANE`` — the MXU tile.  In
+    interpret mode (CPU) padding to 128 only burns FLOPs, so snap to the
+    smallest multiple of 8 covering the model instead (bit-identical: pad
+    lanes are exact zeros either way)."""
+    if not interpret:
+        return LANE
+    return min(LANE, max(8, -(-max(widths) // 8) * 8))
 
 
 def _kernel(x_ref, w_ref, b_ref, o_ref, *, n_layers: int):
@@ -76,8 +93,8 @@ def fused_mlp_classify_padded(
     block_b: int = DEFAULT_BLOCK_B,
     interpret: bool = False,
 ) -> jax.Array:
-    """-> [B_pad, LANE] int32, class id broadcast across lanes (take col 0)."""
-    B = x_pad.shape[0]
+    """-> [B_pad, lane] int32, class id broadcast across lanes (take col 0)."""
+    B, lane = x_pad.shape
     assert B % block_b == 0
     grid = (B // block_b,)
     return pl.pallas_call(
@@ -86,19 +103,19 @@ def fused_mlp_classify_padded(
         ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_b, LANE), lambda i: (i, 0)),
-            pl.BlockSpec((n_layers, LANE, LANE), lambda i: (0, 0, 0)),
-            pl.BlockSpec((n_layers, LANE), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, lane), lambda i: (i, 0)),
+            pl.BlockSpec((n_layers, lane, lane), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_layers, lane), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_b, LANE), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, LANE), jnp.int32),
+        out_specs=pl.BlockSpec((block_b, lane), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, lane), jnp.int32),
         interpret=interpret,
     )(x_pad, w_stack, b_stack)
 
 
-def pad_to_lane(arr: jax.Array, axis: int) -> jax.Array:
+def pad_to_lane(arr: jax.Array, axis: int, lane: int = LANE) -> jax.Array:
     n = arr.shape[axis]
-    pad = (-n) % LANE
+    pad = (-n) % lane
     if pad == 0:
         return arr
     widths = [(0, 0)] * arr.ndim
@@ -106,17 +123,17 @@ def pad_to_lane(arr: jax.Array, axis: int) -> jax.Array:
     return jnp.pad(arr, widths)
 
 
-def pack_params(weights: list[jax.Array], biases: list[jax.Array]
-                ) -> tuple[jax.Array, jax.Array]:
-    """Zero-pad every layer to [LANE, LANE] and stack: -> ([L,LANE,LANE],
-    [L,LANE]).  Requires every layer dim <= LANE (per-packet models are)."""
+def pack_params(weights: list[jax.Array], biases: list[jax.Array],
+                lane: int = LANE) -> tuple[jax.Array, jax.Array]:
+    """Zero-pad every layer to [lane, lane] and stack: -> ([L,lane,lane],
+    [L,lane]).  Requires every layer dim <= lane (per-packet models are)."""
     ws, bs = [], []
     for w, b in zip(weights, biases):
-        assert w.shape[0] <= LANE and w.shape[1] <= LANE, (
-            f"fused_mlp supports layer dims <= {LANE}, got {w.shape}"
+        assert w.shape[0] <= lane and w.shape[1] <= lane, (
+            f"fused_mlp supports layer dims <= {lane}, got {w.shape}"
         )
-        ws.append(pad_to_lane(pad_to_lane(w, 0), 1))
-        bs.append(pad_to_lane(b, 0))
+        ws.append(pad_to_lane(pad_to_lane(w, 0, lane), 1, lane))
+        bs.append(pad_to_lane(b, 0, lane))
     return jnp.stack(ws).astype(jnp.float32), jnp.stack(bs).astype(jnp.float32)
 
 
@@ -132,7 +149,7 @@ def fused_mlp_padded(
     block_b: int = DEFAULT_BLOCK_B,
     interpret: bool = False,
 ) -> jax.Array:
-    B = x_pad.shape[0]
+    B, lane = x_pad.shape
     assert B % block_b == 0
     grid = (B // block_b,)
     return pl.pallas_call(
@@ -140,19 +157,20 @@ def fused_mlp_padded(
         grid=grid,
         in_specs=[
             # batch tile streams; index_map in block units
-            pl.BlockSpec((block_b, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, lane), lambda i: (i, 0)),
             # weights: whole stack resident in VMEM every grid step
-            pl.BlockSpec((n_layers, LANE, LANE), lambda i: (0, 0, 0)),
-            pl.BlockSpec((n_layers, LANE), lambda i: (0, 0)),
+            pl.BlockSpec((n_layers, lane, lane), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_layers, lane), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_b, LANE), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, LANE), x_pad.dtype),
+        out_specs=pl.BlockSpec((block_b, lane), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, lane), x_pad.dtype),
         interpret=interpret,
     )(x_pad, w_stack, b_stack)
 
 
-def vmem_bytes(n_layers: int, block_b: int = DEFAULT_BLOCK_B) -> int:
+def vmem_bytes(n_layers: int, block_b: int = DEFAULT_BLOCK_B,
+               lane: int = LANE) -> int:
     """VMEM working set the kernel claims (feasibility input)."""
-    weights = n_layers * LANE * LANE * 4 + n_layers * LANE * 4
-    tiles = 2 * 2 * block_b * LANE * 4  # double-buffered in + out tiles
+    weights = n_layers * lane * lane * 4 + n_layers * lane * 4
+    tiles = 2 * 2 * block_b * lane * 4  # double-buffered in + out tiles
     return weights + tiles

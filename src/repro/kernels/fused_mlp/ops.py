@@ -29,20 +29,22 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _prepare(x, weights, interpret, block_b):
+def _prepare(x, weights, interpret, block_b, lane):
     """Shared kernel preamble for both entry points.
 
     -> None when the model is outside the fused kernel's envelope (wide
-    layers -> XLA reference path), else (x_pad, block_b, interpret)."""
+    layers -> XLA reference path), else (x_pad, block_b, interpret, lane)."""
     if interpret is None:
         interpret = not _on_tpu()
+    if lane is None:
+        lane = LANE
     B, F = x.shape
-    if F > LANE or any(w.shape[1] > LANE for w in weights):
+    if F > lane or any(w.shape[1] > lane for w in weights):
         return None
     block_b = min(block_b, max(8, B))
     pad_b = (-B) % block_b
-    x_pad = pad_to_lane(jnp.pad(x, ((0, pad_b), (0, 0))), 1)
-    return x_pad, block_b, interpret
+    x_pad = pad_to_lane(jnp.pad(x, ((0, pad_b), (0, 0))), 1, lane)
+    return x_pad, block_b, interpret, lane
 
 
 def fused_mlp(
@@ -52,13 +54,19 @@ def fused_mlp(
     *,
     block_b: int = DEFAULT_BLOCK_B,
     interpret: bool | None = None,
+    lane: int | None = None,
 ) -> jax.Array:
-    """x: [B, F] -> logits [B, num_classes]."""
-    prep = _prepare(x, weights, interpret, block_b)
+    """x: [B, F] -> logits [B, num_classes].
+
+    ``lane`` is the padded layer width (default the 128-wide MXU tile);
+    the Pallas serving backend passes ``kernel.snap_lane`` so CPU interpret
+    mode runs model-sized tiles.  Numerics are lane-independent: pad lanes
+    are exact zeros."""
+    prep = _prepare(x, weights, interpret, block_b, lane)
     if prep is None:
         return mlp_ref(x, weights, biases)
-    x_pad, block_b, interpret = prep
-    w_stack, b_stack = pack_params(weights, biases)
+    x_pad, block_b, interpret, lane = prep
+    w_stack, b_stack = pack_params(weights, biases, lane)
     out = fused_mlp_padded(
         x_pad, w_stack, b_stack,
         n_layers=len(weights), block_b=block_b, interpret=interpret,
@@ -73,13 +81,16 @@ def fused_mlp_classify(
     *,
     block_b: int = DEFAULT_BLOCK_B,
     interpret: bool | None = None,
+    lane: int | None = None,
 ) -> jax.Array:
-    """x: [B, F] -> class ids [B] int32, argmax fused into the kernel."""
-    prep = _prepare(x, weights, interpret, block_b)
+    """x: [B, F] -> class ids [B] int32, argmax fused into the kernel.
+
+    Same ``lane`` contract as :func:`fused_mlp`."""
+    prep = _prepare(x, weights, interpret, block_b, lane)
     if prep is None:
         return jnp.argmax(mlp_ref(x, weights, biases), -1).astype(jnp.int32)
-    x_pad, block_b, interpret = prep
-    w_stack, b_stack = pack_params(weights, biases)
+    x_pad, block_b, interpret, lane = prep
+    w_stack, b_stack = pack_params(weights, biases, lane)
     out = fused_mlp_classify_padded(
         x_pad, w_stack, b_stack,
         n_layers=len(weights), num_classes=weights[-1].shape[1],

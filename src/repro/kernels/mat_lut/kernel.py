@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: whole MAT (quantized-LUT) pipeline in ONE launch.
+
+This is the TPU-native translation of the IIsy-style match-action-table
+pipeline the Tofino backend emits (core.codegen.mat_stages): per-feature
+range tables quantize each value to a bucket, per-feature MATs map bucket ->
+per-class partial scores, partials sum across features, and argmax/argmin
+plus the verdict-rewrite table pick the class.  The interpreter executes
+that as four stage applies (searchsorted, gather, reduce, gather); here the
+whole dataflow is one ``pallas_call``, so a packet batch makes a single
+HBM->VMEM round trip and only int32 verdicts come back.
+
+Two gather-free constructions keep it on the vector/matrix units:
+
+  * quantize: ``searchsorted(edges, v)`` (side='left') == the count of
+    edges strictly below v, computed as a [block_b, BINS-1] compare+sum —
+    exact integer math, no binary search;
+  * LUT gather: ``table[bucket]`` as a one-hot [block_b, BINS] x
+    [BINS, C] matmul (the classic TPU gather-as-matmul idiom; exact —
+    each row sums one table entry and zeros).  The verdict rewrite
+    (LabelMap) reuses the same trick on [K] at the end.
+
+Grid: (B / block_b,).  Edges [F, BINS-1], tables [F, BINS, C] and the label
+map stay resident in VMEM across the whole launch; the batch tile streams.
+Zero/`+inf` padding is self-masking: padded edges (+inf) never count into a
+bucket, padded table lanes contribute exact zeros, and padded class lanes
+are masked to -/+inf before the arg-reduce.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+DEFAULT_BLOCK_B = 256
+
+
+def _kernel(x_ref, edges_ref, tables_ref, lmap_ref, o_ref, *,
+            n_features: int, n_classes: int, use_min: bool):
+    """x_ref: [block_b, F_pad]; edges_ref: [F_pad, E_pad];
+    tables_ref: [F_pad, BINS, C_pad]; lmap_ref: [1, K_pad]."""
+    x = x_ref[...].astype(jnp.float32)
+    bins_cap = tables_ref.shape[1]
+    n_pkt = x.shape[0]
+    bin_iota = jax.lax.broadcasted_iota(jnp.int32, (n_pkt, bins_cap), 1)
+    scores = jnp.zeros((n_pkt, tables_ref.shape[2]), jnp.float32)
+    for f in range(n_features):      # static unroll: one MAT per feature
+        col = x[:, f][:, None]                              # [B, 1]
+        edges = edges_ref[f][None, :]                       # [1, E_pad]
+        # searchsorted(side='left'): bucket = #edges strictly below value
+        bucket = jnp.sum((col > edges).astype(jnp.int32), axis=1)
+        onehot = (bin_iota == bucket[:, None]).astype(jnp.float32)
+        scores = scores + jnp.dot(
+            onehot, tables_ref[f].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    lane = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    if use_min:
+        scores = jnp.where(lane < n_classes, scores, jnp.inf)
+        ids = jnp.argmin(scores, axis=1).astype(jnp.int32)
+    else:
+        scores = jnp.where(lane < n_classes, scores, -jnp.inf)
+        ids = jnp.argmax(scores, axis=1).astype(jnp.int32)
+    # LabelMap: verdict rewrite as one more one-hot matvec (exact)
+    k_pad = lmap_ref.shape[1]
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (n_pkt, k_pad), 1)
+    onehot_k = (k_iota == ids[:, None]).astype(jnp.float32)
+    verdict = jnp.dot(
+        onehot_k, lmap_ref[0].astype(jnp.float32)[:, None],
+        preferred_element_type=jnp.float32,
+    )[:, 0].astype(jnp.int32)
+    o_ref[...] = jnp.broadcast_to(verdict[:, None], o_ref.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_features", "n_classes", "use_min",
+                              "block_b", "interpret")
+)
+def mat_pipeline_padded(
+    x_pad: jax.Array,      # [B_pad, F_pad] f32
+    edges: jax.Array,      # [F_pad, E_pad] f32 (+inf padded)
+    tables: jax.Array,     # [F_pad, BINS, C_pad] f32 (zero padded)
+    lmap: jax.Array,       # [1, K_pad] f32 (zero padded)
+    *,
+    n_features: int,
+    n_classes: int,
+    use_min: bool,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+) -> jax.Array:
+    """-> [B_pad, C_pad] int32, verdict broadcast across lanes (take col 0)."""
+    B, f_pad = x_pad.shape
+    assert B % block_b == 0
+    _, e_pad = edges.shape
+    _, bins, c_pad = tables.shape
+    k_pad = lmap.shape[1]
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, n_features=n_features, n_classes=n_classes,
+            use_min=use_min,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f_pad), lambda i: (i, 0)),
+            # tables resident in VMEM across the whole launch
+            pl.BlockSpec((f_pad, e_pad), lambda i: (0, 0)),
+            pl.BlockSpec((f_pad, bins, c_pad), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, c_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, c_pad), jnp.int32),
+        interpret=interpret,
+    )(x_pad, edges, tables, lmap)
+
+
+def vmem_bytes(n_features: int, bins: int, n_classes: int,
+               block_b: int = DEFAULT_BLOCK_B) -> int:
+    """VMEM working set the kernel claims (feasibility input)."""
+    tables = n_features * bins * n_classes * 4 + n_features * (bins - 1) * 4
+    tiles = 2 * 2 * block_b * max(n_features, n_classes) * 4
+    return tables + tiles

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused MAT (quantized-LUT) pipeline.
+
+Exactly the stage math of the IR's interpreter path for a Tofino-style
+pipeline (core.stageir: Quantize -> LUTGather -> Reduce -> LabelMap):
+per-feature range tables bucket each value, per-feature MATs map bucket ->
+per-class partial scores, partials sum across features, argmax/argmin
+picks the verdict, and a final table rewrites cluster/leaf ids to classes.
+The kernel test asserts verdict equality against this function.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mat_pipeline_ref(
+    x: jax.Array,          # [B, F] f32 packet features
+    edges: jax.Array,      # [F, BINS-1] range-table edges
+    tables: jax.Array,     # [F, BINS, C] per-feature partial scores
+    label_map: jax.Array,  # [K] int verdict rewrite (identity when unused)
+    *,
+    use_min: bool = False,
+) -> jax.Array:
+    """-> verdicts [B] int32; same searchsorted/gather math as the stages."""
+    bins = jax.vmap(
+        lambda col, e: jnp.searchsorted(e, col), in_axes=(1, 0), out_axes=1
+    )(x, edges)                                         # [B, F]
+    partial = jax.vmap(
+        lambda b, t: t[b], in_axes=(1, 0), out_axes=1
+    )(bins, tables)                                     # [B, F, C]
+    scores = partial.sum(1)                             # [B, C]
+    fn = jnp.argmin if use_min else jnp.argmax
+    ids = fn(scores, -1)
+    return jnp.asarray(label_map, jnp.int32)[ids]

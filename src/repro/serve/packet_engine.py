@@ -11,10 +11,11 @@ padding verdicts sliced off, so steady-state serving never re-traces.
 Typical use::
 
     dag = chaining.compile_dag(ad > tc, result)
-    eng = PacketServeEngine(dag, feature_dim=7, max_batch=512)
+    eng = PacketServeEngine(dag, feature_dim=7, max_batch=512,
+                            backend="pallas")
     eng.submit(packets)           # any [n, F] chunk, any n
     verdicts = eng.flush()        # all pending verdicts, in arrival order
-    print(eng.stats())
+    print(eng.stats())            # includes which backend served
 """
 
 from __future__ import annotations
@@ -33,10 +34,21 @@ class ServeStats:
     batches: int = 0
     pad_packets: int = 0           # zero-rows added to fill the last batch
     wall_s: float = 0.0
+    backend: str = "interpret"     # engine the compiled pipeline runs on
 
     @property
     def pkt_per_s(self) -> float:
+        if self.batches == 0:
+            return 0.0             # nothing served yet: rate is 0, not 0/0
         return self.packets / max(self.wall_s, 1e-9)
+
+    @property
+    def backend_batches(self) -> dict:
+        """Batch count per serving engine.  One engine serves the whole
+        compiled executable, so this is derived; a DAG mixing engines
+        per-model reports as "mixed" here with the per-model detail on
+        ``CompiledDag.model_backends``."""
+        return {self.backend: self.batches} if self.batches else {}
 
     def as_dict(self) -> dict:
         return {
@@ -45,20 +57,77 @@ class ServeStats:
             "pad_packets": self.pad_packets,
             "wall_s": round(self.wall_s, 6),
             "pkt_per_s": round(self.pkt_per_s, 1),
+            "backend": self.backend,
+            "backend_batches": self.backend_batches,
         }
 
 
+class _CompiledPipeline:
+    """numpy front-end over a ``stageir.CompiledStages`` recompile."""
+
+    def __init__(self, compiled):
+        self._compiled = compiled
+        self.backend = compiled.backend
+
+    def __call__(self, X: np.ndarray) -> np.ndarray:
+        return np.asarray(self._compiled(X), np.int32)
+
+
+def _rebind_backend(pipeline, backend: str):
+    """Recompile ``pipeline`` for the requested execution engine.
+
+    A ``CompiledDag`` recompiles itself (per-model backend choice); a
+    ``codegen.Pipeline`` recompiles its stage list; a bare callable has no
+    stage list to lower, so the request degrades to serving it as-is (the
+    interpreter fallback the stats then report)."""
+    from repro.core import stageir
+
+    if backend not in stageir.EXEC_BACKENDS:
+        raise KeyError(f"backend must be one of {stageir.EXEC_BACKENDS}")
+    if hasattr(pipeline, "with_backend"):            # chaining.CompiledDag
+        return pipeline.with_backend(backend)
+    if hasattr(pipeline, "stages"):                  # codegen.Pipeline
+        return _CompiledPipeline(
+            stageir.compile_stages(pipeline.stages, backend=backend)
+        )
+    return pipeline
+
+
 class PacketServeEngine:
-    """Micro-batching front-end over one compiled pipeline/DAG callable."""
+    """Micro-batching front-end over one compiled pipeline/DAG callable.
+
+    ``pipeline`` may be a ``codegen.Pipeline``, a ``chaining.CompiledDag``
+    or any ``[n, F] -> verdicts`` callable.  ``backend`` optionally
+    recompiles the pipeline for a specific execution engine:
+
+    * ``backend=None`` (default) serves the callable as given;
+    * ``backend="pallas"`` lowers kernel-eligible pipelines onto fused
+      Pallas kernel launches (docs/pipeline_ir.md#pallas-lowering-contract)
+      and **falls back to the interpreter** when Pallas is unavailable,
+      the stage sequence is outside the kernel envelope, or the callable
+      carries no stage list to recompile;
+    * ``backend="interpret"`` forces the jitted stage-walk engine.
+
+    ``stats()["backend"]`` / ``["backend_batches"]`` report the engine that
+    actually served each batch after any fallback."""
 
     def __init__(self, pipeline: Callable[[np.ndarray], np.ndarray], *,
-                 feature_dim: int, max_batch: int = 256):
+                 feature_dim: int, max_batch: int = 256,
+                 backend: str | None = None):
+        if backend is not None:
+            pipeline = _rebind_backend(pipeline, backend)
         self.pipeline = pipeline
+        # engine provenance: "interpret" unless the callable says otherwise
+        self.backend = getattr(pipeline, "backend", "interpret")
+        if self.backend not in ("interpret", "pallas", "mixed"):
+            self.backend = "interpret"   # e.g. Pipeline.backend == "taurus"
+        if hasattr(pipeline, "compiled_backend"):   # codegen.Pipeline
+            self.backend = pipeline.compiled_backend
         self.feature_dim = int(feature_dim)
         self.max_batch = int(max_batch)
         self._queue: collections.deque[np.ndarray] = collections.deque()
         self._pending = 0
-        self.stats_ = ServeStats()
+        self.stats_ = ServeStats(backend=self.backend)
         # warm the executable so steady-state timing excludes compilation
         self.pipeline(np.zeros((self.max_batch, self.feature_dim),
                                np.float32))

@@ -1,0 +1,176 @@
+"""Pallas serving backend: lowering, fallback, engine reporting (tier-1).
+
+The slow property suite (test_stageir_conformance.py) sweeps randomly
+configured models; these are the fast deterministic checks: the mat_lut
+kernel against its oracle, backend selection/fallback through
+``compile_stages`` / ``compile_dag`` / ``PacketServeEngine``, and the
+``ServeStats.pkt_per_s`` zero-division guard.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import chaining, codegen, feasibility as feas, mlalgos
+from repro.core import pallas_backend, stageir
+from repro.core.alchemy import Model
+from repro.kernels.mat_lut import mat_classify, mat_pipeline_ref
+from repro.serve.packet_engine import PacketServeEngine, ServeStats
+
+needs_pallas = pytest.mark.skipif(
+    not pallas_backend.pallas_available(),
+    reason="Pallas toolchain unavailable in this environment",
+)
+
+
+@pytest.fixture(scope="module")
+def pipes(ad_data):
+    rep = feas.FeasibilityReport(True, [], {"cu": 1}, 1.0, 1e9)
+    dnn = mlalgos.train_dnn(ad_data, hidden=[16, 8], epochs=2, seed=0)
+    km = mlalgos.train_kmeans(ad_data, k=4, seed=0)
+    return {
+        "dnn": codegen.taurus_codegen("dnn", dnn, rep),
+        "km": codegen.taurus_codegen("km", km, rep),
+    }
+
+
+def _leaf(name):
+    return Model({"name": name, "data_loader": lambda: None,
+                  "algorithm": None})
+
+
+# --------------------------------------------------------- mat_lut kernel
+
+
+@needs_pallas
+@pytest.mark.parametrize("use_min", [False, True])
+def test_mat_lut_kernel_matches_oracle(rng, use_min):
+    F, BINS, C, K, B = 5, 64, 4, 4, 300
+    x = rng.normal(size=(B, F)).astype(np.float32)
+    lo, hi = x.min(0) - 1e-3, x.max(0) + 1e-3
+    edges = np.stack([
+        np.linspace(lo[f], hi[f], BINS + 1)[1:-1] for f in range(F)
+    ]).astype(np.float32)
+    tables = rng.normal(size=(F, BINS, C)).astype(np.float32)
+    lmap = rng.integers(0, 3, size=K).astype(np.int32)
+    ref = np.asarray(mat_pipeline_ref(x, edges, tables, lmap,
+                                      use_min=use_min))
+    ker = np.asarray(mat_classify(x, edges, tables, lmap, use_min=use_min))
+    np.testing.assert_array_equal(ref, ker)
+
+
+@needs_pallas
+def test_mat_lut_kernel_exact_on_edge_values(rng):
+    """Values exactly on a range-table edge bucket identically to
+    searchsorted(side='left') — the compare-and-count construction."""
+    F, BINS, C = 3, 32, 3
+    edges = np.sort(rng.normal(size=(F, BINS - 1)), axis=1).astype(np.float32)
+    tables = rng.normal(size=(F, BINS, C)).astype(np.float32)
+    lmap = np.arange(C, dtype=np.int32)
+    x = np.tile(edges[:, 10][None, :], (4, 1)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(mat_pipeline_ref(x, edges, tables, lmap)),
+        np.asarray(mat_classify(x, edges, tables, lmap)),
+    )
+
+
+# ---------------------------------------------------- compile_stages wiring
+
+
+@needs_pallas
+def test_compile_stages_pallas_bit_exact_and_reported(pipes, ad_data):
+    X = ad_data.test_x
+    interp = stageir.compile_stages(pipes["dnn"].stages)
+    pallas = stageir.compile_stages(pipes["dnn"].stages, backend="pallas")
+    assert interp.backend == "interpret"
+    assert pallas.backend == "pallas"
+    assert pallas.requested_backend == "pallas"
+    np.testing.assert_array_equal(np.asarray(interp(X)),
+                                  np.asarray(pallas(X)))
+
+
+@needs_pallas
+def test_pallas_eligible_probe(pipes):
+    # cheap shape-only probe agrees with what compile_stages actually does
+    assert pallas_backend.pallas_eligible(pipes["dnn"].stages)
+    assert not pallas_backend.pallas_eligible(pipes["km"].stages)
+
+
+@needs_pallas
+def test_compile_stages_pallas_falls_back_for_centroid(pipes, ad_data):
+    # CentroidDistance is outside the kernel envelope: the request degrades
+    # to the interpreter and says so
+    pallas = stageir.compile_stages(pipes["km"].stages, backend="pallas")
+    assert pallas.backend == "interpret"
+    assert pallas.requested_backend == "pallas"
+    interp = stageir.compile_stages(pipes["km"].stages)
+    X = ad_data.test_x
+    np.testing.assert_array_equal(np.asarray(interp(X)),
+                                  np.asarray(pallas(X)))
+
+
+def test_compile_stages_rejects_unknown_backend(pipes):
+    with pytest.raises(KeyError):
+        stageir.compile_stages(pipes["dnn"].stages, backend="cuda")
+
+
+@needs_pallas
+def test_compiled_dag_per_pipeline_backend(pipes, ad_data):
+    node = _leaf("dnn") > _leaf("km")
+    dag = chaining.compile_dag(node, pipes)
+    dag_p = chaining.compile_dag(node, pipes, backend="pallas")
+    # per-pipeline choice: the MLP lowers, the centroid pipeline falls back
+    assert dag_p.model_backends == {"dnn": "pallas", "km": "interpret"}
+    assert dag_p.backend == "mixed"
+    X = ad_data.test_x[:512]
+    np.testing.assert_array_equal(dag(X), dag_p(X))
+    # with_backend round-trips (what the engine's backend= uses)
+    assert dag_p.with_backend("interpret").backend == "interpret"
+
+
+# ----------------------------------------------------------- packet engine
+
+
+@needs_pallas
+def test_engine_pallas_backend_serves_and_reports(pipes, ad_data):
+    X = ad_data.test_x[:500]
+    eng_i = PacketServeEngine(pipes["dnn"], feature_dim=7, max_batch=128)
+    eng_p = PacketServeEngine(pipes["dnn"], feature_dim=7, max_batch=128,
+                              backend="pallas")
+    eng_i.submit(X)
+    eng_p.submit(X)
+    np.testing.assert_array_equal(eng_i.flush(), eng_p.flush())
+    assert eng_i.stats()["backend"] == "interpret"
+    assert eng_p.stats()["backend"] == "pallas"
+    assert eng_p.stats()["backend_batches"] == {"pallas": 4}
+
+
+def test_engine_falls_back_for_bare_callables():
+    # a raw callable carries no stage list: the pallas request degrades to
+    # serving it as-is and the stats report the interpreter
+    eng = PacketServeEngine(
+        lambda x: np.zeros(len(x), np.int32), feature_dim=7, max_batch=8,
+        backend="pallas",
+    )
+    eng.submit(np.zeros((4, 7), np.float32))
+    eng.flush()
+    assert eng.stats()["backend"] == "interpret"
+
+
+def test_engine_rejects_unknown_backend():
+    with pytest.raises(KeyError):
+        PacketServeEngine(
+            lambda x: np.zeros(len(x), np.int32), feature_dim=3,
+            max_batch=4, backend="cuda",
+        )
+
+
+def test_pkt_per_s_zero_before_first_batch():
+    stats = ServeStats()
+    assert stats.pkt_per_s == 0.0
+    assert stats.as_dict()["pkt_per_s"] == 0.0
+    eng = PacketServeEngine(
+        lambda x: np.zeros(len(x), np.int32), feature_dim=3, max_batch=4
+    )
+    # warm-up call must not count as served traffic
+    assert eng.stats()["pkt_per_s"] == 0.0
+    assert eng.stats()["batches"] == 0

@@ -1,6 +1,6 @@
 """Property-based conformance suite for the stage-IR lowering contract.
 
-docs/pipeline_ir.md promises three invariants that every backend must keep
+docs/pipeline_ir.md promises four invariants that every backend must keep
 as new backends/stages land; this suite pins them over *randomly configured
 trained models* (vendored hypothesis shim — example 0 is always the minimal
 configuration, so boundary topologies are exercised every run):
@@ -13,7 +13,11 @@ configuration, so boundary topologies are exercised every run):
      quantization-bounded (<=3% label flips at 512 bins), trees exact;
   3. accounting == execution: the shape-only ``lower_topology`` specs that
      feasibility charges carry the same layer shapes / parameter counts /
-     table arities as the executable stages actually run.
+     table arities as the executable stages actually run;
+  4. pallas == interpreter: the Pallas serving backend
+     (docs/pipeline_ir.md#pallas-lowering-contract) is bit-exact on dense
+     pipelines, quantization-bounded on MAT pipelines, and honestly
+     reports interpreter fallback for kernel-ineligible sequences.
 """
 
 import jax.numpy as jnp
@@ -22,6 +26,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import codegen, feasibility as feas, mlalgos, stageir
+from repro.core import pallas_backend
 from repro.core.stageir import (
     CentroidDistance,
     Dense,
@@ -158,3 +163,78 @@ def test_mat_backend_conformance(data, algo):
 
 def _report():
     return feas.FeasibilityReport(True, [], {"cu": 1, "mu": 1}, 1.0, 1e9)
+
+
+# ------------------------------------------- Pallas serving backend parity
+#
+# Every property case above re-runs with backend="pallas"; the contract
+# (docs/pipeline_ir.md#pallas-lowering-contract): bit-exact on dense
+# pipelines, quantization-bounded on MAT pipelines, honest interpreter
+# fallback for kernel-ineligible stage sequences.
+
+needs_pallas = pytest.mark.skipif(
+    not pallas_backend.pallas_available(),
+    reason="Pallas toolchain unavailable in this environment",
+)
+
+
+@needs_pallas
+@given(data=st.data(),
+       algo=st.sampled_from(["dnn", "logreg", "svm", "kmeans"]),
+       multiclass=st.booleans())
+@HSET
+def test_dense_backend_pallas_parity(data, algo, multiclass):
+    ds = _TC if multiclass else _AD
+    trained = _train(algo, data.draw, ds)
+    stages = codegen.taurus_stages(trained)
+    X = ds.test_x
+
+    interp = stageir.compile_stages(stages, backend="interpret")
+    pallas = stageir.compile_stages(stages, backend="pallas")
+    # MLP-shaped pipelines lower onto the fused kernel; CentroidDistance
+    # (kmeans) is outside the envelope and must report the fallback
+    expected = "interpret" if algo == "kmeans" else "pallas"
+    assert pallas.requested_backend == "pallas"
+    assert pallas.backend == expected
+    # dense contract: bit-exact, whatever engine actually serves
+    np.testing.assert_array_equal(
+        np.asarray(interp(jnp.asarray(X, jnp.float32))),
+        np.asarray(pallas(jnp.asarray(X, jnp.float32))),
+    )
+    # the generated Pipeline serves through the same engine and still
+    # verifies exactly against the training math
+    pipe = codegen.taurus_codegen("c", trained, _report(),
+                                  exec_backend="pallas")
+    assert pipe.compiled_backend == expected
+    np.testing.assert_array_equal(pipe(X), trained.predict(X))
+
+
+@needs_pallas
+@given(data=st.data(), algo=st.sampled_from(["svm", "logreg", "kmeans",
+                                             "tree"]))
+@HSET
+def test_mat_backend_pallas_parity(data, algo):
+    ds = _AD
+    trained = _train(algo, data.draw, ds)
+    stages = codegen.mat_stages(trained, ds.train_x)
+    X = ds.test_x
+
+    interp = stageir.compile_stages(stages, backend="interpret")
+    pallas = stageir.compile_stages(stages, backend="pallas")
+    a = np.asarray(interp(jnp.asarray(X, jnp.float32)))
+    b = np.asarray(pallas(jnp.asarray(X, jnp.float32)))
+    if algo == "tree":
+        # TreeTraverse is kernel-ineligible: honest fallback, exact
+        assert pallas.backend == "interpret"
+        np.testing.assert_array_equal(a, b)
+    else:
+        # quantized-LUT pipelines fuse into one mat_lut kernel launch;
+        # agreement with the interpreter is quantization-bounded (the
+        # same <=3% contract the MAT backend itself carries — in practice
+        # the one-hot-matmul gather reproduces the verdicts exactly)
+        assert pallas.backend == "pallas"
+        assert float(np.mean(a != b)) <= 0.03
+        pipe = codegen.mat_codegen("c", trained, _report(), ds.train_x,
+                                   exec_backend="pallas")
+        assert pipe.compiled_backend == "pallas"
+        assert pipe.verify(X, max_mismatch_frac=0.03) <= 0.03

@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Check that every intra-repo markdown link resolves.
+
+Scans all tracked ``*.md`` files for inline links ``[text](target)``,
+skipping external targets (``http(s)://``, ``mailto:``) and anything inside
+fenced code blocks, and verifies that
+
+  * relative file targets exist on disk, and
+  * ``#anchor`` fragments (same-file or cross-file) match a heading in the
+    target document under GitHub's slugification rules.
+
+Exit code 0 when every link resolves; 1 with a per-link report otherwise.
+Run from anywhere:  ``python tools/check_markdown_links.py [root]``.
+This is what the CI docs job runs; tests/test_docs.py runs it in-process.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+SKIP_DIRS = {".git", "__pycache__", "results", ".claude"}
+# reference scrapbooks excerpted from external repos/papers: their links
+# point at documents that were never part of this repository
+SKIP_FILES = {"SNIPPETS.md", "PAPERS.md"}
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->hyphens."""
+    heading = re.sub(r"`([^`]*)`", r"\1", heading)          # inline code
+    heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)  # links
+    heading = heading.strip().lower()
+    heading = re.sub(r"[^\w\- ]", "", heading)
+    return heading.replace(" ", "-")
+
+
+def md_files(root: str) -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        out += [os.path.join(dirpath, f) for f in filenames
+                if f.endswith(".md") and f not in SKIP_FILES]
+    return sorted(out)
+
+
+def anchors_of(path: str) -> set[str]:
+    text = FENCE_RE.sub("", open(path, encoding="utf-8").read())
+    return {github_slug(h) for h in HEADING_RE.findall(text)}
+
+
+def check_file(path: str, root: str) -> list[str]:
+    errors = []
+    text = FENCE_RE.sub("", open(path, encoding="utf-8").read())
+    rel = os.path.relpath(path, root)
+    for target in LINK_RE.findall(text):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):    # external scheme
+            continue
+        file_part, _, anchor = target.partition("#")
+        if file_part:
+            dest = os.path.normpath(
+                os.path.join(os.path.dirname(path), file_part)
+            )
+            if not os.path.exists(dest):
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+        else:
+            dest = path
+        if anchor and dest.endswith(".md"):
+            if github_slug(anchor) not in anchors_of(dest):
+                errors.append(f"{rel}: missing anchor -> {target}")
+    return errors
+
+
+def check_tree(root: str) -> list[str]:
+    errors = []
+    for path in md_files(root):
+        errors += check_file(path, root)
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = os.path.abspath(argv[1]) if len(argv) > 1 else os.path.abspath(
+        os.path.join(os.path.dirname(__file__), os.pardir)
+    )
+    errors = check_tree(root)
+    for e in errors:
+        print(e, file=sys.stderr)
+    n = len(md_files(root))
+    print(f"checked {n} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
