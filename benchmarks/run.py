@@ -15,6 +15,7 @@ from benchmarks import (
     dryrun_roofline,
     dse_throughput,
     fig4_regret,
+    flow_throughput,
     fig6_reaction_time,
     fig7_kmeans_mats,
     kernel_roofline,
@@ -36,6 +37,8 @@ BENCHES = {
             dag_throughput.main),
     "dse": ("sequential vs batched DSE candidates/sec",
             dse_throughput.main),
+    "flow": ("stateful flow pipeline: interpreter vs Pallas pkt/s",
+             flow_throughput.main),
     "kernel": ("fused_mlp kernel roofline", kernel_roofline.main),
     "dryrun": ("dry-run roofline summary", dryrun_roofline.main),
 }

@@ -219,6 +219,7 @@ class MATModel:
     stage_ns: float = 25.0          # per-MAT pipeline latency
     line_rate_pps: float = 1e9      # Tofino line rate is fixed by the ASIC
     dnn_mats_per_layer: int = 12
+    register_bytes: int = 4 * 2**20  # stateful register SRAM per pipeline
 
     def mats_for(self, algorithm: str, topology: dict) -> int:
         """Table count read off the MAT-form stage specs (IIsy rules)."""
@@ -312,3 +313,89 @@ class TPUModel:
             "latency_ns": lat,
             "throughput_pps": thr,
         }
+
+
+# -------------------------------------------------------------- flow state
+#
+# The per-flow register file (repro.flowstate) is a CO-RESIDENT on the
+# target: its slot/SRAM budget is charged like any other resource and
+# composed with a model's report via FeasibilityReport.merge (the same
+# §3.2.1 consistency rule multi-app chaining uses) — resources add,
+# latency adds, throughput is the min.  The shape numbers are read off the
+# shape-only stage specs (stageir.flowstate_specs), never re-derived here.
+
+
+def flowstate_report(spec, platform_kind: str = "taurus", model: Any = None
+                     ) -> FeasibilityReport:
+    """Resource/latency report for one flow register file on one target.
+
+    ``spec`` is a ``flowstate.FlowStateSpec``; ``model`` optionally
+    overrides the platform resource model (defaults match the paper-scale
+    calibrations above)."""
+    from repro.core.stageir import flowstate_specs, spec_params
+
+    specs = flowstate_specs(spec)
+    words = spec_params(specs)             # slots * (key + W register words)
+    nbytes = words * 4
+    reasons: list[str] = []
+
+    if platform_kind == "taurus":
+        m = model or TaurusModel()
+        # register rows live in MU SRAM banks; hash + update occupy a
+        # couple of CU ALU slots; one table read + write per packet
+        mu = max(1, math.ceil(words / m.mu_words))
+        cu = 2
+        if mu > m.total_mu:
+            reasons.append(
+                f"flow registers need {mu} MU > {m.total_mu} available"
+            )
+        return FeasibilityReport(
+            feasible=not reasons, reasons=reasons,
+            resources={"cu": cu, "mu": mu, "register_words": words},
+            latency_ns=4 / m.clock_ghz,    # hash, read, update, write-back
+            throughput_pps=m.clock_ghz * 1e9,
+        )
+    if platform_kind == "tofino":
+        m = model or MATModel()
+        if nbytes > m.register_bytes:
+            reasons.append(
+                f"flow registers need {nbytes} B > {m.register_bytes} B "
+                "register SRAM"
+            )
+        return FeasibilityReport(
+            feasible=not reasons, reasons=reasons,
+            resources={"mats": 1, "register_bytes": nbytes},
+            latency_ns=2 * m.stage_ns,     # hash stage + register stage
+            throughput_pps=m.line_rate_pps,
+        )
+    if platform_kind == "fpga":
+        m = model or FPGAModel()
+        bram = max(1, math.ceil(nbytes / 4608))   # 36Kb BRAM blocks
+        if bram + m.base_bram > m.total_bram:
+            reasons.append(
+                f"flow registers need {bram} BRAM > "
+                f"{m.total_bram - m.base_bram} available"
+            )
+        return FeasibilityReport(
+            feasible=not reasons, reasons=reasons,
+            resources={"bram": bram, "register_bytes": nbytes},
+            latency_ns=3 * 1e3 / m.clock_mhz,     # hash, read, write
+            throughput_pps=m.clock_mhz * 1e6,
+        )
+    if platform_kind == "tpu":
+        m = model or TPUModel()
+        from repro.kernels.flow_update import vmem_bytes as flow_vmem
+
+        vmem = flow_vmem(spec.n_slots, spec.width, m.batch)
+        if vmem > m.vmem_bytes:
+            reasons.append(
+                f"flow table needs {vmem} B VMEM > {m.vmem_bytes} budget"
+            )
+        launch = m.launch_overhead_us * 1e-6
+        return FeasibilityReport(
+            feasible=not reasons, reasons=reasons,
+            resources={"vmem_bytes": vmem, "register_words": words},
+            latency_ns=launch * 1e9,
+            throughput_pps=m.batch / launch,
+        )
+    raise KeyError(f"no flow-state model for platform {platform_kind!r}")

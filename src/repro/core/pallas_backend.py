@@ -9,8 +9,9 @@ hand-written Pallas kernels, one ``pallas_call`` per pipeline, so a packet
 batch makes a single HBM->VMEM round trip and only int32 verdicts cross the
 kernel boundary.
 
-Kernel-eligible sequences (an optional leading ``FeatureSelect`` is folded
-into the kernel's input slice):
+Kernel-eligible sequences (an optional leading prelude of
+``FeatureSelect`` / ``WindowStats`` stages — cheap elementwise feature
+prep — is folded into the kernel's input transform):
 
   ``FusedClassify``                        -> kernels/fused_mlp (in-kernel
   ``FusedMLP [Reduce(argmax)]``               argmax when a Reduce follows)
@@ -19,6 +20,11 @@ into the kernel's input slice):
   ``Quantize LUTGather Reduce [LabelMap]`` -> kernels/mat_lut (quantize,
                                               LUT gather, arg-reduce and
                                               label rewrite in one launch)
+
+Stateful prefixes (``FlowKey RegisterUpdate``, the flow-state contract)
+lower through ``lower_stateful_pallas`` onto kernels/flow_update — the
+whole hash -> gather -> update -> scatter dataflow as ONE kernel launch
+with the register table resident in VMEM.
 
 Everything else (``CentroidDistance``, ``TreeTraverse``, out-of-envelope
 shapes) returns ``None`` and the caller falls back to the interpreter —
@@ -40,16 +46,38 @@ import numpy as np
 from repro.core.stageir import (
     Dense,
     FeatureSelect,
+    FlowKey,
     FusedClassify,
     FusedMLP,
     LabelMap,
     LUTGather,
     Quantize,
     Reduce,
+    RegisterUpdate,
     Stage,
+    WindowStats,
 )
 
-__all__ = ["pallas_available", "pallas_eligible", "lower_stages_pallas"]
+__all__ = [
+    "pallas_available",
+    "pallas_eligible",
+    "lower_stages_pallas",
+    "stateful_eligible",
+    "lower_stateful",
+    "lower_stateful_pallas",
+]
+
+# stages foldable into the kernel's input transform: stateless, cheap,
+# elementwise-ish feature prep ahead of the fused classifier
+_PRELUDE = (FeatureSelect, WindowStats)
+
+
+def _split_prelude(stages: list[Stage]):
+    pre: list[Stage] = []
+    body = list(stages)
+    while body and isinstance(body[0], _PRELUDE):
+        pre.append(body.pop(0))
+    return pre, body
 
 
 def pallas_available() -> bool:
@@ -123,9 +151,7 @@ def pallas_eligible(stages: list[Stage]) -> bool:
     Shape checks only — no parameter packing or device transfers."""
     if not pallas_available():
         return False
-    body = list(stages)
-    if body and isinstance(body[0], FeatureSelect):
-        body = body[1:]
+    _, body = _split_prelude(stages)
     mlp = _match_mlp(body)
     if mlp is not None:
         return _in_envelope_mlp(mlp[0])
@@ -150,11 +176,12 @@ def lower_stages_pallas(stages: list[Stage]) -> Callable | None:
     from repro.kernels import mat_lut as mat_ops
     from repro.kernels.fused_mlp import snap_lane
 
-    body = list(stages)
-    select = None
-    if body and isinstance(body[0], FeatureSelect):
-        select = jnp.asarray(np.asarray(body[0].idx, np.int32))
-        body = body[1:]
+    pre, body = _split_prelude(stages)
+
+    def pre_fn(x, _pre=tuple(pre)):
+        for s in _pre:
+            x = s.apply(x)
+        return x
 
     interpret = jax.default_backend() != "tpu"
 
@@ -170,9 +197,8 @@ def lower_stages_pallas(stages: list[Stage]) -> Callable | None:
         bs = [jnp.asarray(b, jnp.float32) for b in biases]
         op = fm_ops.fused_mlp_classify if classify else fm_ops.fused_mlp
 
-        def mlp_fn(x, _op=op, _ws=ws, _bs=bs, _lane=lane, _sel=select):
-            h = x if _sel is None else x[:, _sel]
-            return _op(h, _ws, _bs, lane=_lane)
+        def mlp_fn(x, _op=op, _ws=ws, _bs=bs, _lane=lane):
+            return _op(pre_fn(x), _ws, _bs, lane=_lane)
 
         return mlp_fn
 
@@ -185,11 +211,68 @@ def lower_stages_pallas(stages: list[Stage]) -> Callable | None:
         tables_j = jnp.asarray(tables, jnp.float32)
         lmap_j = jnp.asarray(lmap, jnp.int32)
 
-        def mat_fn(x, _e=edges_j, _t=tables_j, _l=lmap_j, _m=use_min,
-                   _sel=select):
-            h = x if _sel is None else x[:, _sel]
-            return mat_ops.mat_classify(h, _e, _t, _l, use_min=_m)
+        def mat_fn(x, _e=edges_j, _t=tables_j, _l=lmap_j, _m=use_min):
+            return mat_ops.mat_classify(pre_fn(x), _e, _t, _l, use_min=_m)
 
         return mat_fn
 
     return None
+
+
+# ------------------------------------------------------- stateful prefixes
+
+
+def stateful_eligible(prefix: list[Stage]) -> bool:
+    """Would ``lower_stateful_pallas`` fuse this ``[FlowKey,
+    RegisterUpdate]`` prefix?  Shape checks only."""
+    if not pallas_available():
+        return False
+    if len(prefix) != 2 or not isinstance(prefix[0], FlowKey) \
+            or not isinstance(prefix[1], RegisterUpdate):
+        return False
+    from repro.kernels import flow_update as fu
+
+    spec = prefix[1].spec
+    return (spec.n_slots <= fu.MAX_SLOTS and spec.width <= fu.MAX_WIDTH
+            and len(spec.hist_sizes) <= fu.MAX_HISTS)
+
+
+def lower_stateful(prefix: list[Stage], backend: str
+                   ) -> tuple[Callable, str]:
+    """Lower a ``[FlowKey, RegisterUpdate]`` prefix for one engine.
+
+    -> (traceable ``fn(keys, regs, x, valid) -> (keys', regs', feats)``,
+    the engine that actually serves).  Key derivation and update-vector
+    prep are vectorized jnp either way; the hash/gather/update/scatter
+    chain is the fused Pallas kernel (kernels/flow_update) when
+    ``backend="pallas"`` and the table fits the kernel envelope, else the
+    jnp scan reference — bit-identical per the flow-state contract.  This
+    is the ONE place the prefix calling convention is wired; every
+    stateful consumer goes through it."""
+    use_kernel = backend == "pallas" and stateful_eligible(prefix)
+    from repro.kernels import flow_update as fu
+
+    fk, ru = prefix
+    spec = ru.spec
+    update = fu.flow_update if use_kernel else fu.flow_update_ref
+
+    def flow_fn(keys, regs, x, valid, _fk=fk, _ru=ru, _spec=spec,
+                _update=update):
+        pkt_keys = _fk.apply_keys(x)
+        upd, bins = _ru.prepare(x)
+        return _update(
+            keys, regs, pkt_keys, upd, bins, valid,
+            n_counters=_spec.n_counters, n_ewma=_spec.n_ewma,
+            alpha=_spec.ewma_alpha,
+        )
+
+    return flow_fn, ("pallas" if use_kernel else "interpret")
+
+
+def lower_stateful_pallas(prefix: list[Stage]) -> Callable | None:
+    """Kernel-or-None form of ``lower_stateful`` (mirrors
+    ``lower_stages_pallas``): the fused flow-update launch, or ``None``
+    when the table is outside the kernel envelope."""
+    if not stateful_eligible(prefix):
+        return None
+    return lower_stateful(prefix, "pallas")[0]

@@ -18,6 +18,22 @@ paper's templates instantiate on hardware:
   ``Reduce``            argmax / argmin over class scores
   ``LabelMap``          cluster/leaf id -> class id
 
+Stateful vocabulary (per-flow registers, docs/pipeline_ir.md
+#flow-state-contract):
+
+  ``FlowKey``           mix packet header columns into an int32 flow key
+  ``RegisterUpdate``    per-flow register file update (counters / EWMAs /
+                        windowed histograms) — hash, gather, update,
+                        scatter; the Pallas backend fuses it into ONE
+                        kernel launch (kernels/flow_update)
+  ``WindowStats``       registers -> model-ready windowed statistics
+                        (histograms normalized by the packet count)
+
+Stateful stages carry ``stateful = True`` and cannot be compiled
+statelessly — ``compile_stages`` rejects them; the serving path is
+``repro.flowstate.StatefulPipeline``, which threads a ``FlowState``
+through fixed-shape batches.
+
 Two layers of the stack consume the same IR:
 
   * execution — ``compile_stages`` folds the stage list into one jitted
@@ -292,6 +308,188 @@ class LabelMap(Stage):
         return {"n_in": len(self.table)}
 
 
+# ======================================================== stateful vocabulary
+#
+# Per-flow register stages (docs/pipeline_ir.md#flow-state-contract).  The
+# register-file semantics (layout, eviction, ordering) live in
+# repro.flowstate.registers; these stages are the IR wrapping: FlowKey
+# derives the key, RegisterUpdate derives the update vectors and owns the
+# table spec, WindowStats is the stateless readout the classifier consumes.
+
+
+@dataclasses.dataclass(repr=False)
+class FlowKey(Stage):
+    """Mix packet header columns into a non-negative int32 flow key.
+
+    Columns are rounded to int and FNV-folded, so any integral-valued
+    header fields (ids, ports, bucketed addresses) compose into one key.
+    The sign bit is cleared: the register file reserves -1 for empty."""
+
+    key_cols: tuple                      # packet columns hashed into the key
+    n_slots: int                         # table size the key will index
+
+    kind = "flow_key"
+    stateful = True
+
+    def apply(self, h):
+        raise TypeError(
+            "FlowKey is stateful; serve it through "
+            "repro.flowstate.StatefulPipeline, not compile_stages"
+        )
+
+    def apply_keys(self, h) -> jax.Array:
+        """[B, F] packet rows -> [B] int32 flow keys (traceable)."""
+        key = jnp.zeros(h.shape[0], jnp.uint32)
+        for c in self.key_cols:
+            v = jnp.round(h[:, c]).astype(jnp.int32).astype(jnp.uint32)
+            key = key * jnp.uint32(16777619) ^ v     # FNV-1a style fold
+        return (key & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+
+    def meta(self):
+        return {"key_cols": tuple(self.key_cols), "n_slots": self.n_slots}
+
+
+@dataclasses.dataclass(repr=False)
+class RegisterUpdate(Stage):
+    """Per-flow register update: the stateful heart of the pipeline.
+
+    Per packet: counter 0 += 1 (packet count — the WindowStats
+    normalizer); counter 1+j += packet column ``counter_cols[j]``; EWMA j
+    blends packet column ``ewma_cols[j]``; histogram j increments the
+    bucket ``searchsorted(hist_edges[j], col)`` of its section.  The
+    derivation (``prepare``) is stateless vectorized jnp; the stateful
+    scatter/gather itself runs in kernels/flow_update (Pallas) or its jnp
+    scan reference — bit-identical either way."""
+
+    spec: "object"                       # flowstate.registers.FlowStateSpec
+    counter_cols: tuple = ()             # value-accumulating counters 1..
+    ewma_cols: tuple = ()
+    hist_cols: tuple = ()
+    hist_edges: tuple = ()               # np array of edges per histogram
+
+    kind = "register_update"
+    stateful = True
+
+    def __post_init__(self):
+        s = self.spec
+        if s.n_counters != 1 + len(self.counter_cols):
+            raise ValueError(
+                f"spec.n_counters={s.n_counters} != 1 (pkt count) + "
+                f"{len(self.counter_cols)} counter_cols"
+            )
+        if s.n_ewma != len(self.ewma_cols):
+            raise ValueError("spec.n_ewma != len(ewma_cols)")
+        if len(self.hist_cols) != len(self.hist_edges):
+            raise ValueError("hist_cols and hist_edges must pair up")
+        sizes = tuple(len(np.asarray(e)) + 1 for e in self.hist_edges)
+        if tuple(s.hist_sizes) != sizes:
+            raise ValueError(
+                f"spec.hist_sizes={tuple(s.hist_sizes)} != bins implied by "
+                f"hist_edges {sizes}"
+            )
+
+    def apply(self, h):
+        raise TypeError(
+            "RegisterUpdate is stateful; serve it through "
+            "repro.flowstate.StatefulPipeline, not compile_stages"
+        )
+
+    def prepare(self, h) -> tuple[jax.Array, jax.Array]:
+        """[B, F] packet rows -> (upd [B, C+E] f32, bins [B, H] int32
+        absolute register columns) — the update vectors the register
+        kernel consumes.  Stateless, vectorized, traceable."""
+        B = h.shape[0]
+        cols = [jnp.ones((B, 1), jnp.float32)]       # counter 0: pkt count
+        for c in self.counter_cols:
+            cols.append(h[:, c:c + 1])
+        for c in self.ewma_cols:
+            cols.append(h[:, c:c + 1])
+        upd = jnp.concatenate(cols, 1).astype(jnp.float32)
+        if not self.hist_cols:
+            return upd, jnp.full((B, 1), -1, jnp.int32)
+        offs = self.spec.hist_offsets
+        bins = [
+            (jnp.searchsorted(jnp.asarray(e, jnp.float32), h[:, c])
+             .astype(jnp.int32) + offs[j])[:, None]
+            for j, (c, e) in enumerate(zip(self.hist_cols, self.hist_edges))
+        ]
+        return upd, jnp.concatenate(bins, 1)
+
+    def meta(self):
+        s = self.spec
+        return {
+            "n_slots": s.n_slots,
+            "width": s.width,
+            # stored key + W register words per slot: the SRAM the
+            # feasibility oracle charges (matches flowstate_specs)
+            "params": s.n_slots * (s.width + 1),
+            "sram_bytes": s.sram_bytes,
+        }
+
+
+@dataclasses.dataclass(repr=False)
+class WindowStats(Stage):
+    """Registers -> model-ready windowed statistics (STATELESS readout).
+
+    ``mode="all"``: [counters ++ EWMAs ++ histograms / packet count];
+    ``mode="hist"``: normalized histograms only.  Dividing by the count
+    (counter 0) turns raw bin tallies into the paper's flowmarker form —
+    partial per-flow distributions comparable across flow ages."""
+
+    spec: "object"
+    mode: str = "all"                    # all | hist
+
+    kind = "window_stats"
+
+    def __post_init__(self):
+        if self.mode not in ("all", "hist"):
+            raise KeyError(f"WindowStats mode must be all|hist: {self.mode}")
+
+    @property
+    def n_out(self) -> int:
+        s = self.spec
+        hist = sum(s.hist_sizes)
+        return hist if self.mode == "hist" else s.width
+
+    def apply(self, feats):
+        s = self.spec
+        head = s.n_counters + s.n_ewma
+        denom = jnp.maximum(feats[:, :1], 1.0)       # counter 0 = pkt count
+        hist = feats[:, head:] / denom
+        if self.mode == "hist":
+            return hist
+        return jnp.concatenate([feats[:, :head], hist], 1)
+
+    def meta(self):
+        return {"n_in": self.spec.width, "n_out": self.n_out,
+                "mode": self.mode}
+
+
+def is_stateful(stage: Stage) -> bool:
+    return bool(getattr(stage, "stateful", False))
+
+
+def split_stateful(stages: list[Stage]
+                   ) -> tuple[list[Stage], list[Stage]]:
+    """Split a stateful pipeline into (prefix, suffix).
+
+    The contract: a stateful pipeline starts with exactly
+    ``[FlowKey, RegisterUpdate]``; everything after is a stateless
+    classifier over the emitted feature rows (typically starting with
+    ``WindowStats``).  Raises on any other arrangement."""
+    if len(stages) < 2 or not isinstance(stages[0], FlowKey) \
+            or not isinstance(stages[1], RegisterUpdate):
+        raise ValueError(
+            "stateful pipelines must start with [FlowKey, RegisterUpdate]; "
+            f"got {[s.kind for s in stages[:2]]}"
+        )
+    suffix = list(stages[2:])
+    bad = [s.kind for s in suffix if is_stateful(s)]
+    if bad:
+        raise ValueError(f"stateful stages {bad} outside the prefix")
+    return list(stages[:2]), suffix
+
+
 # ---------------------------------------------------------------- execution
 
 
@@ -363,6 +561,12 @@ def compile_stages(stages: list[Stage], *, fuse: bool = True,
     that actually serves via ``.backend``."""
     if backend not in EXEC_BACKENDS:
         raise KeyError(f"backend must be one of {EXEC_BACKENDS}")
+    state_kinds = [s.kind for s in stages if is_stateful(s)]
+    if state_kinds:
+        raise ValueError(
+            f"stateful stages {state_kinds} cannot be compiled statelessly; "
+            "use repro.flowstate.StatefulPipeline"
+        )
     run_list = fuse_pipeline_stages(stages) if fuse else list(stages)
 
     if backend == "pallas":
@@ -492,6 +696,26 @@ def _lower_mat(algorithm: str, topology: dict, bins: int = MAT_BINS
             for i in range(len(w) - 1)
         ] + [StageSpec("reduce")]
     raise KeyError(f"MAT lowering does not map {algorithm}")
+
+
+def flowstate_specs(spec, *, mode: str = "all") -> list[StageSpec]:
+    """Shape-only specs for the stateful prefix + readout — what the
+    feasibility oracle charges for the register file
+    (``feasibility.flowstate_report``) BEFORE anything is trained.
+
+    ``params`` of the register_update spec is the table's word count
+    (stored key + W register words per slot) and must stay equal to
+    ``RegisterUpdate.meta()["params"]`` — the conformance suite pins the
+    specs-==-stage-meta invariant for the stateful vocabulary too."""
+    W = spec.width
+    n_out = sum(spec.hist_sizes) if mode == "hist" else W
+    return [
+        StageSpec("flow_key", n_in=0, n_out=1, extra=(spec.n_slots,)),
+        StageSpec("register_update", n_in=W, n_out=W,
+                  params=spec.n_slots * (W + 1),
+                  extra=(spec.n_slots, W)),
+        StageSpec("window_stats", n_in=W, n_out=n_out),
+    ]
 
 
 def spec_layers(specs: list[StageSpec]) -> list[tuple[int, int]]:

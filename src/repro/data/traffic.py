@@ -1,0 +1,339 @@
+"""Streaming traffic-scenario generator: seeded, replayable packet streams.
+
+netdata.py synthesizes *feature matrices* (offline training sets); this
+module synthesizes *packet streams* — time-ordered per-packet records that
+the stateful serving path (repro.flowstate) consumes live, reproducing the
+paper's per-packet reaction-time setting (§5.1.1) on a stream instead of
+precomputed flow histograms.  Scenario shapes follow the SDN-DDoS
+synthetic-dataset playbook (Mininet + hping3/iperf traffic, flows labeled
+by generation-time ground truth): normal traffic from bulk/interactive
+generators, attack traffic as floods/scans, label = how the flow was
+generated.
+
+Packet record (float32 row, ``COLUMNS`` order):
+
+  ``flow_id``   integral flow key (< 2^22, exact in f32)
+  ``pkt_len``   bytes on the wire
+  ``ipt_s``     inter-arrival gap to this flow's previous packet (0 for
+                the flow's first packet)
+  ``dst_port``  destination port (bucketed small int)
+
+Scenarios (every flow carries a ground-truth label; per-packet labels
+inherit the flow's):
+
+  ``benign``         web-ish + bulk + DHT-chatty baseline, label 0
+  ``ddos_burst``     baseline, then a volumetric burst: many short
+                     high-rate small-packet flows onto one service port
+  ``port_scan``      baseline + one scanner: hundreds of 1-2 packet
+                     SYN-sized flows sweeping ports
+  ``elephant_mice``  heavy-hitter detection: few elephant flows (MTU
+                     packets, tiny gaps, label 1) among many mice
+
+Streams are deterministic in (scenario, seed, sizes) and replayable —
+``PacketStream.chunks`` re-yields the identical sequence every call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+COLUMNS = ("flow_id", "pkt_len", "ipt_s", "dst_port")
+COL_FLOW, COL_LEN, COL_IPT, COL_PORT = range(4)
+
+SCENARIOS = ("benign", "ddos_burst", "port_scan", "elephant_mice")
+
+
+@dataclasses.dataclass
+class PacketStream:
+    """A time-ordered packet stream with per-packet ground truth."""
+
+    scenario: str
+    packets: np.ndarray        # [N, 4] f32, COLUMNS order, time-sorted
+    labels: np.ndarray         # [N] int32 per-packet (= flow label)
+    flow_ids: np.ndarray       # [N] int32 (packets[:, COL_FLOW] as int)
+    flow_labels: dict          # flow_id -> label
+
+    @property
+    def n_packets(self) -> int:
+        return len(self.packets)
+
+    @property
+    def n_flows(self) -> int:
+        return len(self.flow_labels)
+
+    def chunks(self, size: int):
+        """Replayable chunk iterator (fresh, identical sequence per call)."""
+        for s in range(0, len(self.packets), size):
+            yield self.packets[s:s + size]
+
+
+# ------------------------------------------------------------- flow shapes
+
+
+def _flow(fid, label, t0, sizes, gaps, port):
+    return {"fid": int(fid), "label": int(label), "t0": float(t0),
+            "sizes": sizes, "gaps": gaps, "port": int(port)}
+
+
+def _benign_flows(rng, n_flows: int, span: float) -> list[dict]:
+    flows = []
+    for _ in range(n_flows):
+        kind = rng.random()
+        if kind < 0.45:       # interactive/web: smallish bimodal packets
+            n = int(rng.integers(8, 60))
+            sizes = np.where(rng.random(n) < 0.6,
+                             rng.normal(240, 80, n),
+                             rng.normal(1100, 180, n))
+            gaps = rng.lognormal(np.log(0.15), 1.0, n)
+            port = int(rng.choice((80, 443)))
+        elif kind < 0.8:      # bulk transfer: MTU-sized, tiny gaps
+            n = int(rng.integers(60, 300))
+            sizes = rng.normal(1380, 60, n)
+            gaps = rng.lognormal(np.log(0.01), 0.7, n)
+            port = int(rng.choice((443, 8080)))
+        else:                 # DHT-ish chatty mode (the confuser)
+            n = int(rng.integers(20, 120))
+            sizes = rng.normal(300, 90, n)
+            gaps = rng.lognormal(np.log(1.0), 1.1, n)
+            port = 6881
+        flows.append(_flow(0, 0, rng.uniform(0, span * 0.7), sizes, gaps,
+                           port))
+    return flows
+
+
+def _attack_flows(rng, scenario: str, span: float) -> list[dict]:
+    flows = []
+    if scenario == "ddos_burst":
+        # volumetric burst from many (spoofed-source) flows onto one port
+        burst_t = span * 0.3
+        for _ in range(120):
+            n = int(rng.integers(40, 160))
+            sizes = rng.normal(90, 25, n)              # tiny payloads
+            gaps = rng.lognormal(np.log(1.5e-3), 0.5, n)   # ~kHz per flow
+            flows.append(_flow(0, 1, burst_t + rng.uniform(0, span * 0.2),
+                               sizes, gaps, 80))
+    elif scenario == "port_scan":
+        # one scanner host: a 1-2 packet SYN-sized flow per swept port
+        t = span * 0.25
+        for i in range(400):
+            n = int(rng.integers(1, 3))
+            sizes = rng.normal(48, 4, n)
+            gaps = rng.lognormal(np.log(5e-3), 0.4, n)
+            flows.append(_flow(0, 1, t, sizes, gaps, 1024 + i))
+            t += float(rng.uniform(2e-3, 8e-3))
+    elif scenario == "elephant_mice":
+        for _ in range(12):
+            n = int(rng.integers(600, 1500))
+            sizes = rng.normal(1430, 25, n)
+            gaps = rng.lognormal(np.log(8e-4), 0.4, n)
+            flows.append(_flow(0, 1, rng.uniform(0, span * 0.3), sizes,
+                               gaps, 443))
+    else:
+        raise KeyError(scenario)
+    return flows
+
+
+def make_stream(scenario: str, *, n_packets: int = 30_000,
+                n_benign_flows: int = 220, span_s: float = 120.0,
+                seed: int = 0) -> PacketStream:
+    """Synthesize one scenario as a time-ordered stream of ~``n_packets``
+    packets (trimmed exactly after the merge).  Deterministic in all
+    arguments; attack scenarios keep the benign baseline running
+    throughout, so detection is measured against live background traffic."""
+    if scenario not in SCENARIOS:
+        raise KeyError(f"scenario must be one of {SCENARIOS}")
+    rng = np.random.default_rng(seed)
+    # scale the baseline with the packet budget so trimming to n_packets
+    # never cuts the stream before the attack phase begins
+    n_benign = max(8, int(round(n_benign_flows
+                                * min(1.0, n_packets / 30_000))))
+    flows = _benign_flows(rng, n_benign, span_s)
+    if scenario != "benign":
+        flows += _attack_flows(rng, scenario, span_s)
+
+    # unique non-negative flow ids, exact in f32
+    ids = rng.permutation(1 << 20)[:len(flows)]
+    for f, fid in zip(flows, ids):
+        f["fid"] = int(fid)
+
+    fid_col, t_col, len_col, port_col, lab_col = [], [], [], [], []
+    for f in flows:
+        n = len(f["sizes"])
+        gaps = np.clip(np.asarray(f["gaps"], np.float64), 1e-5, 600.0)
+        t = f["t0"] + np.cumsum(gaps) - gaps[0]    # first packet at t0
+        fid_col.append(np.full(n, f["fid"], np.int64))
+        t_col.append(t)
+        len_col.append(np.clip(f["sizes"], 40, 1500))
+        port_col.append(np.full(n, f["port"], np.int64))
+        lab_col.append(np.full(n, f["label"], np.int64))
+    fid = np.concatenate(fid_col)
+    t = np.concatenate(t_col)
+    plen = np.concatenate(len_col)
+    port = np.concatenate(port_col)
+    lab = np.concatenate(lab_col)
+
+    # global arrival order; stable so same-timestamp packets keep flow order
+    order = np.argsort(t, kind="stable")
+    fid, t, plen, port, lab = (a[order] for a in (fid, t, plen, port, lab))
+
+    # per-flow inter-arrival gaps: diff within each flow's packet sequence
+    by_flow = np.lexsort((t, fid))
+    tt, ff = t[by_flow], fid[by_flow]
+    d = np.diff(tt, prepend=tt[:1])
+    same = np.diff(ff, prepend=ff[:1] - 1) == 0
+    ipt = np.zeros_like(t)
+    ipt[by_flow] = np.where(same, d, 0.0)
+
+    n = min(n_packets, len(fid))
+    packets = np.stack(
+        [fid[:n], plen[:n], ipt[:n], port[:n]], axis=1
+    ).astype(np.float32)
+    flow_labels = {int(f["fid"]): int(f["label"]) for f in flows}
+    return PacketStream(scenario, packets, lab[:n].astype(np.int32),
+                        fid[:n].astype(np.int32), flow_labels)
+
+
+# ------------------------------------------------- stateful feature stages
+
+
+def flow_feature_stages(*, n_slots: int = 2048, pl_bins: int = 16,
+                        ipt_bins: int = 8, ewma_alpha: float = 0.125):
+    """The canonical stateful prefix for ``COLUMNS`` packet streams.
+
+    -> ((FlowKey, RegisterUpdate, WindowStats), feature_names): per-flow
+    packet/byte counters, EWMAs of packet length and inter-arrival time,
+    and a flowmarker-style windowed histogram (packet-length bins ++
+    IPT bins, normalized by the packet count in WindowStats)."""
+    from repro.core import stageir
+    from repro.flowstate.registers import FlowStateSpec
+
+    pl_edges = np.linspace(0.0, 1500.0, pl_bins + 1)[1:-1]
+    ipt_edges = np.geomspace(1e-4, 120.0, ipt_bins + 1)[1:-1]
+    spec = FlowStateSpec(
+        n_slots=n_slots, n_counters=2, n_ewma=2,
+        hist_sizes=(pl_bins, ipt_bins), ewma_alpha=ewma_alpha,
+    )
+    fk = stageir.FlowKey(key_cols=(COL_FLOW,), n_slots=n_slots)
+    ru = stageir.RegisterUpdate(
+        spec,
+        counter_cols=(COL_LEN,),             # counter 1: byte count
+        ewma_cols=(COL_LEN, COL_IPT),
+        hist_cols=(COL_LEN, COL_IPT),
+        hist_edges=(pl_edges, ipt_edges),
+    )
+    ws = stageir.WindowStats(spec, mode="all")
+    names = (["pkt_count", "byte_count", "ewma_len", "ewma_ipt"]
+             + [f"pl_bin_{i}" for i in range(pl_bins)]
+             + [f"ipt_bin_{i}" for i in range(ipt_bins)])
+    return (fk, ru, ws), names
+
+
+def stream_feature_dataset(stream: PacketStream, stages, names,
+                           *, sample_every: int = 2, test_frac: float = 0.3,
+                           chunk: int = 1024, seed: int = 0):
+    """Replay a stream through the register file (reference engine) and
+    collect per-packet (WindowStats features, flow label) pairs as a
+    standardized ``netdata.Dataset`` -> (dataset, mu, sd).
+
+    ``mu``/``sd`` are the training-split feature moments; fold them into
+    the classifier's first layer (``fold_input_standardization``) so the
+    SERVED pipeline consumes raw register rows."""
+    from repro.data.netdata import Dataset
+    from repro.flowstate.pipeline import StatefulPipeline
+    from repro.serve.packet_engine import PacketServeEngine
+
+    sp = StatefulPipeline(list(stages), backend="interpret")
+    eng = PacketServeEngine(sp, feature_dim=len(COLUMNS), max_batch=chunk)
+    feats = []
+    for c in stream.chunks(chunk):
+        eng.submit(c)
+        feats.append(eng.flush())
+    X = np.concatenate(feats, 0).astype(np.float32)
+    y = stream.labels.astype(np.int32)
+    X, y = X[::sample_every], y[::sample_every]
+
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(X))
+    n_test = int(len(X) * test_frac)
+    te, tr = perm[:n_test], perm[n_test:]
+    mu = X[tr].mean(0)
+    sd = X[tr].std(0) + 1e-6
+    ds = Dataset(
+        name=f"flowstats-{stream.scenario}",
+        train_x=((X[tr] - mu) / sd).astype(np.float32), train_y=y[tr],
+        test_x=((X[te] - mu) / sd).astype(np.float32), test_y=y[te],
+        feature_names=list(names), num_classes=2,
+    )
+    return ds, mu.astype(np.float32), sd.astype(np.float32)
+
+
+def fold_input_standardization(stages, mu: np.ndarray, sd: np.ndarray):
+    """Fold a (x - mu) / sd input transform into the first dense layer of
+    a classifier suffix, so the served pipeline takes RAW register rows.
+
+    z @ W + b with z = (x - mu)/sd  ==  x @ (W / sd[:, None]) + (b - (mu/sd) @ W)
+    — exact affine composition; returns a rewritten copy of the stages."""
+    from repro.core.stageir import Dense, FusedClassify, FusedMLP
+
+    out = []
+    done = False
+    for s in stages:
+        if not done and isinstance(s, (FusedMLP, FusedClassify)):
+            w0 = np.asarray(s.weights[0], np.float32)
+            b0 = np.asarray(s.biases[0], np.float32)
+            weights = [w0 / sd[:, None]] + [np.asarray(w)
+                                            for w in s.weights[1:]]
+            biases = [b0 - (mu / sd) @ w0] + [np.asarray(b)
+                                              for b in s.biases[1:]]
+            out.append(type(s)(weights, biases))
+            done = True
+        elif not done and isinstance(s, Dense):
+            w0 = np.asarray(s.w, np.float32)
+            b0 = np.asarray(s.b, np.float32)
+            out.append(Dense(w0 / sd[:, None], b0 - (mu / sd) @ w0, s.act))
+            done = True
+        else:
+            out.append(s)
+    if not done:
+        raise ValueError("no dense layer to fold the standardization into")
+    return out
+
+
+# -------------------------------------------------------- reaction metrics
+
+
+def reaction_report(stream: PacketStream, verdicts: np.ndarray) -> dict:
+    """Reaction-time report: per attack flow, how many of ITS packets
+    arrive before the first positive verdict (1-based; the paper's
+    packets-until-detection).  Also benign false-positive flow rate."""
+    verdicts = np.asarray(verdicts)
+    react, undetected, fp_flows, benign_flows = [], 0, 0, 0
+    for fid, label in stream.flow_labels.items():
+        mask = stream.flow_ids == fid
+        if not mask.any():
+            continue
+        v = verdicts[mask]
+        hits = np.nonzero(v == 1)[0]
+        if label == 1:
+            if len(hits):
+                react.append(int(hits[0]) + 1)
+            else:
+                undetected += 1
+        else:
+            benign_flows += 1
+            fp_flows += bool(len(hits))
+    react_arr = np.asarray(react, np.float64)
+    n_attack = len(react) + undetected
+    return {
+        "attack_flows": n_attack,
+        "detected_flows": len(react),
+        "detection_rate": (len(react) / n_attack) if n_attack else 0.0,
+        "reaction_pkts_median": (float(np.median(react_arr))
+                                 if len(react) else float("nan")),
+        "reaction_pkts_p95": (float(np.percentile(react_arr, 95))
+                              if len(react) else float("nan")),
+        "benign_fp_flow_rate": (fp_flows / benign_flows) if benign_flows
+        else 0.0,
+    }

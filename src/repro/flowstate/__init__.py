@@ -1,0 +1,10 @@
+"""Stateful flow-tracking subsystem: per-flow registers for the serving
+engine.  See docs/pipeline_ir.md#flow-state-contract."""
+
+from repro.flowstate.registers import (
+    FlowState,
+    FlowStateSpec,
+    init_state,
+    update_flows,
+)
+from repro.flowstate.pipeline import StatefulPipeline

@@ -1,0 +1,109 @@
+"""Stateful pipeline compilation: flow registers + classifier in ONE jit.
+
+``StatefulPipeline`` is the serving artifact for a stage list that starts
+with the stateful prefix ``[FlowKey, RegisterUpdate]`` (core.stageir): per
+fixed-shape batch it derives flow keys, updates the register file, reads
+each packet's post-update feature row, and runs the stateless classifier
+suffix — all inside one jitted step, so steady-state serving never
+re-traces and the register state threads through as explicit arrays (no
+Python-side mutation).
+
+Backend selection mirrors the stateless contract
+(docs/pipeline_ir.md#flow-state-contract):
+
+  * the PREFIX lowers onto the fused flow-update Pallas kernel
+    (kernels/flow_update) when the table fits the kernel envelope, else
+    the jnp scan reference — bit-identical either way;
+  * the SUFFIX lowers through ``core.pallas_backend.lower_stages_pallas``
+    under the existing Pallas lowering contract, else the jitted stage
+    walk.
+
+``backend`` reports what actually serves: ``"pallas"`` when both parts
+lowered, ``"interpret"`` when neither did, ``"mixed"`` otherwise — never
+the engine that was merely requested.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import stageir
+from repro.flowstate.registers import FlowState, FlowStateSpec, init_state
+
+
+class StatefulPipeline:
+    """Compiled stateful serving pipeline.
+
+    Callable as ``state', verdicts = pipe(state, X, valid=None)`` where
+    ``X`` is a [B, F] packet batch and ``valid`` masks ragged-batch
+    padding rows (masked rows never touch the register file and their
+    verdicts are meaningless — the engine slices them off).  Rows are
+    applied in arrival order; see the flow-state contract for the
+    eviction/ordering guarantees."""
+
+    def __init__(self, stages: list[stageir.Stage], *,
+                 backend: str = "interpret", fuse: bool = True):
+        if backend not in stageir.EXEC_BACKENDS:
+            raise KeyError(f"backend must be one of {stageir.EXEC_BACKENDS}")
+        import jax
+
+        from repro.core import pallas_backend
+
+        self.stages = list(stages)
+        self.requested_backend = backend
+        prefix, suffix = stageir.split_stateful(self.stages)
+        self.spec: FlowStateSpec = prefix[1].spec
+        self.feature_dim = None          # any F the key/update cols allow
+
+        flow_fn, self.flow_backend = pallas_backend.lower_stateful(
+            prefix, backend
+        )
+
+        run_suffix = (stageir.fuse_pipeline_stages(suffix) if fuse
+                      else list(suffix))
+        suffix_fn = None
+        if backend == "pallas" and run_suffix:
+            suffix_fn = pallas_backend.lower_stages_pallas(run_suffix)
+        self.classifier_backend = ("pallas" if suffix_fn is not None
+                                   else "interpret")
+        if suffix_fn is None:
+            def suffix_fn(feats, _s=run_suffix):
+                return stageir.apply_stages(_s, feats)
+
+        def step(keys, regs, x, valid, _flow=flow_fn, _cls=suffix_fn):
+            keys, regs, feats = _flow(keys, regs, x, valid)
+            return keys, regs, _cls(feats)
+
+        self._step = jax.jit(step)
+
+    @property
+    def backend(self) -> str:
+        """The engine that actually serves, after any fallback."""
+        kinds = {self.flow_backend, self.classifier_backend}
+        return kinds.pop() if len(kinds) == 1 else "mixed"
+
+    def with_backend(self, backend: str) -> "StatefulPipeline":
+        """Recompile for another engine (what PacketServeEngine's
+        ``backend=`` uses)."""
+        return StatefulPipeline(self.stages, backend=backend)
+
+    def init_state(self) -> FlowState:
+        return init_state(self.spec)
+
+    def __call__(self, state: FlowState, X, valid=None
+                 ) -> tuple[FlowState, np.ndarray]:
+        import jax.numpy as jnp
+
+        X = jnp.asarray(X, jnp.float32)
+        if valid is None:
+            valid = jnp.ones((X.shape[0],), jnp.int32)
+        keys, regs, verdicts = self._step(
+            state.keys, state.regs, X, jnp.asarray(valid, jnp.int32)
+        )
+        return FlowState(self.spec, keys, regs), np.asarray(verdicts)
+
+    def __repr__(self):
+        return (f"StatefulPipeline(slots={self.spec.n_slots}, "
+                f"width={self.spec.width}, backend={self.backend!r}, "
+                f"flow={self.flow_backend!r}, "
+                f"classifier={self.classifier_backend!r})")

@@ -1,0 +1,135 @@
+"""Per-flow register file: the stateful half of a data-plane ML pipeline.
+
+Real per-packet ML data planes (Taurus, Planter-style P4 targets) keep
+per-flow registers — counters, EWMAs, windowed histograms — updated at line
+rate, and classify on those registers instead of precomputed offline
+features.  This module is that register file for the serving engine:
+
+  * ``FlowStateSpec`` — the shape of one flow's state: a direct-indexed
+    hash table with a FIXED slot count (power of two) whose rows hold
+    ``n_counters`` accumulators, ``n_ewma`` exponential moving averages and
+    one histogram section per entry of ``hist_sizes``;
+  * ``FlowState`` — the live table: stored keys [S] (-1 = empty) plus
+    register rows [S, W];
+  * ``update_flows`` — one batched update through either execution engine
+    (jnp scan reference, or the fused Pallas scatter/gather kernel in
+    ``kernels/flow_update`` — bit-identical by construction).
+
+Collision policy (see docs/pipeline_ir.md#flow-state-contract): slots are
+direct-indexed by ``hash(key) & (S-1)``; a packet whose key differs from
+the stored key EVICTS the resident flow — state resets to zero and the new
+flow claims the slot (last-writer-wins).  This is the honest semantics of
+a fixed-size switch register array: under slot pressure, long-lived flows
+can be displaced, and accuracy degrades gracefully with table load rather
+than the engine re-allocating memory mid-stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowStateSpec:
+    """Shape of the per-flow register file.
+
+    ``n_counters`` >= 1; counter 0 is by convention the packet count (the
+    stage lowering always increments it by 1, and ``WindowStats`` uses it
+    as the histogram normalizer).  ``hist_sizes`` lists the bin count of
+    each histogram section; sections are laid out back to back after the
+    EWMA block."""
+
+    n_slots: int = 1024
+    n_counters: int = 1
+    n_ewma: int = 0
+    hist_sizes: tuple = ()
+    ewma_alpha: float = 0.125
+
+    def __post_init__(self):
+        if self.n_slots < 2 or self.n_slots & (self.n_slots - 1):
+            raise ValueError(
+                f"n_slots must be a power of two >= 2, got {self.n_slots}"
+            )
+        if self.n_counters < 1:
+            raise ValueError("n_counters must be >= 1 (slot 0 = pkt count)")
+        if any(int(h) < 1 for h in self.hist_sizes):
+            raise ValueError("every histogram needs >= 1 bin")
+
+    @property
+    def width(self) -> int:
+        """Register words per flow row (counters + EWMAs + hist bins)."""
+        return self.n_counters + self.n_ewma + sum(self.hist_sizes)
+
+    @property
+    def hist_offsets(self) -> tuple:
+        """Absolute start column of each histogram section."""
+        offs, base = [], self.n_counters + self.n_ewma
+        for h in self.hist_sizes:
+            offs.append(base)
+            base += int(h)
+        return tuple(offs)
+
+    @property
+    def sram_bytes(self) -> int:
+        """Table footprint: rows plus the stored-key word per slot — what
+        feasibility charges against the target's register budget."""
+        return self.n_slots * (self.width + 1) * 4
+
+
+@dataclasses.dataclass
+class FlowState:
+    """The live register file; arrays are treated as immutable (every
+    update returns a new FlowState over fresh buffers)."""
+
+    spec: FlowStateSpec
+    keys: jax.Array    # [S] int32 stored flow key, -1 = empty slot
+    regs: jax.Array    # [S, W] f32 register rows
+
+    @property
+    def occupied(self) -> int:
+        return int(np.sum(np.asarray(self.keys) >= 0))
+
+
+def init_state(spec: FlowStateSpec) -> FlowState:
+    return FlowState(
+        spec,
+        jnp.full((spec.n_slots,), -1, jnp.int32),
+        jnp.zeros((spec.n_slots, spec.width), jnp.float32),
+    )
+
+
+def update_flows(
+    state: FlowState,
+    pkt_keys,              # [B] int32 flow key per packet (>= 0)
+    upd,                   # [B, C+E] counter increments ++ EWMA values
+    bins=None,             # [B, H] absolute hist columns (-1 = none)
+    valid=None,            # [B] 0 = padding row, skipped
+    *,
+    backend: str = "interpret",
+) -> tuple[FlowState, jax.Array]:
+    """One batched register update -> (new state, per-packet feature rows).
+
+    ``backend="pallas"`` runs the fused scatter/gather kernel (one launch,
+    table resident in VMEM); ``"interpret"`` the jitted jnp scan.  Both are
+    bit-identical (shared per-packet step) and preserve arrival order."""
+    from repro.kernels import flow_update as fu
+
+    spec = state.spec
+    B = int(np.shape(pkt_keys)[0])
+    if bins is None:
+        bins = jnp.full((B, 1), -1, jnp.int32)
+    if valid is None:
+        valid = jnp.ones((B,), jnp.int32)
+    fn = fu.flow_update if backend == "pallas" else fu.flow_update_ref
+    keys, regs, feats = fn(
+        state.keys, state.regs, jnp.asarray(pkt_keys, jnp.int32),
+        jnp.asarray(upd, jnp.float32), jnp.asarray(bins, jnp.int32),
+        jnp.asarray(valid, jnp.int32),
+        n_counters=spec.n_counters, n_ewma=spec.n_ewma,
+        alpha=spec.ewma_alpha,
+    )
+    return FlowState(spec, keys, regs), feats

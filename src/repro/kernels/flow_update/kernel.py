@@ -1,0 +1,225 @@
+"""Pallas kernel: batched flow-state scatter/gather update in ONE launch.
+
+The jnp reference (ref.py) walks the batch packet-by-packet — the update is
+order-dependent (EWMAs are non-commutative, collisions evict), so a naive
+vectorization is wrong.  This kernel exploits the one independence the
+semantics do give: REGISTER SLOTS NEVER INTERACT.  Each slot's final state
+is a function of its own packets' subsequence only, so the sequential loop
+factorizes into per-slot chains, and the kernel executes a *conflict-free
+round schedule*:
+
+  round r applies, simultaneously for every slot, the (r+1)-th packet
+  that hashes to it (``rank[p]`` = number of earlier same-slot packets in
+  the batch).  Within a round all targets are distinct, so the whole
+  table updates as a few [S, W] vector ops; across rounds each slot sees
+  its packets in arrival order.
+
+The schedule is HYBRID: the first ``PAR_ROUNDS`` ranks run as vectorized
+rounds — in busy interleaved traffic (the serving regime this subsystem
+exists for) that retires nearly every packet, since per-flow multiplicity
+within one batch is small — and the deep-chain remainder
+(``rank >= PAR_ROUNDS``) drains through a COMPACTED sequential loop over
+just those packets, reusing the reference's ``_packet_step``.  Both phases
+respect per-slot arrival order, so the combination is exact.  The wrapper
+(ops.py) only launches this kernel when rounds retire most of the batch;
+drain-dominated batches take the reference schedule instead — a pure
+schedule choice, since every schedule computes the same bits.
+
+Per-slot arithmetic is the SAME elementwise f32 expressions as the
+reference's ``_packet_step`` in the same order, so state, features and
+verdicts are **bit-identical** to ``flow_update_ref`` by the per-slot
+decomposition — the conformance suite pins this over random collision-heavy
+batches.
+
+The whole dataflow — key hash, slot gather, counter/EWMA/histogram
+update, slot scatter, per-packet feature emit — runs in one
+``pallas_call`` with the register table resident in VMEM; only the updated
+table and the [B, W] feature rows cross the kernel boundary.  The [B]
+rank vector (each packet's position within its slot's chain, valid rows
+only) is precomputed once by the wrapper — it doubles as the schedule-
+choice input there, and keeps the O(B^2) rank derivation and its [B, B]
+intermediates out of the kernel's VMEM footprint.  The gather/scatter
+constructions use jnp indexing (exact), which the interpret path executes
+directly; on TPU they lower through Mosaic's gather support.
+
+Grid: (1,) — rounds are a sequential dependency chain; everything is a
+full VMEM-resident block.  VMEM working set = S*(W+1) words + batch rows
+(``vmem_bytes``), which feasibility checks against the platform budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flow_update.ref import _packet_step, hash_slot
+
+LANE = 128
+# ranks executed as vectorized cross-slot rounds before the schedule
+# switches to the compacted sequential drain (crossover: one round costs
+# ~a dozen [S, W] vector ops, one drained packet ~a dozen [1, W] ops)
+PAR_ROUNDS = 4
+
+
+def _kernel(keys_ref, regs_ref, pk_ref, upd_ref, bins_ref, valid_ref,
+            rank_ref, keys_out, regs_out, feats_out, *,
+            n_counters: int, n_ewma: int, n_hists: int, alpha: float):
+    """keys_ref [S, Kw] i32; regs_ref [S, W_pad] f32; pk_ref [B, Kw] i32;
+    upd_ref [B, U_pad] f32; bins_ref [B, H_pad] i32; valid_ref/rank_ref
+    [B, Kw] i32.  Only column 0 of the narrow int refs is live (rest is
+    tile padding); only the first ``n_hists`` bins columns are real.
+
+    ``rank[p]`` (precomputed by ops.py) = number of earlier VALID
+    same-slot packets — the round in which p fires.  Padding rows carry
+    ``valid == 0``: they are excluded from every round and from the
+    drain, and their feature rows stay zero (matching the reference)."""
+    keys = keys_ref[...][:, 0]                   # [S]
+    regs = regs_ref[...]                         # [S, W]
+    pk = pk_ref[...][:, 0]                       # [B]
+    upd = upd_ref[...]
+    bins = bins_ref[...][:, :max(n_hists, 1)]
+    valid = valid_ref[...][:, 0]
+    rank = rank_ref[...][:, 0]
+    S, W = regs.shape
+    B = pk.shape[0]
+    C, E = n_counters, n_ewma
+
+    slot = hash_slot(pk, S)                      # key-hash inside the launch
+    live = valid != 0
+    n_rounds = jnp.minimum(
+        jnp.max(jnp.where(live, rank, 0)) + 1, PAR_ROUNDS
+    )
+
+    col = jax.lax.broadcasted_iota(jnp.int32, (S, W), 1)
+    b_idx = jnp.arange(B, dtype=jnp.int32)
+    feats0 = jnp.zeros((B, W), jnp.float32)
+    pk2, slot2, valid2 = pk[:, None], slot[:, None], valid[:, None]
+
+    def round_body(state):
+        r, keys1, regs1, feats = state
+        sel = (rank == r) & live
+        # at most one selected packet per slot: scatter packet ids, drop
+        # the non-selected (targets pushed out of range)
+        tgt = jnp.where(sel, slot, S)
+        pid = jnp.full((S,), -1, jnp.int32).at[tgt].set(b_idx, mode="drop")
+        ok = pid >= 0
+        pidc = jnp.maximum(pid, 0)
+        pk_s = pk[pidc]                          # [S] this round's keys
+        upd_s = upd[pidc]                        # [S, U]
+        bins_s = bins[pidc]                      # [S, H]
+
+        # identical per-slot arithmetic to ref._packet_step, vectorized
+        # across slots (elementwise f32: bit-identical per element)
+        fresh = keys1 != pk_s                    # evict-on-collision
+        row0 = jnp.where(fresh[:, None], jnp.zeros_like(regs1), regs1)
+        inc_full = jnp.pad(upd_s[:, :C], ((0, 0), (0, W - C)))
+        val_full = jnp.pad(upd_s[:, C:C + E], ((0, 0), (C, W - C - E)))
+        new = jnp.where(col < C, row0 + inc_full, row0)
+        ewma = jnp.where(fresh[:, None], val_full,
+                         row0 * (1.0 - alpha) + val_full * alpha)
+        new = jnp.where((col >= C) & (col < C + E), ewma, new)
+        for j in range(n_hists):                 # static unroll per hist
+            new = new + (col == bins_s[:, j:j + 1]).astype(jnp.float32)
+
+        regs1 = jnp.where(ok[:, None], new, regs1)
+        keys1 = jnp.where(ok, pk_s, keys1)
+        # this round's packets read their slot's post-round row
+        feats = jnp.where(sel[:, None], regs1[slot], feats)
+        return r + 1, keys1, regs1, feats
+
+    _, keys, regs, feats = jax.lax.while_loop(
+        lambda s: s[0] < n_rounds, round_body,
+        (jnp.int32(0), keys, regs, feats0),
+    )
+
+    # compacted sequential drain: deep-chain packets (rank >= PAR_ROUNDS)
+    # in arrival order — per slot that extends the round order exactly
+    rem = (rank >= PAR_ROUNDS) & live
+    n_rem = jnp.sum(rem.astype(jnp.int32))
+    rem_order = jnp.argsort(jnp.where(rem, b_idx, B + b_idx))
+
+    def drain_body(state):
+        i, keys2, regs2, feats = state
+        p = rem_order[i]
+        keys2, regs2, feats = _packet_step(
+            p, (keys2, regs2, feats), pk2, slot2, upd, bins, valid2,
+            n_counters=C, n_ewma=E, alpha=alpha,
+        )
+        return i + 1, keys2, regs2, feats
+
+    _, keys2, regs, feats = jax.lax.while_loop(
+        lambda s: s[0] < n_rem, drain_body,
+        (jnp.int32(0), keys[:, None], regs, feats),
+    )
+    keys = keys2[:, 0]
+    k_w = keys_out.shape[1]
+    keys_out[...] = jnp.pad(keys[:, None], ((0, 0), (0, k_w - 1)))
+    regs_out[...] = regs
+    feats_out[...] = feats
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_counters", "n_ewma", "n_hists", "alpha",
+                              "interpret")
+)
+def flow_update_padded(
+    keys: jax.Array,       # [S, Kw] int32 (-1 = empty; col 0 live)
+    regs: jax.Array,       # [S, W_pad] f32
+    pkt_keys: jax.Array,   # [B, Kw] int32
+    upd: jax.Array,        # [B, U_pad] f32
+    bins: jax.Array,       # [B, H_pad] int32 absolute cols (-1 = none)
+    valid: jax.Array,      # [B, Kw] int32
+    rank: jax.Array,       # [B, Kw] int32 (earlier valid same-slot count)
+    *,
+    n_counters: int,
+    n_ewma: int,
+    n_hists: int,
+    alpha: float,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (keys' [S, Kw], regs' [S, W_pad], feats [B, W_pad])."""
+    S, k_w = keys.shape
+    _, w_pad = regs.shape
+    B = pkt_keys.shape[0]
+    assert S & (S - 1) == 0, "slot count must be a power of two"
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, n_counters=n_counters, n_ewma=n_ewma,
+            n_hists=n_hists, alpha=alpha,
+        ),
+        grid=(1,),
+        in_specs=[
+            # sequential round chain: every operand is one resident block
+            pl.BlockSpec((S, k_w), lambda i: (0, 0)),
+            pl.BlockSpec((S, w_pad), lambda i: (0, 0)),
+            pl.BlockSpec((B, k_w), lambda i: (0, 0)),
+            pl.BlockSpec((B, upd.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((B, bins.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((B, k_w), lambda i: (0, 0)),
+            pl.BlockSpec((B, k_w), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((S, k_w), lambda i: (0, 0)),
+            pl.BlockSpec((S, w_pad), lambda i: (0, 0)),
+            pl.BlockSpec((B, w_pad), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, k_w), jnp.int32),
+            jax.ShapeDtypeStruct((S, w_pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, w_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(keys, regs, pkt_keys, upd, bins, valid, rank)
+
+
+def vmem_bytes(n_slots: int, width: int, batch: int = 256) -> int:
+    """VMEM working set the kernel claims (feasibility input): the whole
+    register file (rows + keys), the batch's packet/update/feature rows,
+    and the int32 scheduling operands (keys/valid/rank/bins)."""
+    table = n_slots * (width + 1) * 4
+    batch_rows = batch * (width + 1) * 4 * 2   # upd in + feats out
+    aux = batch * 4 * 12                       # pk/valid/rank + hist bins
+    return table + batch_rows + aux

@@ -1,0 +1,131 @@
+"""Public op: batched flow-register update, fused scatter/gather form.
+
+``flow_update(keys, regs, pkt_keys, upd, bins, valid)`` pads to tile
+widths, launches the Pallas kernel (interpret=True on CPU — the TPU path is
+the same kernel compiled by Mosaic) and slices the padding back off.  This
+is the executable artifact the Pallas serving backend
+(core.pallas_backend.lower_stateful_pallas) emits for the stateful stage
+prefix ``FlowKey -> RegisterUpdate``.
+
+Falls back to the jnp scan reference when the table is outside the kernel
+envelope (too many slots/too wide a row for resident VMEM).  Padding is
+self-masking: padded register columns start zero and are never addressed
+(absolute hist columns < W, counter/EWMA sections are static slices), so
+the real columns are bit-identical to the unpadded reference.
+
+Schedule choice: the kernel's conflict-free rounds only pay off when they
+retire most of the batch (busy interleaved traffic, small per-flow
+multiplicity).  The wrapper computes the batch's rank profile ONCE over
+the valid rows — padding rows are excluded, so ragged tails cannot fake a
+deep chain — routes drain-dominated batches (one flow owning a quiet
+batch) to the reference schedule via ``lax.cond``, and passes the rank
+vector into the kernel as its round schedule.  All inside the same jitted
+program, and a pure schedule choice: every schedule computes identical
+bits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flow_update.kernel import (
+    LANE,
+    PAR_ROUNDS,
+    flow_update_padded,
+)
+from repro.kernels.flow_update.ref import flow_update_ref, hash_slot
+
+# kernel envelope: the whole table must sit in VMEM for the launch
+MAX_SLOTS = 1 << 16
+MAX_WIDTH = 256
+MAX_HISTS = 8
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _snap(n: int, tile: int) -> int:
+    return max(tile, -(-n // tile) * tile)
+
+
+def flow_update(
+    keys: jax.Array,       # [S] int32 stored keys (-1 = empty)
+    regs: jax.Array,       # [S, W] f32 register rows
+    pkt_keys: jax.Array,   # [B] int32 per-packet flow keys (>= 0)
+    upd: jax.Array,        # [B, C+E] f32 counter increments ++ EWMA values
+    bins: jax.Array,       # [B, H] int32 absolute hist columns (-1 = none)
+    valid: jax.Array,      # [B] int-ish; 0 = padding row, never applied
+    *,
+    n_counters: int,
+    n_ewma: int,
+    alpha: float,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (keys' [S], regs' [S, W], feats [B, W]), one kernel launch.
+
+    Bit-identical to ``flow_update_ref`` (shared per-packet step); arrival
+    order within the batch preserved; see the flow-state contract in
+    docs/pipeline_ir.md for the eviction/ordering guarantees."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    S, W = regs.shape
+    B = int(pkt_keys.shape[0])
+    H = int(bins.shape[1]) if bins.ndim == 2 else 0
+    if S > MAX_SLOTS or W > MAX_WIDTH or H > MAX_HISTS or B == 0:
+        return flow_update_ref(
+            keys, regs, pkt_keys, upd, bins, valid,
+            n_counters=n_counters, n_ewma=n_ewma, alpha=alpha,
+        )
+    # CPU interpret mode snaps pads to 8-wide tiles; TPU pads the last dim
+    # to the full 128 lane.  Narrow int operands keep col 0 live only.
+    tile = 8 if interpret else LANE
+    w_pad = _snap(W, tile)
+    u_pad = _snap(upd.shape[1], tile)
+    h_pad = _snap(H, tile) if not interpret else max(H, 1)
+
+    keys = jnp.asarray(keys, jnp.int32)
+    regs = jnp.asarray(regs, jnp.float32)
+    pkt_keys = jnp.asarray(pkt_keys, jnp.int32)
+    upd = jnp.asarray(upd, jnp.float32)
+    bins = jnp.asarray(bins, jnp.int32)
+    valid = jnp.asarray(valid, jnp.int32)
+
+    # rank[p] = earlier VALID packets hashing to p's slot — the kernel's
+    # round schedule AND the schedule-choice profile, computed once.
+    # Padding rows (valid=0) are excluded on both sides: they never touch
+    # the table, so a ragged tail cannot fake a deep chain.
+    live = valid != 0
+    slot = hash_slot(pkt_keys, S)
+    p_i = jax.lax.broadcasted_iota(jnp.int32, (B, B), 0)
+    q_i = jax.lax.broadcasted_iota(jnp.int32, (B, B), 1)
+    rank = jnp.sum(((slot[:, None] == slot[None, :]) & (q_i < p_i)
+                    & live[None, :]).astype(jnp.int32), axis=1)
+
+    def launch(_):
+        keys2 = jnp.zeros((S, tile), jnp.int32).at[:, 0].set(keys)
+        regs2 = jnp.pad(regs, ((0, 0), (0, w_pad - W)))
+        pk2 = jnp.zeros((B, tile), jnp.int32).at[:, 0].set(pkt_keys)
+        upd2 = jnp.pad(upd, ((0, 0), (0, u_pad - upd.shape[1])))
+        bins2 = jnp.pad(bins, ((0, 0), (0, h_pad - H)), constant_values=-1)
+        valid2 = jnp.zeros((B, tile), jnp.int32).at[:, 0].set(valid)
+        rank2 = jnp.zeros((B, tile), jnp.int32).at[:, 0].set(rank)
+        k_out, r_out, feats = flow_update_padded(
+            keys2, regs2, pk2, upd2, bins2, valid2, rank2,
+            n_counters=n_counters, n_ewma=n_ewma, n_hists=H,
+            alpha=float(alpha), interpret=interpret,
+        )
+        return k_out[:, 0], r_out[:, :W], feats[:, :W]
+
+    def reference(_):
+        return flow_update_ref(
+            keys, regs, pkt_keys, upd, bins, valid,
+            n_counters=n_counters, n_ewma=n_ewma, alpha=alpha,
+        )
+
+    # route drain-dominated batches (deep chains the rounds cannot retire)
+    # to the reference walk
+    n_deep = jnp.sum((live & (rank >= PAR_ROUNDS)).astype(jnp.int32))
+    n_live = jnp.maximum(jnp.sum(live.astype(jnp.int32)), 1)
+    return jax.lax.cond(n_deep * 2 > n_live, reference, launch, 0)

@@ -1,0 +1,134 @@
+"""Pure-jnp oracle for the fused flow-state update (scatter/gather) kernel.
+
+The flow register file (repro.flowstate.registers) is a direct-indexed hash
+table: ``slot = hash(key) & (S-1)``, evict-on-collision.  One batched update
+is ORDER-DEPENDENT — EWMAs are non-commutative and a later packet may evict
+an earlier packet's flow — so both execution paths walk the batch in arrival
+order.  To make the Pallas kernel *bit-identical* to this reference by
+construction, the per-packet math lives in ONE shared function
+(``_packet_step``): the reference runs it under ``jax.lax.fori_loop`` here,
+and the kernel (kernel.py) runs the very same function inside its
+``pallas_call`` body.  Same ops, same order, same f32 constants — state,
+features and therefore verdicts cannot drift between engines.
+
+Register row layout (width W = C + E + sum(hist_sizes)):
+
+  ``[0, C)``        counters      ``row += inc``    (counter 0 = pkt count)
+  ``[C, C+E)``      EWMAs         first packet of a flow sets ``row = v``;
+                                  after that ``row = row*(1-a) + v*a``
+  ``[C+E, W)``      histograms    ``row[bin] += 1`` per histogram column
+                                  (``bins`` carries ABSOLUTE column ids;
+                                  ``-1`` means "no histogram update")
+
+Collision policy (the documented contract): the stored key is compared to
+the incoming key; empty (``-1``) or different-flow slots are *evicted* —
+state resets to zero and the new flow claims the slot (last-writer-wins).
+Rows with ``valid == 0`` (ragged-batch padding) never touch the table and
+emit all-zero feature rows — they are invisible to both the register file
+and the downstream classifier (the engine slices their verdicts off).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Knuth multiplicative constant (2654435761 = 2^32 / phi), xor-folded so
+# low-entropy keys (sequential flow ids) still spread across slots
+_HASH_MULT = 2654435761
+
+
+def hash_slot(keys: jax.Array, n_slots: int) -> jax.Array:
+    """int32 flow keys -> int32 slot ids in [0, n_slots).  n_slots must be a
+    power of two (masked, not modulo — same cheap op a switch ALU does)."""
+    h = keys.astype(jnp.uint32) * jnp.uint32(_HASH_MULT)
+    h = h ^ (h >> jnp.uint32(16))
+    return (h & jnp.uint32(n_slots - 1)).astype(jnp.int32)
+
+
+def _packet_step(p, carry, pkt_keys, slots, upd, bins, valid, *,
+                 n_counters: int, n_ewma: int, alpha: float):
+    """Apply packet ``p`` to the register file.  Shared by the jnp
+    reference and the Pallas kernel body — all arrays 2-D:
+
+      carry   = (keys [S, Kw] i32, regs [S, W] f32, feats [B, W] f32)
+      pkt_keys [B, Kw] i32, slots [B, Kw] i32 (col 0 live, rest padding),
+      upd [B, U>=C+E] f32, bins [B, H] i32 (absolute cols, -1 = none),
+      valid [B, Kw] i32.
+    """
+    keys, regs, feats = carry
+    W = regs.shape[1]
+    C, E = n_counters, n_ewma
+
+    slot = jax.lax.dynamic_slice(slots, (p, 0), (1, 1))[0, 0]
+    key = jax.lax.dynamic_slice(pkt_keys, (p, 0), (1, 1))          # [1, 1]
+    stored = jax.lax.dynamic_slice(keys, (slot, 0), (1, 1))
+    row = jax.lax.dynamic_slice(regs, (slot, 0), (1, W))
+
+    # evict-on-collision: empty (-1) or different flow -> state resets
+    fresh = stored != key
+    row0 = jnp.where(fresh, jnp.zeros_like(row), row)
+
+    u = jax.lax.dynamic_slice(upd, (p, 0), (1, upd.shape[1]))
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+    inc_full = jnp.pad(u[:, :C], ((0, 0), (0, W - C)))
+    val_full = jnp.pad(u[:, C:C + E], ((0, 0), (C, W - C - E)))
+
+    new = jnp.where(col < C, row0 + inc_full, row0)
+    ewma = jnp.where(fresh, val_full,
+                     row0 * (1.0 - alpha) + val_full * alpha)
+    new = jnp.where((col >= C) & (col < C + E), ewma, new)
+    b = jax.lax.dynamic_slice(bins, (p, 0), (1, bins.shape[1]))
+    for j in range(bins.shape[1]):       # static unroll: one hist per column
+        new = new + (col == b[0, j]).astype(jnp.float32)
+
+    ok = jax.lax.dynamic_slice(valid, (p, 0), (1, 1)) != 0
+    new_row = jnp.where(ok, new, row)
+    new_key = jnp.where(ok, key, stored)
+
+    keys = jax.lax.dynamic_update_slice(keys, new_key, (slot, 0))
+    regs = jax.lax.dynamic_update_slice(regs, new_row, (slot, 0))
+    # padding rows emit zero feature rows (invisible downstream)
+    feats = jax.lax.dynamic_update_slice(
+        feats, jnp.where(ok, new_row, jnp.zeros_like(new_row)), (p, 0)
+    )
+    return keys, regs, feats
+
+
+def flow_update_ref(
+    keys: jax.Array,       # [S] int32 stored flow keys (-1 = empty)
+    regs: jax.Array,       # [S, W] f32 register rows
+    pkt_keys: jax.Array,   # [B] int32 flow key per packet (>= 0)
+    upd: jax.Array,        # [B, C+E] f32 counter increments ++ EWMA values
+    bins: jax.Array,       # [B, H] int32 absolute hist columns (-1 = none)
+    valid: jax.Array,      # [B] packets to apply (0 = padding row, skipped)
+    *,
+    n_counters: int,
+    n_ewma: int,
+    alpha: float,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (keys' [S], regs' [S, W], feats [B, W]): the register file after
+    the batch, plus each packet's post-update row (what the classifier
+    sees; all-zero for ``valid == 0`` padding rows).  Traceable/jittable;
+    arrival order within the batch preserved."""
+    S, W = regs.shape
+    B = pkt_keys.shape[0]
+    bins = jnp.asarray(bins, jnp.int32)
+    if bins.ndim != 2 or bins.shape[1] == 0:   # no histograms configured
+        bins = jnp.full((B, 1), -1, jnp.int32)
+    k2 = jnp.asarray(keys, jnp.int32)[:, None]
+    pk = jnp.asarray(pkt_keys, jnp.int32)[:, None]
+    v2 = jnp.asarray(valid, jnp.int32)[:, None]
+    slots = hash_slot(pk, S)
+    feats0 = jnp.zeros((B, W), jnp.float32)
+
+    def body(p, carry):
+        return _packet_step(
+            p, carry, pk, slots, jnp.asarray(upd, jnp.float32), bins, v2,
+            n_counters=n_counters, n_ewma=n_ewma, alpha=alpha,
+        )
+
+    k_out, r_out, feats = jax.lax.fori_loop(
+        0, B, body, (k2, jnp.asarray(regs, jnp.float32), feats0)
+    )
+    return k_out[:, 0], r_out, feats

@@ -4,9 +4,17 @@ The LM ``ServeEngine`` (serve/engine.py) batches token requests into fixed
 decode slots; ``PacketServeEngine`` is its data-plane sibling: it
 micro-batches incoming packets into a FIXED batch shape and pushes them
 through ONE compiled program — a ``CompiledDag`` (whole-DAG jit from
-core.chaining) or a single ``Pipeline``.  The fixed shape means the XLA
-executable is compiled exactly once; ragged tails are zero-padded and the
-padding verdicts sliced off, so steady-state serving never re-traces.
+core.chaining), a single ``Pipeline``, or a stateful
+``flowstate.StatefulPipeline``.  The fixed shape means the XLA executable
+is compiled exactly once; ragged tails are zero-padded and the padding
+verdicts sliced off, so steady-state serving never re-traces.
+
+Stateful serving: a ``StatefulPipeline`` threads a per-flow register file
+(``FlowState``) through every batch.  The engine owns the state between
+batches, feeds padded rows with ``valid=0`` so they NEVER touch the
+register table, and applies batches strictly in arrival order — submit/
+flush interleavings with ragged chunk sizes cannot reorder updates
+(property-tested in tests/test_packet_engine.py).
 
 Typical use::
 
@@ -16,6 +24,10 @@ Typical use::
     eng.submit(packets)           # any [n, F] chunk, any n
     verdicts = eng.flush()        # all pending verdicts, in arrival order
     print(eng.stats())            # includes which backend served
+
+    sp = StatefulPipeline(stages, backend="pallas")
+    eng = PacketServeEngine(sp, feature_dim=4, max_batch=512)
+    # per-flow registers update per packet; eng.state is the live table
 """
 
 from __future__ import annotations
@@ -35,12 +47,34 @@ class ServeStats:
     pad_packets: int = 0           # zero-rows added to fill the last batch
     wall_s: float = 0.0
     backend: str = "interpret"     # engine the compiled pipeline runs on
+    # trailing window of per-batch latencies: bounded so a long-running
+    # engine keeps O(1) memory and stats() cost (percentiles are over the
+    # most recent LAT_WINDOW batches)
+    batch_lat_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=ServeStats.LAT_WINDOW)
+    )
+
+    LAT_WINDOW = 4096
 
     @property
     def pkt_per_s(self) -> float:
         if self.batches == 0:
             return 0.0             # nothing served yet: rate is 0, not 0/0
         return self.packets / max(self.wall_s, 1e-9)
+
+    def _lat_ms(self, q: float) -> float:
+        if not self.batch_lat_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.batch_lat_s), q)) * 1e3
+
+    @property
+    def lat_p50_ms(self) -> float:
+        """Median per-batch pipeline latency (padding included)."""
+        return self._lat_ms(50)
+
+    @property
+    def lat_p95_ms(self) -> float:
+        return self._lat_ms(95)
 
     @property
     def backend_batches(self) -> dict:
@@ -57,6 +91,8 @@ class ServeStats:
             "pad_packets": self.pad_packets,
             "wall_s": round(self.wall_s, 6),
             "pkt_per_s": round(self.pkt_per_s, 1),
+            "lat_p50_ms": round(self.lat_p50_ms, 4),
+            "lat_p95_ms": round(self.lat_p95_ms, 4),
             "backend": self.backend,
             "backend_batches": self.backend_batches,
         }
@@ -76,10 +112,10 @@ class _CompiledPipeline:
 def _rebind_backend(pipeline, backend: str):
     """Recompile ``pipeline`` for the requested execution engine.
 
-    A ``CompiledDag`` recompiles itself (per-model backend choice); a
-    ``codegen.Pipeline`` recompiles its stage list; a bare callable has no
-    stage list to lower, so the request degrades to serving it as-is (the
-    interpreter fallback the stats then report)."""
+    A ``CompiledDag`` or ``flowstate.StatefulPipeline`` recompiles itself
+    (``with_backend``); a ``codegen.Pipeline`` recompiles its stage list;
+    a bare callable has no stage list to lower, so the request degrades to
+    serving it as-is (the interpreter fallback the stats then report)."""
     from repro.core import stageir
 
     if backend not in stageir.EXEC_BACKENDS:
@@ -108,12 +144,20 @@ class PacketServeEngine:
       carries no stage list to recompile;
     * ``backend="interpret"`` forces the jitted stage-walk engine.
 
+    Stateful pipelines (``flowstate.StatefulPipeline``, or anything with
+    an ``init_state()``/``(state, X, valid)`` shape) thread a per-flow
+    register file through the engine: pass ``state=`` to resume an
+    existing table or leave it None to start empty.  Padded rows carry
+    ``valid=0`` and never touch the registers; batches apply strictly in
+    arrival order.
+
     ``stats()["backend"]`` / ``["backend_batches"]`` report the engine that
-    actually served each batch after any fallback."""
+    actually served each batch after any fallback; ``lat_p50_ms`` /
+    ``lat_p95_ms`` are per-batch pipeline latency percentiles."""
 
     def __init__(self, pipeline: Callable[[np.ndarray], np.ndarray], *,
                  feature_dim: int, max_batch: int = 256,
-                 backend: str | None = None):
+                 backend: str | None = None, state=None):
         if backend is not None:
             pipeline = _rebind_backend(pipeline, backend)
         self.pipeline = pipeline
@@ -125,12 +169,21 @@ class PacketServeEngine:
             self.backend = pipeline.compiled_backend
         self.feature_dim = int(feature_dim)
         self.max_batch = int(max_batch)
+        self._stateful = state is not None or hasattr(pipeline, "init_state")
+        if self._stateful and state is None:
+            state = pipeline.init_state()
+        self.state = state
         self._queue: collections.deque[np.ndarray] = collections.deque()
         self._pending = 0
         self.stats_ = ServeStats(backend=self.backend)
         # warm the executable so steady-state timing excludes compilation
-        self.pipeline(np.zeros((self.max_batch, self.feature_dim),
-                               np.float32))
+        zeros = np.zeros((self.max_batch, self.feature_dim), np.float32)
+        if self._stateful:
+            # all-invalid warm-up batch: compiles without touching registers
+            self.pipeline(self.state, zeros,
+                          np.zeros(self.max_batch, np.int32))
+        else:
+            self.pipeline(zeros)
 
     # ------------------------------------------------------------ intake
 
@@ -180,8 +233,16 @@ class PacketServeEngine:
             )
             self.stats_.pad_packets += pad
         t0 = time.perf_counter()
-        verdicts = np.asarray(self.pipeline(batch))
-        self.stats_.wall_s += time.perf_counter() - t0
+        if self._stateful:
+            valid = np.zeros(self.max_batch, np.int32)
+            valid[:n] = 1
+            self.state, verdicts = self.pipeline(self.state, batch, valid)
+            verdicts = np.asarray(verdicts)
+        else:
+            verdicts = np.asarray(self.pipeline(batch))
+        dt = time.perf_counter() - t0
+        self.stats_.wall_s += dt
+        self.stats_.batch_lat_s.append(dt)
         self.stats_.batches += 1
         self.stats_.packets += n
         return verdicts[:n]

@@ -1,0 +1,324 @@
+"""Flow register file: spec validation, collision/eviction policy, EWMA
+semantics, kernel/reference parity, stage lowering, feasibility (tier-1).
+
+The slow property suite (test_stageir_conformance.py) sweeps random
+configurations; these are the fast deterministic checks of the flow-state
+contract (docs/pipeline_ir.md#flow-state-contract)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import feasibility as feas, pallas_backend, stageir
+from repro.flowstate import (
+    FlowState,
+    FlowStateSpec,
+    StatefulPipeline,
+    init_state,
+    update_flows,
+)
+from repro.kernels.flow_update import flow_update, flow_update_ref, hash_slot
+
+needs_pallas = pytest.mark.skipif(
+    not pallas_backend.pallas_available(),
+    reason="Pallas toolchain unavailable in this environment",
+)
+
+
+def _spec(**kw):
+    base = dict(n_slots=8, n_counters=1, n_ewma=1, hist_sizes=(4,),
+                ewma_alpha=0.5)
+    base.update(kw)
+    return FlowStateSpec(**base)
+
+
+def _colliding_key(key: int, n_slots: int) -> int:
+    """A different key that hashes to the same slot."""
+    slot = int(hash_slot(jnp.array([key], jnp.int32), n_slots)[0])
+    for cand in range(1 << 12):
+        if cand != key and int(
+            hash_slot(jnp.array([cand], jnp.int32), n_slots)[0]
+        ) == slot:
+            return cand
+    raise AssertionError("no colliding key found")
+
+
+# ------------------------------------------------------------------- spec
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        FlowStateSpec(n_slots=12)            # not a power of two
+    with pytest.raises(ValueError):
+        FlowStateSpec(n_slots=8, n_counters=0)
+    with pytest.raises(ValueError):
+        FlowStateSpec(n_slots=8, hist_sizes=(0,))
+    s = _spec()
+    assert s.width == 1 + 1 + 4
+    assert s.hist_offsets == (2,)
+    assert s.sram_bytes == 8 * (6 + 1) * 4
+
+
+def test_register_update_validates_against_spec():
+    s = _spec()
+    with pytest.raises(ValueError):          # counter count mismatch
+        stageir.RegisterUpdate(s, counter_cols=(1,), ewma_cols=(1,),
+                               hist_cols=(1,),
+                               hist_edges=(np.arange(3.0),))
+    with pytest.raises(ValueError):          # hist bins mismatch
+        stageir.RegisterUpdate(s, ewma_cols=(1,), hist_cols=(1,),
+                               hist_edges=(np.arange(7.0),))
+
+
+# ---------------------------------------------------- update semantics
+
+
+def test_counter_ewma_hist_accumulation():
+    s = _spec()
+    st = init_state(s)
+    pk = np.array([7, 7, 7], np.int32)
+    upd = np.array([[1, 10.0], [1, 20.0], [1, 40.0]], np.float32)
+    bins = np.array([[2], [2], [4]], np.int32)
+    st2, feats = update_flows(st, pk, upd, bins)
+    slot = int(hash_slot(jnp.array([7], jnp.int32), s.n_slots)[0])
+    row = np.asarray(st2.regs)[slot]
+    assert row[0] == 3                       # packet count
+    # ewma: first packet SETS (10), then blends at alpha=0.5: 15, 27.5
+    assert row[1] == 27.5
+    assert list(row[2:]) == [2.0, 0.0, 1.0, 0.0]
+    # per-packet features are the post-update rows, in arrival order
+    assert np.asarray(feats)[0, 0] == 1 and np.asarray(feats)[2, 0] == 3
+    assert np.asarray(feats)[1, 1] == 15.0
+
+
+def test_collision_evicts_and_resets():
+    s = _spec()
+    st = init_state(s)
+    st2, _ = update_flows(st, np.array([7, 7], np.int32),
+                          np.array([[1, 5.0]] * 2, np.float32),
+                          np.array([[2], [2]], np.int32))
+    other = _colliding_key(7, s.n_slots)
+    st3, feats = update_flows(st2, np.array([other], np.int32),
+                              np.array([[1, 99.0]], np.float32),
+                              np.array([[3]], np.int32))
+    slot = int(hash_slot(jnp.array([7], jnp.int32), s.n_slots)[0])
+    row = np.asarray(st3.regs)[slot]
+    # last-writer-wins: the resident flow's state was wiped, not blended
+    assert row[0] == 1 and row[1] == 99.0 and row[2] == 0.0
+    assert int(np.asarray(st3.keys)[slot]) == other
+    assert np.asarray(feats)[0, 0] == 1
+
+
+def test_invalid_rows_never_touch_state():
+    s = _spec()
+    st = init_state(s)
+    pk = np.array([1, 2, 3], np.int32)
+    upd = np.ones((3, 2), np.float32)
+    bins = np.full((3, 1), 2, np.int32)
+    st2, _ = update_flows(st, pk, upd, bins,
+                          valid=np.array([1, 0, 1], np.int32))
+    st3, _ = update_flows(st, pk[[0, 2]], upd[[0, 2]], bins[[0, 2]])
+    np.testing.assert_array_equal(np.asarray(st2.keys),
+                                  np.asarray(st3.keys))
+    np.testing.assert_array_equal(np.asarray(st2.regs),
+                                  np.asarray(st3.regs))
+
+
+@needs_pallas
+def test_kernel_matches_reference_bit_for_bit(rng):
+    s = _spec(n_slots=4, n_counters=2, n_ewma=1, hist_sizes=(3, 2),
+              ewma_alpha=0.125)
+    B = 80
+    keys = jnp.full((s.n_slots,), -1, jnp.int32)
+    regs = jnp.zeros((s.n_slots, s.width), jnp.float32)
+    pk = jnp.asarray(rng.integers(0, 6, B), jnp.int32)   # heavy collisions
+    upd = jnp.asarray(rng.normal(size=(B, 3)), jnp.float32)
+    bins = jnp.stack([
+        jnp.asarray(3 + rng.integers(0, 3, B), jnp.int32),
+        jnp.asarray(6 + rng.integers(0, 2, B), jnp.int32),
+    ], 1)
+    valid = jnp.asarray((rng.random(B) < 0.9).astype(np.int32))
+    kw = dict(n_counters=2, n_ewma=1, alpha=0.125)
+    ref = flow_update_ref(keys, regs, pk, upd, bins, valid, **kw)
+    ker = flow_update(keys, regs, pk, upd, bins, valid, **kw)
+    for a, b in zip(ref, ker):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_update_flows_pallas_backend_parity(rng):
+    if not pallas_backend.pallas_available():
+        pytest.skip("Pallas unavailable")
+    s = _spec()
+    st = init_state(s)
+    pk = rng.integers(0, 5, 30).astype(np.int32)
+    upd = rng.normal(size=(30, 2)).astype(np.float32)
+    bins = (2 + rng.integers(0, 4, (30, 1))).astype(np.int32)
+    a, fa = update_flows(st, pk, upd, bins, backend="interpret")
+    b, fb = update_flows(st, pk, upd, bins, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))
+    np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+# ------------------------------------------------ stage lowering / specs
+
+
+def test_flowstate_specs_match_stage_meta():
+    s = _spec(n_slots=16, n_counters=2, n_ewma=1, hist_sizes=(5,))
+    ru = stageir.RegisterUpdate(
+        s, counter_cols=(1,), ewma_cols=(2,), hist_cols=(1,),
+        hist_edges=(np.linspace(0, 1, 6)[1:-1],),
+    )
+    ws = stageir.WindowStats(s, mode="all")
+    specs = stageir.flowstate_specs(s)
+    by_kind = {sp.kind: sp for sp in specs}
+    assert by_kind["register_update"].params == ru.meta()["params"]
+    assert by_kind["register_update"].extra == (16, s.width)
+    assert by_kind["window_stats"].n_out == ws.n_out
+    hist_only = stageir.flowstate_specs(s, mode="hist")
+    assert hist_only[-1].n_out == stageir.WindowStats(s, "hist").n_out == 5
+
+
+def test_window_stats_normalizes_by_count():
+    s = _spec()
+    ws = stageir.WindowStats(s, mode="all")
+    feats = jnp.asarray([[4.0, 2.0, 2.0, 0.0, 2.0, 0.0],
+                         [0.0, 1.0, 3.0, 0.0, 0.0, 0.0]], jnp.float32)
+    out = np.asarray(ws.apply(feats))
+    assert out.shape == (2, s.width)
+    np.testing.assert_allclose(out[0], [4.0, 2.0, 0.5, 0.0, 0.5, 0.0])
+    # zero-count rows (empty/padded) divide by 1, not 0
+    np.testing.assert_allclose(out[1], [0.0, 1.0, 3.0, 0.0, 0.0, 0.0])
+    hist = np.asarray(stageir.WindowStats(s, "hist").apply(feats))
+    assert hist.shape == (2, 4)
+
+
+def test_compile_stages_rejects_stateful():
+    s = _spec()
+    stages = [stageir.FlowKey((0,), s.n_slots),
+              stageir.RegisterUpdate(s, ewma_cols=(1,), hist_cols=(1,),
+                                     hist_edges=(np.arange(3.0),))]
+    with pytest.raises(ValueError, match="stateful"):
+        stageir.compile_stages(stages)
+
+
+def test_split_stateful_validates_prefix():
+    s = _spec()
+    fk = stageir.FlowKey((0,), s.n_slots)
+    ru = stageir.RegisterUpdate(s, ewma_cols=(1,), hist_cols=(1,),
+                                hist_edges=(np.arange(3.0),))
+    with pytest.raises(ValueError):
+        stageir.split_stateful([ru, fk])     # wrong order
+    with pytest.raises(ValueError):
+        stageir.split_stateful([fk, ru, fk])  # stateful in suffix
+    prefix, suffix = stageir.split_stateful([fk, ru,
+                                             stageir.Reduce("argmax")])
+    assert [p.kind for p in prefix] == ["flow_key", "register_update"]
+    assert [p.kind for p in suffix] == ["reduce"]
+
+
+# ------------------------------------------------------------ feasibility
+
+
+def test_flowstate_report_platforms():
+    small = _spec(n_slots=64)
+    for plat in ("taurus", "tofino", "fpga", "tpu"):
+        rep = feas.flowstate_report(small, plat)
+        assert rep.feasible, (plat, rep.reasons)
+        assert rep.throughput_pps > 0
+    big = FlowStateSpec(n_slots=1 << 15, n_counters=1, hist_sizes=(500,))
+    assert not feas.flowstate_report(big, "taurus").feasible
+    with pytest.raises(KeyError):
+        feas.flowstate_report(small, "cuda")
+
+
+def test_flowstate_report_merges_as_coresident():
+    rep = feas.flowstate_report(_spec(n_slots=64), "taurus")
+    model = feas.FeasibilityReport(True, [], {"cu": 24, "mu": 48}, 10.0,
+                                   5e8)
+    total = model.merge(rep)
+    assert total.resources["mu"] == 48 + rep.resources["mu"]
+    assert total.throughput_pps == 5e8       # min rule
+    assert total.latency_ns == 10.0 + rep.latency_ns
+
+
+# ------------------------------------------------------ stateful pipeline
+
+
+def _mini_pipeline(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    fk = stageir.FlowKey((0,), spec.n_slots)
+    ru = stageir.RegisterUpdate(
+        spec, ewma_cols=(1,), hist_cols=(1,),
+        hist_edges=(np.linspace(0, 1, spec.hist_sizes[0] + 1)[1:-1],),
+    )
+    ws = stageir.WindowStats(spec, mode="all")
+    w1 = rng.normal(size=(ws.n_out, 6)).astype(np.float32)
+    w2 = rng.normal(size=(6, 2)).astype(np.float32)
+    mlp = stageir.FusedMLP([w1, w2], [np.zeros(6, np.float32),
+                                      np.zeros(2, np.float32)])
+    return [fk, ru, ws, mlp, stageir.Reduce("argmax")]
+
+
+def _packets(rng, n, n_flows=5):
+    X = np.zeros((n, 2), np.float32)
+    X[:, 0] = rng.integers(0, n_flows, n)
+    X[:, 1] = rng.random(n)
+    return X
+
+
+def test_stateful_pipeline_interpret_and_reporting(rng):
+    spec = FlowStateSpec(n_slots=8, n_counters=1, n_ewma=1, hist_sizes=(3,))
+    pipe = StatefulPipeline(_mini_pipeline(spec))
+    assert pipe.backend == "interpret"
+    assert pipe.requested_backend == "interpret"
+    st = pipe.init_state()
+    X = _packets(rng, 20)
+    st2, v = pipe(st, X)
+    assert v.shape == (20,)
+    assert st2.occupied > 0
+    assert np.asarray(st.keys).max() == -1   # input state untouched
+
+
+@needs_pallas
+def test_stateful_pipeline_pallas_parity_and_with_backend(rng):
+    spec = FlowStateSpec(n_slots=8, n_counters=1, n_ewma=1, hist_sizes=(3,))
+    stages = _mini_pipeline(spec)
+    pi = StatefulPipeline(stages)
+    pp = StatefulPipeline(stages, backend="pallas")
+    assert pp.backend == "pallas"
+    assert pp.flow_backend == pp.classifier_backend == "pallas"
+    X = _packets(rng, 40)
+    si, vi = pi(pi.init_state(), X)
+    sp, vp = pp(pp.init_state(), X)
+    np.testing.assert_array_equal(np.asarray(si.keys), np.asarray(sp.keys))
+    np.testing.assert_array_equal(np.asarray(si.regs), np.asarray(sp.regs))
+    np.testing.assert_array_equal(vi, vp)
+    assert pp.with_backend("interpret").backend == "interpret"
+
+
+@needs_pallas
+def test_stateful_pipeline_mixed_when_suffix_ineligible(rng):
+    # a CentroidDistance classifier is outside the kernel envelope: the
+    # flow prefix fuses, the suffix honestly reports the interpreter
+    spec = FlowStateSpec(n_slots=8, n_counters=1, n_ewma=1, hist_sizes=(3,))
+    stages = _mini_pipeline(spec)[:3] + [
+        stageir.CentroidDistance(
+            np.asarray(np.random.default_rng(0).normal(size=(3, spec.width)),
+                       np.float32)),
+        stageir.Reduce("argmin"),
+    ]
+    pp = StatefulPipeline(stages, backend="pallas")
+    assert pp.flow_backend == "pallas"
+    assert pp.classifier_backend == "interpret"
+    assert pp.backend == "mixed"
+    pi = StatefulPipeline(stages)
+    X = _packets(rng, 16)
+    _, vi = pi(pi.init_state(), X)
+    _, vp = pp(pp.init_state(), X)
+    np.testing.assert_array_equal(vi, vp)
+
+
+def test_stateful_pipeline_rejects_unknown_backend():
+    spec = FlowStateSpec(n_slots=8, n_counters=1, n_ewma=1, hist_sizes=(3,))
+    with pytest.raises(KeyError):
+        StatefulPipeline(_mini_pipeline(spec), backend="cuda")

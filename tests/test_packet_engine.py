@@ -1,0 +1,225 @@
+"""PacketServeEngine: arrival-order preservation under arbitrary
+submit/flush interleavings, latency percentiles, stateful serving (tier-1).
+
+The ordering property is the engine's core contract: whatever mix of
+ragged ``submit`` chunks, intermediate ``flush`` calls and
+``serve_stream`` pulls, verdicts come back in arrival order and — on the
+stateful path — the register file sees packets in exactly that order."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pallas_backend, stageir
+from repro.data import traffic
+from repro.flowstate import FlowStateSpec, StatefulPipeline
+from repro.serve.packet_engine import PacketServeEngine, ServeStats
+
+HSET = settings(max_examples=12, deadline=None)
+
+
+def _tag_pipeline(x):
+    """Verdict = the packet's own tag column: order-revealing."""
+    return x[:, 0].astype(np.int32)
+
+
+def _tagged(n, start=0):
+    out = np.zeros((n, 2), np.float32)
+    out[:, 0] = np.arange(start, start + n)
+    return out
+
+
+# ------------------------------------------------------ ordering property
+
+
+@given(data=st.data())
+@HSET
+def test_submit_flush_interleavings_preserve_arrival_order(data):
+    eng = PacketServeEngine(_tag_pipeline, feature_dim=2,
+                            max_batch=data.draw(st.integers(1, 13)))
+    total, got = 0, []
+    for _ in range(data.draw(st.integers(1, 12))):
+        if data.draw(st.booleans()) or total == 0:
+            n = data.draw(st.integers(1, 37))
+            eng.submit(_tagged(n, start=total))
+            total += n
+        else:
+            got.append(eng.flush())
+    got.append(eng.flush())
+    verdicts = np.concatenate([g for g in got if len(g)])
+    np.testing.assert_array_equal(verdicts, np.arange(total))
+    assert eng.pending == 0
+
+
+@given(data=st.data())
+@HSET
+def test_serve_stream_ragged_chunks_preserve_order(data):
+    sizes = data.draw(st.lists(st.integers(1, 41), min_size=1, max_size=8))
+    eng = PacketServeEngine(_tag_pipeline, feature_dim=2,
+                            max_batch=data.draw(st.integers(2, 17)))
+    chunks, total = [], 0
+    for n in sizes:
+        chunks.append(_tagged(n, start=total))
+        total += n
+    got = np.concatenate(list(eng.serve_stream(iter(chunks))))
+    np.testing.assert_array_equal(got, np.arange(total))
+
+
+# ------------------------------------------------------------ percentiles
+
+
+def test_latency_percentiles_in_stats():
+    stats = ServeStats()
+    assert stats.lat_p50_ms == 0.0 and stats.lat_p95_ms == 0.0
+    eng = PacketServeEngine(_tag_pipeline, feature_dim=2, max_batch=8)
+    assert eng.stats()["lat_p50_ms"] == 0.0    # warm-up batch not counted
+    for _ in range(5):
+        eng.submit(_tagged(11))
+        eng.flush()
+    s = eng.stats()
+    assert s["batches"] == 10
+    assert len(eng.stats_.batch_lat_s) == 10
+    assert 0.0 < s["lat_p50_ms"] <= s["lat_p95_ms"]
+    assert s["lat_p95_ms"] <= s["wall_s"] * 1e3 + 1e-9
+
+
+# ------------------------------------------------------- stateful serving
+
+
+def _flow_pipeline(backend="interpret"):
+    spec = FlowStateSpec(n_slots=16, n_counters=1, n_ewma=1,
+                         hist_sizes=(3,), ewma_alpha=0.5)
+    fk = stageir.FlowKey((0,), spec.n_slots)
+    ru = stageir.RegisterUpdate(
+        spec, ewma_cols=(1,), hist_cols=(1,),
+        hist_edges=(np.linspace(0, 1, 4)[1:-1],),
+    )
+    ws = stageir.WindowStats(spec, mode="all")
+    return StatefulPipeline([fk, ru, ws], backend=backend)
+
+
+def _flow_packets(rng, n):
+    X = np.zeros((n, 2), np.float32)
+    X[:, 0] = rng.integers(0, 6, n)
+    X[:, 1] = rng.random(n)
+    return X
+
+
+@given(data=st.data())
+@HSET
+def test_stateful_ragged_interleavings_match_single_pass(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+    X = _flow_packets(rng, data.draw(st.integers(1, 120)))
+    # reference: one unpadded pass through the pipeline
+    ref_pipe = _flow_pipeline()
+    ref_state, ref_feats = ref_pipe(ref_pipe.init_state(), X)
+
+    eng = PacketServeEngine(_flow_pipeline(), feature_dim=2,
+                            max_batch=data.draw(st.integers(2, 19)))
+    got, pos = [], 0
+    while pos < len(X):
+        n = min(data.draw(st.integers(1, 31)), len(X) - pos)
+        eng.submit(X[pos:pos + n])
+        pos += n
+        if data.draw(st.booleans()):
+            got.append(eng.flush())
+    got.append(eng.flush())
+    feats = np.concatenate([g for g in got if len(g)])
+    # padding rows never leaked into the register file, order preserved
+    np.testing.assert_array_equal(np.asarray(eng.state.keys),
+                                  np.asarray(ref_state.keys))
+    np.testing.assert_array_equal(np.asarray(eng.state.regs),
+                                  np.asarray(ref_state.regs))
+    np.testing.assert_array_equal(feats, np.asarray(ref_feats))
+
+
+def test_engine_initializes_and_threads_state(rng):
+    eng = PacketServeEngine(_flow_pipeline(), feature_dim=2, max_batch=8)
+    assert eng.state is not None and eng.state.occupied == 0
+    eng.submit(_flow_packets(rng, 20))
+    eng.flush()
+    assert eng.state.occupied > 0
+    # resuming from an existing table continues, not restarts
+    resumed = PacketServeEngine(_flow_pipeline(), feature_dim=2,
+                                max_batch=8, state=eng.state)
+    assert resumed.state.occupied == eng.state.occupied
+
+
+def _classifier_pipeline():
+    """Flow prefix + a fixed MLP classifier (fully kernel-eligible)."""
+    base = _flow_pipeline()
+    rng = np.random.default_rng(7)
+    n_in = base.stages[2].n_out
+    w1 = rng.normal(size=(n_in, 6)).astype(np.float32)
+    w2 = rng.normal(size=(6, 2)).astype(np.float32)
+    mlp = stageir.FusedMLP([w1, w2], [np.zeros(6, np.float32),
+                                      np.zeros(2, np.float32)])
+    return StatefulPipeline(base.stages + [mlp, stageir.Reduce("argmax")])
+
+
+@pytest.mark.skipif(not pallas_backend.pallas_available(),
+                    reason="Pallas toolchain unavailable")
+def test_engine_stateful_backend_rebind_and_parity(rng):
+    X = _flow_packets(rng, 50)
+    engs = {
+        b: PacketServeEngine(_classifier_pipeline(), feature_dim=2,
+                             max_batch=16, backend=b)
+        for b in ("interpret", "pallas")
+    }
+    outs = {}
+    for b, e in engs.items():
+        e.submit(X)
+        outs[b] = e.flush()
+        assert e.stats()["backend"] == b
+    np.testing.assert_array_equal(outs["interpret"], outs["pallas"])
+    np.testing.assert_array_equal(np.asarray(engs["interpret"].state.regs),
+                                  np.asarray(engs["pallas"].state.regs))
+
+
+def test_traffic_streams_are_replayable_and_seeded():
+    a = traffic.make_stream("port_scan", n_packets=2000, seed=3)
+    b = traffic.make_stream("port_scan", n_packets=2000, seed=3)
+    np.testing.assert_array_equal(a.packets, b.packets)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    c1 = list(a.chunks(300))
+    c2 = list(a.chunks(300))
+    assert len(c1) == len(c2) and all(
+        np.array_equal(x, y) for x, y in zip(c1, c2)
+    )
+    other = traffic.make_stream("port_scan", n_packets=2000, seed=4)
+    assert not np.array_equal(a.packets, other.packets)
+    with pytest.raises(KeyError):
+        traffic.make_stream("nope")
+
+
+@pytest.mark.parametrize("scenario", traffic.SCENARIOS)
+def test_traffic_scenarios_well_formed(scenario):
+    s = traffic.make_stream(scenario, n_packets=3000, seed=1)
+    assert s.packets.shape[1] == len(traffic.COLUMNS)
+    assert s.packets.dtype == np.float32
+    # flow ids exact in f32 and consistent with the int column
+    np.testing.assert_array_equal(
+        s.packets[:, traffic.COL_FLOW].astype(np.int64), s.flow_ids
+    )
+    assert (s.packets[:, traffic.COL_IPT] >= 0).all()
+    has_attack = scenario != "benign"
+    assert bool(s.labels.any()) == has_attack
+    # per-packet labels match the flow's ground truth
+    for fid, lab in list(s.flow_labels.items())[:20]:
+        m = s.flow_ids == fid
+        if m.any():
+            assert (s.labels[m] == lab).all()
+
+
+def test_reaction_report_counts_packets_to_detection():
+    packets = np.zeros((6, 4), np.float32)
+    packets[:, 0] = [1, 2, 1, 2, 1, 2]
+    stream = traffic.PacketStream(
+        "ddos_burst", packets, np.array([0, 1, 0, 1, 0, 1], np.int32),
+        packets[:, 0].astype(np.int32), {1: 0, 2: 1},
+    )
+    verdicts = np.array([0, 0, 1, 0, 0, 1], np.int32)
+    rep = traffic.reaction_report(stream, verdicts)
+    assert rep["attack_flows"] == 1 and rep["detected_flows"] == 1
+    assert rep["reaction_pkts_median"] == 3      # flow 2's 3rd packet
+    assert rep["benign_fp_flow_rate"] == 1.0     # flow 1 was flagged once

@@ -17,7 +17,12 @@ configuration, so boundary topologies are exercised every run):
   4. pallas == interpreter: the Pallas serving backend
      (docs/pipeline_ir.md#pallas-lowering-contract) is bit-exact on dense
      pipelines, quantization-bounded on MAT pipelines, and honestly
-     reports interpreter fallback for kernel-ineligible sequences.
+     reports interpreter fallback for kernel-ineligible sequences;
+  5. flow state (docs/pipeline_ir.md#flow-state-contract): the fused
+     flow-update kernel produces bit-identical register state, feature
+     rows and verdicts to the jnp scan reference over randomly configured
+     register files and collision-heavy packet batches, and the stateful
+     accounting specs equal the stage metadata.
 """
 
 import jax.numpy as jnp
@@ -238,3 +243,146 @@ def test_mat_backend_pallas_parity(data, algo):
                                    exec_backend="pallas")
         assert pipe.compiled_backend == "pallas"
         assert pipe.verify(X, max_mismatch_frac=0.03) <= 0.03
+
+
+# ------------------------------------------- flow-state kernel conformance
+#
+# Random register-file configurations x collision-heavy packet batches:
+# the Pallas scatter/gather kernel's hybrid round schedule must reproduce
+# the sequential jnp reference BIT-FOR-BIT (state, features, verdicts),
+# and the shape-only accounting specs must equal the stage metadata.
+
+
+def _draw_flow_setup(draw):
+    from repro.flowstate import FlowStateSpec
+
+    n_slots = draw(st.sampled_from((4, 8, 32, 128)))
+    n_counters = draw(st.integers(1, 3))
+    n_ewma = draw(st.integers(0, 2))
+    n_hists = draw(st.integers(0, 2))
+    hist_sizes = tuple(draw(st.integers(2, 9)) for _ in range(n_hists))
+    alpha = draw(st.sampled_from((0.0625, 0.125, 0.5)))
+    spec = FlowStateSpec(n_slots=n_slots, n_counters=n_counters,
+                         n_ewma=n_ewma, hist_sizes=hist_sizes,
+                         ewma_alpha=alpha)
+    rng = np.random.default_rng(draw(st.integers(0, 10_000)))
+    B = draw(st.integers(1, 160))
+    n_flows = draw(st.sampled_from((1, 2, 5, 40, 500)))
+    pk = rng.integers(0, n_flows, B).astype(np.int32)
+    upd = rng.normal(size=(B, n_counters + n_ewma)).astype(np.float32)
+    offs = spec.hist_offsets
+    if n_hists:
+        bins = np.stack([
+            offs[j] + rng.integers(0, hist_sizes[j], B)
+            for j in range(n_hists)
+        ], 1).astype(np.int32)
+    else:
+        bins = np.full((B, 1), -1, np.int32)
+    valid = (rng.random(B) < 0.9).astype(np.int32)
+    # start from a partially occupied, partially dirty table
+    keys0 = np.full(spec.n_slots, -1, np.int32)
+    occ = rng.random(spec.n_slots) < 0.5
+    keys0[occ] = rng.integers(0, n_flows, occ.sum())
+    regs0 = np.where(
+        occ[:, None],
+        np.abs(rng.normal(size=(spec.n_slots, spec.width))), 0.0
+    ).astype(np.float32)
+    return spec, keys0, regs0, pk, upd, bins, valid
+
+
+needs_flow_pallas = pytest.mark.skipif(
+    not pallas_backend.pallas_available(),
+    reason="Pallas toolchain unavailable in this environment",
+)
+
+
+@needs_flow_pallas
+@given(data=st.data())
+@HSET
+def test_flow_update_kernel_bit_identical(data):
+    from repro.kernels.flow_update import flow_update, flow_update_ref
+
+    spec, keys0, regs0, pk, upd, bins, valid = _draw_flow_setup(data.draw)
+    kw = dict(n_counters=spec.n_counters, n_ewma=spec.n_ewma,
+              alpha=spec.ewma_alpha)
+    ref = flow_update_ref(keys0, regs0, pk, upd, bins, valid, **kw)
+    ker = flow_update(keys0, regs0, pk, upd, bins, valid, **kw)
+    for a, b, name in zip(ref, ker, ("keys", "regs", "feats")):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"flow-update kernel diverged on {name} "
+                    f"(slots={spec.n_slots}, width={spec.width})",
+        )
+
+
+@needs_flow_pallas
+@given(data=st.data())
+@HSET
+def test_stateful_pipeline_backend_parity(data):
+    """Whole stateful pipelines (registers + random MLP classifier) serve
+    bit-identical state AND verdicts on both engines; backend reporting
+    stays honest."""
+    from repro.flowstate import FlowStateSpec, StatefulPipeline
+
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    n_slots = data.draw(st.sampled_from((8, 64)))
+    hist = data.draw(st.integers(3, 8))
+    spec = FlowStateSpec(n_slots=n_slots, n_counters=1, n_ewma=1,
+                         hist_sizes=(hist,), ewma_alpha=0.125)
+    fk = stageir.FlowKey((0,), n_slots)
+    ru = stageir.RegisterUpdate(
+        spec, ewma_cols=(1,), hist_cols=(1,),
+        hist_edges=(np.linspace(0.0, 1.0, hist + 1)[1:-1],),
+    )
+    ws = stageir.WindowStats(spec, mode=data.draw(st.sampled_from(
+        ("all", "hist"))))
+    hidden = data.draw(st.sampled_from((4, 8)))
+    w1 = rng.normal(size=(ws.n_out, hidden)).astype(np.float32)
+    w2 = rng.normal(size=(hidden, 3)).astype(np.float32)
+    mlp = stageir.FusedMLP(
+        [w1, w2], [np.zeros(hidden, np.float32), np.zeros(3, np.float32)]
+    )
+    stages = [fk, ru, ws, mlp, stageir.Reduce("argmax")]
+
+    B = data.draw(st.integers(1, 120))
+    X = np.zeros((B, 2), np.float32)
+    X[:, 0] = rng.integers(0, data.draw(st.sampled_from((2, 30))), B)
+    X[:, 1] = rng.random(B)
+
+    pi = StatefulPipeline(stages, backend="interpret")
+    pp = StatefulPipeline(stages, backend="pallas")
+    assert pi.backend == "interpret" and pp.backend == "pallas"
+    assert pp.requested_backend == "pallas"
+    si, vi = pi(pi.init_state(), X)
+    sp, vp = pp(pp.init_state(), X)
+    np.testing.assert_array_equal(np.asarray(si.keys), np.asarray(sp.keys))
+    np.testing.assert_array_equal(np.asarray(si.regs), np.asarray(sp.regs))
+    np.testing.assert_array_equal(vi, vp)
+
+
+@given(data=st.data())
+@HSET
+def test_flowstate_specs_equal_stage_meta(data):
+    """Invariant (3) for the stateful vocabulary: what feasibility charges
+    (flowstate_specs) is what the executable stages carry (meta)."""
+    spec, *_ = _draw_flow_setup(data.draw)
+    specs = stageir.flowstate_specs(spec)
+    by_kind = {s.kind: s for s in specs}
+    edges = tuple(
+        np.linspace(0.0, 1.0, h + 1)[1:-1] for h in spec.hist_sizes
+    )
+    ru = stageir.RegisterUpdate(
+        spec,
+        counter_cols=tuple(1 for _ in range(spec.n_counters - 1)),
+        ewma_cols=tuple(1 for _ in range(spec.n_ewma)),
+        hist_cols=tuple(1 for _ in range(len(spec.hist_sizes))),
+        hist_edges=edges,
+    )
+    assert by_kind["register_update"].params == ru.meta()["params"] \
+        == spec.n_slots * (spec.width + 1)
+    assert by_kind["register_update"].extra == (spec.n_slots, spec.width)
+    ws = stageir.WindowStats(spec, mode="all")
+    assert by_kind["window_stats"].n_out == ws.n_out == ws.meta()["n_out"]
+    rep = feas.flowstate_report(spec, "taurus")
+    assert rep.resources["register_words"] \
+        == by_kind["register_update"].params
