@@ -47,3 +47,11 @@ def bench_pps(fn, X, repeats: int = 20) -> float:
         for _ in range(repeats):
             fn(X)
     return repeats * len(X) / t.wall_s
+
+
+def bench_pps_best(fn, X, rounds: int = 5, repeats: int = 20) -> float:
+    """Best-of-``rounds`` ``bench_pps``: the A/B gates (pallas >= interp,
+    fused-DAG >= per-model) compare best-case rates so scheduler noise on
+    shared runners doesn't flip a structural speedup into a flake."""
+    fn(X)
+    return max(bench_pps(fn, X, repeats) for _ in range(rounds))

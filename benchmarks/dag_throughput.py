@@ -1,7 +1,7 @@
-"""Whole-DAG JIT vs interpreted chaining vs Pallas backend: pkt/s bench.
+"""Whole-DAG JIT vs interpreted chaining vs Pallas backends: pkt/s bench.
 
 Builds a 3-model chain (DNN gate > SVM | KMeans) on the AD dataset, then
-measures end-to-end packet throughput three ways:
+measures end-to-end packet throughput:
 
   * interpreted — ``chaining.run_dag``: each model's pipeline runs as its
     own jitted call, verdicts merge in numpy between stages;
@@ -11,30 +11,44 @@ measures end-to-end packet throughput three ways:
     pipelines inside the DAG run as fused Pallas kernel launches
     (docs/pipeline_ir.md#pallas-lowering-contract).
 
-All paths produce bit-identical verdicts (asserted).  A second table pins
-the per-pipeline contract on the fused-MLP (DNN) pipeline: the Pallas
-backend must serve >= the interpreted stage-apply path in pkt/s (asserted —
-this is the ROADMAP "fast as the hardware allows" gate).  Emits JSON like
-the other benches.
+A second table pins the fused-DAG megakernel on the chained AD > TC
+pipeline: ``backend="pallas"`` fuses the whole DAG into ONE kernel launch
+(``pallas-fused-dag``) and must serve >= 1.5x the per-model-launch
+baseline (``fuse_dag=False`` — the PR-4 path) in pkt/s, bit-exact vs
+``run_dag``.  A third table pins the per-pipeline Pallas >= interpreter
+gate on the fused-MLP pipeline.  All comparisons use best-of-rounds
+timing (shared-runner noise).  Serve-engine stats (pkt/s + latency
+percentiles per engine x backend) are recorded for the consolidated
+``BENCH_serve.json`` that ``benchmarks/run.py`` emits.
 
   PYTHONPATH=src python -m benchmarks.dag_throughput
 """
 
 from __future__ import annotations
 
-import time
+from typing import Callable
 
 import numpy as np
 
 from repro.core import chaining, codegen, feasibility as feas, mlalgos
 from repro.core.alchemy import Model
 from repro.data import netdata
-from repro.serve.packet_engine import PacketServeEngine
+from repro.serve import PacketServeEngine, ShardedPacketServeEngine
 
-from benchmarks.common import bench_pps, render_table, save_result
+from benchmarks.common import (
+    bench_pps,
+    bench_pps_best,
+    render_table,
+    save_result,
+)
 
 BATCHES = (256, 1024, 4096)
+# the megakernel's biggest win is launch-overhead-dominated small
+# micro-batches (the latency-bound serving regime), so its table starts
+# one step lower
+FUSED_BATCHES = (128, 256, 1024, 4096)
 REPEATS = 20
+FUSED_DAG_GATE = 1.5               # megakernel vs per-model-launch baseline
 
 
 def _noop_loader():
@@ -63,6 +77,137 @@ def build_chain(seed: int = 0):
 
 def bench(fn, X, repeats: int = REPEATS) -> float:
     return bench_pps(fn, X, repeats)
+
+
+def _serve_stat(pipeline, d, *, label: str, engine_cls=PacketServeEngine,
+                max_batch: int = 1024, depth: int = 2, passes: int = 3
+                ) -> dict:
+    """Stream the test set through a serving engine; -> one BENCH_serve
+    entry (pkt/s + p50/p95/p99 pipeline latency)."""
+    eng = engine_cls(pipeline, feature_dim=d.num_features,
+                     max_batch=max_batch, depth=depth)
+    chunks = [d.test_x[s:s + 997] for s in range(0, len(d.test_x), 997)]
+    for _ in range(passes):
+        for _v in eng.serve_stream(iter(chunks)):
+            pass
+    s = eng.stats()
+    return {
+        "engine": engine_cls.__name__,
+        "pipeline": label,
+        "backend": s["backend"],
+        "depth": s["depth"],
+        "shards": s["shards"],
+        "pkt_per_s": s["pkt_per_s"],
+        "lat_p50_ms": s["lat_p50_ms"],
+        "lat_p95_ms": s["lat_p95_ms"],
+        "lat_p99_ms": s["lat_p99_ms"],
+    }
+
+
+def bench_fused_dag(d, pipes) -> dict:
+    """The megakernel tables: chained AD > TC, one launch vs per-model.
+
+    Two comparisons, both bit-exact vs ``run_dag``:
+
+    * **direct calls** — the megakernel launch alone must not lose to
+      per-model launches (>= 1x at its best batch; the kernel-level
+      honesty gate);
+    * **serving path** — the PR's hot path (megakernel + overlap engine,
+      ``depth>1``) vs the PR-4 serving baseline (per-model launches,
+      synchronous ``depth=1`` engine) must reach ``FUSED_DAG_GATE`` pkt/s
+      at its best micro-batch.  Baseline and new path are timed in
+      interleaved rounds so load drift on shared runners hits both."""
+    import time as _time
+
+    node = _leaf("ad") > _leaf("tc")
+    per_model = chaining.compile_dag(node, pipes, backend="pallas",
+                                     fuse_dag=False)
+    fused = chaining.compile_dag(node, pipes, backend="pallas")
+    assert fused.backend == "pallas-fused-dag", (
+        f"AD > TC must fuse into the megakernel, got {fused.backend}"
+    )
+    assert per_model.backend == "pallas", per_model.backend
+
+    ref = chaining.run_dag(node, pipes, d.test_x)
+    assert np.array_equal(ref, fused(d.test_x)), "megakernel diverged"
+    assert np.array_equal(ref, per_model(d.test_x)), "per-model diverged"
+
+    rows = []
+    for n in FUSED_BATCHES:
+        X = d.test_x[:n]
+        base_pps = bench_pps_best(per_model, X)
+        mega_pps = bench_pps_best(fused, X)
+        rows.append({
+            "batch": n,
+            "permodel_pps": round(base_pps),
+            "megakernel_pps": round(mega_pps),
+            "speedup": round(mega_pps / base_pps, 2),
+        })
+
+    print("\n== fused-DAG megakernel vs per-model launches "
+          "(AD > TC, direct calls, pkt/s) ==")
+    print(render_table(
+        rows, ["batch", "permodel_pps", "megakernel_pps", "speedup"]
+    ))
+    best_direct = max(r["speedup"] for r in rows)
+    assert best_direct >= 1.0, (
+        f"fused-DAG megakernel slower than per-model launches at every "
+        f"batch size ({best_direct}x)"
+    )
+
+    # ---- serving path: overlap engine + megakernel vs PR-4 baseline
+    stream = np.concatenate([d.test_x] * 4)
+    chunks = [stream[s:s + 2048] for s in range(0, len(stream), 2048)]
+
+    def engine_pps(dag, depth: int, max_batch: int) -> Callable[[], float]:
+        eng = PacketServeEngine(dag, feature_dim=d.num_features,
+                                max_batch=max_batch, depth=depth)
+
+        def one_round() -> float:
+            t0 = _time.perf_counter()
+            n = 0
+            for v in eng.serve_stream(iter(chunks)):
+                n += len(v)
+            return n / (_time.perf_counter() - t0)
+
+        return one_round
+
+    serve_rows = []
+    for max_batch, depth in ((256, 2), (512, 2), (1024, 3), (2048, 3)):
+        base_round = engine_pps(per_model, 1, max_batch)
+        new_round = engine_pps(fused, depth, max_batch)
+        base_pps = mega_pps = 0.0
+        for _ in range(4):                      # interleaved best-of
+            base_pps = max(base_pps, base_round())
+            mega_pps = max(mega_pps, new_round())
+        serve_rows.append({
+            "max_batch": max_batch,
+            "depth": depth,
+            "pr4_sync_pps": round(base_pps),
+            "fused_overlap_pps": round(mega_pps),
+            "speedup": round(mega_pps / base_pps, 2),
+        })
+
+    print("\n== serving path: megakernel + overlap engine vs PR-4 "
+          "per-model sync engine (pkt/s) ==")
+    print(render_table(
+        serve_rows,
+        ["max_batch", "depth", "pr4_sync_pps", "fused_overlap_pps",
+         "speedup"],
+    ))
+    best_serve = max(r["speedup"] for r in serve_rows)
+    assert best_serve >= FUSED_DAG_GATE, (
+        f"fused-DAG serving path only {best_serve}x the PR-4 "
+        f"per-model-launch baseline (gate {FUSED_DAG_GATE}x)"
+    )
+    return {
+        "schedule": fused.schedule,
+        "rows": rows,
+        "serve_rows": serve_rows,
+        "max_speedup_direct": best_direct,
+        "max_speedup": best_serve,
+        "bit_exact_vs_run_dag": True,
+    }
 
 
 def main() -> dict:
@@ -106,6 +251,9 @@ def main() -> dict:
                "engine_pps", "dagjit_x", "pallas_x"]
     ))
 
+    # the megakernel gate (chained AD > TC, acceptance: >= 1.5x per-model)
+    fused_dag = bench_fused_dag(d, pipes)
+
     # per-pipeline backend gate: the fused-MLP (DNN) pipeline served by the
     # Pallas backend must beat the interpreted stage-apply path
     from repro.core import stageir
@@ -138,15 +286,38 @@ def main() -> dict:
         f"pipeline ({best}x)"
     )
 
+    # serve-engine stats per engine x backend for BENCH_serve.json
+    ad_tc = _leaf("ad") > _leaf("tc")
+    serve_stats = [
+        _serve_stat(chaining.compile_dag(ad_tc, pipes), d,
+                    label="ad>tc"),
+        _serve_stat(chaining.compile_dag(ad_tc, pipes, backend="pallas",
+                                         fuse_dag=False), d,
+                    label="ad>tc"),
+        _serve_stat(chaining.compile_dag(ad_tc, pipes, backend="pallas"), d,
+                    label="ad>tc"),
+        _serve_stat(chaining.compile_dag(ad_tc, pipes, backend="pallas"), d,
+                    label="ad>tc", engine_cls=ShardedPacketServeEngine),
+    ]
+    print("\n== serving-engine stats (BENCH_serve entries) ==")
+    print(render_table(
+        serve_stats,
+        ["engine", "pipeline", "backend", "depth", "shards", "pkt_per_s",
+         "lat_p50_ms", "lat_p95_ms", "lat_p99_ms"],
+    ))
+
     payload = {
         "schedule": dag.schedule,
         "verdicts_match": True,
         "model_backends": dag_pallas.model_backends,
         "rows": rows,
+        "fused_dag": fused_dag,
         "backend_rows": backend_rows,
         # same definition as the PR-1 baseline: whole-DAG jit vs interpreted
         "max_speedup": max(r["dagjit_x"] for r in rows),
         "pallas_vs_interp_max_speedup": best,
+        "fused_dag_vs_permodel_max_speedup": fused_dag["max_speedup"],
+        "serve_stats": serve_stats,
     }
     save_result("dag_throughput", payload)
     return payload

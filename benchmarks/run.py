@@ -2,10 +2,18 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run table2 fig7  # a subset
+
+After the selected benches run, the per-engine serving stats recorded by
+``dag_throughput`` / ``flow_throughput`` are consolidated into
+``benchmarks/results/BENCH_serve.json`` — the machine-readable perf
+trajectory (pkt/s + p50/p95/p99 latency per engine x backend) future PRs
+diff throughput against.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 import traceback
@@ -44,6 +52,34 @@ BENCHES = {
 }
 
 
+# benches whose saved results carry "serve_stats" entries
+_SERVE_SOURCES = ("dag_throughput", "flow_throughput")
+
+
+def write_bench_serve() -> str | None:
+    """Consolidate serve_stats from the source benches' saved results into
+    benchmarks/results/BENCH_serve.json; returns the path (None when no
+    source results exist yet)."""
+    from benchmarks.common import RESULTS_DIR, save_result
+
+    entries = []
+    for name in _SERVE_SOURCES:
+        path = os.path.join(RESULTS_DIR, f"{name}.json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            payload = json.load(f)
+        for e in payload.get("serve_stats", []):
+            entries.append({"bench": name, **e})
+    if not entries:
+        return None
+    return save_result("BENCH_serve", {
+        "description": "pkt/s + latency percentiles per serving engine x "
+                       "execution backend (consolidated perf trajectory)",
+        "entries": entries,
+    })
+
+
 def main() -> None:
     names = sys.argv[1:] or list(BENCHES)
     summary = []
@@ -58,6 +94,10 @@ def main() -> None:
             traceback.print_exc()
             status = f"FAIL {type(e).__name__}: {e}"
         summary.append((name, status, time.perf_counter() - t0))
+
+    serve_path = write_bench_serve()
+    if serve_path:
+        print(f"\nconsolidated serving stats -> {serve_path}")
 
     print(f"\n{'=' * 72}\nbenchmark summary\n{'=' * 72}")
     print("name,status,wall_s")

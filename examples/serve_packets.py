@@ -66,9 +66,11 @@ for backend in ("interpret", "pallas"):
 
     print(f"\n[{stats['backend']}] streamed {n_packets} packets in "
           f"{wall:.2f}s ({stats['pkt_per_s']:,.0f} pkt/s pipeline-only, "
-          f"{stats['batches']} micro-batches, {stats['pad_packets']} pad rows)")
+          f"{stats['batches']} micro-batches, {stats['pad_packets']} pad rows, "
+          f"depth {stats['depth']})")
     print(f"per-batch latency: p50 {stats['lat_p50_ms']:.3f} ms, "
-          f"p95 {stats['lat_p95_ms']:.3f} ms")
+          f"p95 {stats['lat_p95_ms']:.3f} ms, p99 {stats['lat_p99_ms']:.3f} ms"
+          f" (host dispatch {stats['dispatch_s'] * 1e3:.1f} ms total)")
     print(f"flagged malicious: {malicious} ({malicious / n_packets:.1%})")
 
 assert np.array_equal(verdict_sets["interpret"], verdict_sets["pallas"]), \

@@ -66,7 +66,7 @@ for backend in ("interpret", "pallas"):
     print(f"  {s['packets']} packets, {s['pkt_per_s']:,.0f} pkt/s, "
           f"{s['batches']} batches, {s['pad_packets']} pad rows")
     print(f"  per-batch latency: p50 {s['lat_p50_ms']:.3f} ms, "
-          f"p95 {s['lat_p95_ms']:.3f} ms")
+          f"p95 {s['lat_p95_ms']:.3f} ms, p99 {s['lat_p99_ms']:.3f} ms")
 
 assert np.array_equal(verdicts["interpret"], verdicts["pallas"]), \
     "the two engines must produce bit-identical verdicts (same registers)"

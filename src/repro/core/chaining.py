@@ -92,9 +92,11 @@ class CompiledDag:
 
     ``model_backends`` records, per model name, which execution engine that
     pipeline actually lowered to ("pallas" = one fused kernel launch,
+    "pallas-fused-dag" = the whole DAG as ONE megakernel launch,
     "interpret" = inlined stage walk); ``backend`` summarizes ("pallas" /
-    "interpret" / "mixed").  ``with_backend`` recompiles the same DAG for a
-    different engine (what ``PacketServeEngine(backend=...)`` calls)."""
+    "pallas-fused-dag" / "interpret" / "mixed").  ``with_backend``
+    recompiles the same DAG for a different engine (what
+    ``PacketServeEngine(backend=...)`` calls)."""
 
     def __init__(self, fn: Callable, schedule: str, n_models: int,
                  model_backends: dict[str, str] | None = None,
@@ -110,14 +112,24 @@ class CompiledDag:
         kinds = set(self.model_backends.values()) or {"interpret"}
         return kinds.pop() if len(kinds) == 1 else "mixed"
 
+    @property
+    def fused_dag(self) -> bool:
+        """True when the whole DAG serves as one megakernel launch."""
+        return self.backend == "pallas-fused-dag"
+
     def with_backend(self, backend: str) -> "CompiledDag":
         if self._rebuild is None:
             raise ValueError("this CompiledDag cannot be recompiled")
         return self._rebuild(backend)
 
+    def dispatch(self, X) -> jax.Array:
+        """Launch the DAG program WITHOUT forcing the device->host copy —
+        the async serving path (PacketServeEngine depth>1) fetches the
+        returned device array lazily at flush time."""
+        return self.fn(jnp.asarray(X, jnp.float32))
+
     def __call__(self, X: np.ndarray) -> np.ndarray:
-        out = self.fn(jnp.asarray(X, np.float32))
-        return np.asarray(out, np.int32)
+        return np.asarray(self.dispatch(X), np.int32)
 
     def __repr__(self):
         return (f"CompiledDag({self.schedule!r}, models={self.n_models}, "
@@ -125,19 +137,46 @@ class CompiledDag:
 
 
 def compile_dag(node, result, *, combine: str = "or", fuse: bool = True,
-                backend: str = "interpret") -> CompiledDag:
+                backend: str = "interpret",
+                fuse_dag: bool = True) -> CompiledDag:
     """Lower the whole DAG (Seq gating as jnp.where masks, Par merges) and
     every model's stage list into a single jitted callable.
 
-    ``backend="pallas"`` picks the execution engine per-pipeline: each
-    kernel-eligible model becomes one fused Pallas kernel launch inside the
-    DAG program (docs/pipeline_ir.md#pallas-lowering-contract); ineligible
-    models fall back to the inlined stage walk.  The mix actually compiled
-    is reported on ``CompiledDag.model_backends``."""
+    ``backend="pallas"`` first tries to fuse the ENTIRE DAG into ONE
+    megakernel launch (``pallas_backend.lower_dag_pallas``: every chained
+    model's weights resident in VMEM, gating applied in-kernel — recorded
+    as ``"pallas-fused-dag"`` on every model, bit-exact vs ``run_dag``);
+    ``fuse_dag=False`` disables that pattern-match, which is the
+    per-model-launch baseline ``benchmarks/dag_throughput.py`` compares
+    against.  When the DAG is outside the megakernel envelope the engine
+    is picked per-pipeline: each kernel-eligible model becomes one fused
+    Pallas kernel launch inside the DAG program
+    (docs/pipeline_ir.md#pallas-lowering-contract); ineligible models fall
+    back to the inlined stage walk.  The mix actually compiled is reported
+    on ``CompiledDag.model_backends``."""
     if combine not in COMBINES:
         raise KeyError(f"combine must be one of {COMBINES}")
     if backend not in stageir.EXEC_BACKENDS:
         raise KeyError(f"backend must be one of {stageir.EXEC_BACKENDS}")
+    describe = node.describe() if hasattr(node, "describe") else str(node)
+
+    def rebuild(b: str) -> CompiledDag:
+        return compile_dag(node, result, combine=combine, fuse=fuse,
+                           backend=b, fuse_dag=fuse_dag)
+
+    if backend == "pallas" and fuse_dag:
+        from repro.core import pallas_backend
+
+        dag_fn = pallas_backend.lower_dag_pallas(
+            node, result, combine=combine, fuse=fuse
+        )
+        if dag_fn is not None:
+            return CompiledDag(
+                jax.jit(dag_fn), describe, len(node.leaves()),
+                {m.name: "pallas-fused-dag" for m in node.leaves()},
+                rebuild=rebuild,
+            )
+
     model_backends: dict[str, str] = {}
 
     def lower(n) -> Callable:
@@ -181,12 +220,8 @@ def compile_dag(node, result, *, combine: str = "or", fuse: bool = True,
         raise TypeError(type(n))
 
     fn = jax.jit(lower(node))
-    describe = node.describe() if hasattr(node, "describe") else str(node)
     return CompiledDag(
-        fn, describe, len(node.leaves()), model_backends,
-        rebuild=lambda b: compile_dag(
-            node, result, combine=combine, fuse=fuse, backend=b
-        ),
+        fn, describe, len(node.leaves()), model_backends, rebuild=rebuild,
     )
 
 

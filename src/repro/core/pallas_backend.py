@@ -62,6 +62,8 @@ __all__ = [
     "pallas_available",
     "pallas_eligible",
     "lower_stages_pallas",
+    "dag_eligible",
+    "lower_dag_pallas",
     "stateful_eligible",
     "lower_stateful",
     "lower_stateful_pallas",
@@ -217,6 +219,222 @@ def lower_stages_pallas(stages: list[Stage]) -> Callable | None:
         return mat_fn
 
     return None
+
+
+# ------------------------------------------------------ cross-model DAGs
+#
+# A Seq/Par DAG whose every leaf is an MLP-shaped classifier lowers onto
+# ONE fused Pallas launch (kernels/fused_mlp.fused_dag): all chained
+# models' weights resident in VMEM for the launch, Seq gating and Par
+# or/and merges applied in-kernel on the int32 verdicts.  Eliminates the
+# per-model HBM round trips the per-model-launch path pays between chained
+# models; recorded as backend="pallas-fused-dag" by chaining.compile_dag.
+
+
+def _fold_feature_select(pre: list[Stage], w0: np.ndarray, n_feat: int):
+    """Fold a FeatureSelect-only prelude into the first-layer weights.
+
+    ``x[:, idx] @ W0 == x @ S @ W0`` for the 0/1 selection matrix S; with a
+    *strictly increasing, duplicate-free* composite index the embedded
+    rows keep their original summation order and the interleaved rows are
+    exact zeros, so the folded matmul stays bit-identical (the same
+    argument that makes lane padding exact).  Returns the [n_feat, h]
+    first-layer weights, or ``None`` when the prelude is outside that
+    envelope (unsorted/duplicated selection, non-FeatureSelect stages, or
+    an index beyond the DAG input width)."""
+    if not all(isinstance(s, FeatureSelect) for s in pre):
+        return None
+    idx = np.asarray(pre[0].idx, np.int64)
+    for s in pre[1:]:
+        idx = idx[np.asarray(s.idx, np.int64)]
+    if idx.size != w0.shape[0] or np.any(np.diff(idx) <= 0):
+        return None
+    if idx.size and int(idx[-1]) >= n_feat:
+        return None
+    folded = np.zeros((n_feat, w0.shape[1]), np.float32)
+    folded[idx] = np.asarray(w0, np.float32)
+    return folded
+
+
+def _match_dag_leaf(stages: list[Stage]):
+    """Post-peephole leaf stage list -> (prelude, weights, biases) for a
+    megakernel-eligible classifier, else None.  The leaf must produce
+    class-id verdicts (an MLP/Dense chain ending in an in-kernel argmax)."""
+    pre, body = _split_prelude(stages)
+    if any(not isinstance(s, FeatureSelect) for s in pre):
+        return None
+    mlp = _match_mlp(body)
+    if mlp is None or not mlp[2]:        # gating needs int32 verdicts
+        return None
+    weights, biases = mlp[0], mlp[1]
+    if not _in_envelope_mlp(weights):
+        return None
+    return pre, list(weights), list(biases)
+
+
+def _plan_dag(node, result, combine: str, fuse: bool):
+    """Walk an Alchemy DAG -> (plan, models) where ``models`` is the
+    deduplicated list of (prelude, weights, biases) and ``plan`` the
+    nested static structure ``kernels/fused_mlp.eval_dag_plan`` folds.
+    Returns None anywhere the DAG leaves the megakernel envelope."""
+    from repro.core import stageir
+    from repro.core.alchemy import Model, Par, Seq
+
+    models: list = []
+    index_of: dict[int, int] = {}        # id(pipeline) -> model slot
+
+    def walk(n):
+        if isinstance(n, Model):
+            entry = result[n.name]
+            pipe = entry.pipeline if hasattr(entry, "pipeline") else entry
+            if id(pipe) not in index_of:
+                stages = pipe.stages
+                if fuse:
+                    stages = stageir.fuse_pipeline_stages(stages)
+                leaf = _match_dag_leaf(stages)
+                if leaf is None:
+                    return None
+                index_of[id(pipe)] = len(models)
+                models.append(leaf)
+            return ("model", index_of[id(pipe)])
+        if isinstance(n, Seq):
+            parts = [walk(c) for c in n.children]
+            if any(p is None for p in parts):
+                return None
+            return ("seq", tuple(parts))
+        if isinstance(n, Par):
+            if combine not in ("or", "and"):
+                return None              # "concat" has no verdict merge
+            parts = [walk(c) for c in n.children]
+            if any(p is None for p in parts):
+                return None
+            return (combine, tuple(parts))
+        return None
+
+    plan = walk(node)
+    if plan is None:
+        return None
+    return plan, models
+
+
+def _dag_input_dim(models: list) -> int | None:
+    """The DAG input width, read off the no-prelude leaves (every model in
+    a DAG consumes the same packet rows).  None when every leaf hides its
+    input width behind a FeatureSelect — the fold target is then unknown
+    and the DAG falls back to per-model launches."""
+    dims = [int(w[0].shape[0]) for pre, w, b in models if not pre]
+    if not dims:
+        return None
+    return max(dims)
+
+
+def dag_eligible(node, result, *, combine: str = "or",
+                 fuse: bool = True) -> bool:
+    """Would ``lower_dag_pallas`` fuse this whole DAG into one launch?
+    Shape checks only — no parameter packing or device transfers."""
+    if not pallas_available():
+        return False
+    if len(getattr(node, "leaves", lambda: [None])()) < 2:
+        return False                     # a bare model is not a DAG
+    planned = _plan_dag(node, result, combine, fuse)
+    if planned is None:
+        return False
+    plan, models = planned
+    n_feat = _dag_input_dim(models)
+    if n_feat is None:
+        return False
+    import jax
+
+    from repro.kernels import fused_mlp as fm
+
+    interpret = jax.default_backend() != "tpu"
+    n_layers, lanes = [], []
+    for pre, w, b in models:
+        if pre and _fold_feature_select(pre, np.asarray(w[0]), n_feat) is None:
+            return False
+        if not pre and int(w[0].shape[0]) != n_feat:
+            return False
+        widths = [n_feat] + [int(x.shape[1]) for x in w]
+        if max(widths) > fm.LANE:
+            return False
+        n_layers.append(len(w))
+        lanes.append(fm.snap_lane(widths, interpret=interpret))
+    return fm.dag_vmem_bytes(tuple(n_layers), tuple(lanes)) \
+        <= fm.DAG_VMEM_BUDGET
+
+
+def lower_dag_pallas(node, result, *, combine: str = "or",
+                     fuse: bool = True):
+    """Lower a whole Seq/Par DAG onto ONE fused Pallas kernel launch.
+
+    Returns a traceable ``fn(x: [B, F]) -> verdicts [B] int32`` closing
+    over every model's packed weight stacks, or ``None`` when any leaf (or
+    the DAG shape itself) is outside the megakernel envelope — the caller
+    then falls back to per-model launches.  Bit-exact vs ``run_dag`` by
+    the same padding/masking arguments as the single-model kernel."""
+    if not pallas_available():
+        return None
+    if len(getattr(node, "leaves", lambda: [None, None])()) < 2:
+        return None
+    planned = _plan_dag(node, result, combine, fuse)
+    if planned is None:
+        return None
+    plan, models = planned
+    n_feat = _dag_input_dim(models)
+    if n_feat is None:
+        return None
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import fused_mlp as fm
+
+    folded: list[tuple[list, list]] = []
+    widths_all: list[int] = [n_feat]
+    for pre, weights, biases in models:
+        w0 = np.asarray(weights[0], np.float32)
+        if pre:
+            w0 = _fold_feature_select(pre, w0, n_feat)
+            if w0 is None:
+                return None
+        elif w0.shape[0] != n_feat:
+            return None                  # inconsistent leaf input widths
+        ws = [w0] + [np.asarray(w, np.float32) for w in weights[1:]]
+        widths_all += [int(w.shape[1]) for w in ws]
+        folded.append((ws, [np.asarray(b, np.float32) for b in biases]))
+
+    interpret = jax.default_backend() != "tpu"
+    if max(widths_all) > fm.LANE:
+        return None
+
+    # each model keeps its own snapped lane (the per-model path's tile
+    # choice), so the fused launch does the same FLOPs as per-model
+    # launches and only removes the inter-model HBM round trips
+    stacks: list = []
+    lanes: list[int] = []
+    for ws, bs in folded:
+        lane = fm.snap_lane(
+            [n_feat] + [int(w.shape[1]) for w in ws], interpret=interpret
+        )
+        lanes.append(lane)
+        w_stack, b_stack = fm.pack_params(
+            [jnp.asarray(w) for w in ws], [jnp.asarray(b) for b in bs], lane
+        )
+        stacks += [w_stack, b_stack]
+    stacks = tuple(stacks)
+    n_layers = tuple(len(ws) for ws, _ in folded)
+    n_classes = tuple(int(ws[-1].shape[1]) for ws, _ in folded)
+    if fm.dag_vmem_bytes(n_layers, tuple(lanes)) > fm.DAG_VMEM_BUDGET:
+        return None                      # cannot be VMEM-resident: fall back
+
+    def dag_fn(x, _stacks=stacks, _nl=n_layers, _nc=n_classes,
+               _lanes=tuple(lanes), _plan=plan, _interp=interpret):
+        return fm.fused_dag(
+            x, _stacks, n_layers=_nl, n_classes=_nc, lanes=_lanes,
+            plan=_plan, interpret=_interp,
+        )
+
+    return dag_fn
 
 
 # ------------------------------------------------------- stateful prefixes

@@ -345,6 +345,19 @@ class FlowKey(Stage):
             key = key * jnp.uint32(16777619) ^ v     # FNV-1a style fold
         return (key & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
 
+    def apply_keys_np(self, h: np.ndarray) -> np.ndarray:
+        """Numpy twin of ``apply_keys`` — same fold, same rounding — for
+        host-side routing (the sharded engine partitions packets across
+        per-device register tables BEFORE any device transfer).  Pinned
+        equal to the traceable form in tests/test_sharded_engine.py."""
+        h = np.asarray(h)
+        key = np.zeros(h.shape[0], np.uint32)
+        with np.errstate(over="ignore"):
+            for c in self.key_cols:
+                v = np.round(h[:, c]).astype(np.int32).astype(np.uint32)
+                key = key * np.uint32(16777619) ^ v
+        return (key & np.uint32(0x7FFFFFFF)).astype(np.int32)
+
     def meta(self):
         return {"key_cols": tuple(self.key_cols), "n_slots": self.n_slots}
 
@@ -520,6 +533,12 @@ def fuse_pipeline_stages(stages: list[Stage]) -> list[Stage]:
 
 
 EXEC_BACKENDS = ("interpret", "pallas")
+
+# Engines a compiled artifact may REPORT serving on (what actually runs,
+# after fallback): the requestable engines, the whole-DAG megakernel
+# (chaining.compile_dag's "pallas-fused-dag"), and "mixed" for DAGs /
+# stateful pipelines whose parts landed on different engines.
+REPORT_BACKENDS = ("interpret", "pallas", "pallas-fused-dag", "mixed")
 
 
 class CompiledStages:

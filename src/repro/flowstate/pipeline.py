@@ -74,7 +74,18 @@ class StatefulPipeline:
             keys, regs, feats = _flow(keys, regs, x, valid)
             return keys, regs, _cls(feats)
 
-        self._step = jax.jit(step)
+        # the raw traceable step: what ShardedPacketServeEngine wraps in
+        # shard_map over per-device register tables
+        self.step_fn = step
+        # donate the register buffers on accelerator backends: the update
+        # rewrites the whole table every step, so the input buffers are
+        # dead the moment the step is dispatched — steady-state serving
+        # then allocates no new table per batch.  (No-op on CPU, where XLA
+        # does not support donation; callers must treat a dispatched-into
+        # FlowState as consumed — the engine always adopts the returned
+        # state.)
+        donate = (0, 1) if jax.default_backend() != "cpu" else ()
+        self._step = jax.jit(step, donate_argnums=donate)
 
     @property
     def backend(self) -> str:
@@ -90,8 +101,12 @@ class StatefulPipeline:
     def init_state(self) -> FlowState:
         return init_state(self.spec)
 
-    def __call__(self, state: FlowState, X, valid=None
-                 ) -> tuple[FlowState, np.ndarray]:
+    def dispatch(self, state: FlowState, X, valid=None):
+        """Launch one step WITHOUT forcing the device->host copy: returns
+        ``(state', verdict_device_array)``.  The async serving path
+        (PacketServeEngine depth>1) chains dispatches through the returned
+        state — the state dependency sequentializes in-flight batches —
+        and materializes verdicts lazily at flush time."""
         import jax.numpy as jnp
 
         X = jnp.asarray(X, jnp.float32)
@@ -100,7 +115,12 @@ class StatefulPipeline:
         keys, regs, verdicts = self._step(
             state.keys, state.regs, X, jnp.asarray(valid, jnp.int32)
         )
-        return FlowState(self.spec, keys, regs), np.asarray(verdicts)
+        return FlowState(self.spec, keys, regs), verdicts
+
+    def __call__(self, state: FlowState, X, valid=None
+                 ) -> tuple[FlowState, np.ndarray]:
+        state, verdicts = self.dispatch(state, X, valid)
+        return state, np.asarray(verdicts)
 
     def __repr__(self):
         return (f"StatefulPipeline(slots={self.spec.n_slots}, "

@@ -35,6 +35,13 @@ from jax.experimental import pallas as pl
 
 LANE = 128  # MXU/VREG lane width: TPU layer widths pad to this
 DEFAULT_BLOCK_B = 256
+# Interpret-mode (CPU) batch tile for fused-DAG launches: the emulated
+# grid loop is pure overhead there, so one big tile covers the whole
+# micro-batch.  On TPU a single launch streams the grid regardless of the
+# tile size, so the DAG keeps the single-model DEFAULT_BLOCK_B (smaller
+# VMEM tiles, same launch count); dag_vmem_bytes is the resident set the
+# lowering budgets either way.
+DAG_BLOCK_B = 1024
 
 
 def snap_lane(widths: list[int], *, interpret: bool) -> int:
@@ -111,6 +118,123 @@ def fused_mlp_classify_padded(
         out_shape=jax.ShapeDtypeStruct((B, lane), jnp.int32),
         interpret=interpret,
     )(x_pad, w_stack, b_stack)
+
+
+# ------------------------------------------------------- cross-model DAG
+#
+# A whole Seq/Par DAG of MLP-shaped models executed as ONE kernel launch:
+# every model's weight stack is resident in VMEM for the launch, each model
+# runs its statically-unrolled layer chain on the same input tile, and the
+# DAG's gating/merge ops (Seq short-circuit as where-masks, Par or/and as
+# max/min) apply in-kernel on the int32 verdicts — so chained models cost
+# one HBM round trip total instead of one per model.
+#
+# The DAG structure is a *plan*: nested hashable tuples
+#   ("model", i)                   leaf — verdict of model i
+#   ("seq", (p0, p1, ...))         gate: flagged packets keep their verdict
+#   ("or"|"and", (p0, p1, ...))    parallel merge: max / min
+# traced statically into the kernel, mirroring chaining.compile_dag.
+
+
+def eval_dag_plan(plan: tuple, verdicts: list) -> jax.Array:
+    """Fold per-model verdicts through the DAG plan (traceable; used both
+    inside the kernel and by reference implementations)."""
+    kind = plan[0]
+    if kind == "model":
+        return verdicts[plan[1]]
+    parts = [eval_dag_plan(p, verdicts) for p in plan[1]]
+    if kind == "seq":
+        out = parts[0]
+        for nxt in parts[1:]:
+            out = jnp.where(out > 0, out, nxt)
+        return out
+    if kind == "or":
+        return functools.reduce(jnp.maximum, parts)
+    if kind == "and":
+        return functools.reduce(jnp.minimum, parts)
+    raise KeyError(f"unknown DAG plan node {kind!r}")
+
+
+def _dag_kernel(x_ref, *refs, n_layers: tuple, n_classes: tuple,
+                lanes: tuple, plan: tuple):
+    """refs = (w_0, b_0, w_1, b_1, ..., o_ref): one (weights, biases) stack
+    pair per model, the int32 verdict tile last.  Each model runs at its
+    OWN snapped lane (``lanes[i]``) on a static slice of the input tile —
+    the fused launch then does exactly the per-model path's FLOPs (on TPU
+    every lane is the 128-wide MXU tile and the slices are no-ops)."""
+    o_ref = refs[-1]
+    h0 = x_ref[...].astype(jnp.float32)
+    verdicts = []
+    for i, n_l in enumerate(n_layers):
+        w_ref, b_ref = refs[2 * i], refs[2 * i + 1]
+        h = h0[:, :lanes[i]]
+        for l in range(n_l):
+            w = w_ref[l].astype(jnp.float32)
+            h = jnp.dot(h, w, preferred_element_type=jnp.float32)
+            h = h + b_ref[l][None, :]
+            if l < n_l - 1:
+                h = jnp.maximum(h, 0.0)
+        lane_ids = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+        h = jnp.where(lane_ids < n_classes[i], h, -jnp.inf)
+        verdicts.append(jnp.argmax(h, axis=1).astype(jnp.int32))
+    v = eval_dag_plan(plan, verdicts)
+    o_ref[...] = jnp.broadcast_to(v[:, None], o_ref.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_layers", "n_classes", "lanes", "plan",
+                              "block_b", "interpret")
+)
+def fused_dag_padded(
+    x_pad: jax.Array,     # [B_pad, max(lanes)]
+    *stacks: jax.Array,   # per model: w [L_i, lane_i, lane_i], b [L_i, lane_i]
+    n_layers: tuple,
+    n_classes: tuple,
+    lanes: tuple,
+    plan: tuple,
+    block_b: int = DAG_BLOCK_B,
+    interpret: bool = False,
+) -> jax.Array:
+    """-> [B_pad, max(lanes)] int32, DAG verdict broadcast (take col 0)."""
+    B, x_lane = x_pad.shape
+    assert B % block_b == 0
+    assert len(stacks) == 2 * len(n_layers)
+    assert x_lane == max(lanes)
+    grid = (B // block_b,)
+    in_specs = [pl.BlockSpec((block_b, x_lane), lambda i: (i, 0))]
+    for n_l, lane in zip(n_layers, lanes):
+        in_specs.append(
+            pl.BlockSpec((n_l, lane, lane), lambda i: (0, 0, 0))
+        )
+        in_specs.append(pl.BlockSpec((n_l, lane), lambda i: (0, 0)))
+    return pl.pallas_call(
+        functools.partial(_dag_kernel, n_layers=n_layers,
+                          n_classes=n_classes, lanes=lanes, plan=plan),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, x_lane), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, x_lane), jnp.int32),
+        interpret=interpret,
+    )(x_pad, *stacks)
+
+
+def dag_vmem_bytes(n_layers: tuple, lanes: tuple,
+                   block_b: int = DEFAULT_BLOCK_B) -> int:
+    """VMEM working set of the fused-DAG launch: every chained model's
+    weight stack resident at once (each at its own lane), plus the
+    double-buffered batch tiles at the widest lane.  The lowering gates
+    DAG fusion on this fitting ``DAG_VMEM_BUDGET`` — oversized DAGs fall
+    back to per-model launches instead of failing at Mosaic lowering."""
+    weights = sum(n_l * (lane * lane + lane) * 4
+                  for n_l, lane in zip(n_layers, lanes))
+    tiles = 2 * 2 * block_b * max(lanes) * 4
+    return weights + tiles
+
+
+# matches the TPU platform's working-set budget (core.feasibility
+# TPUModel.vmem_bytes): the megakernel must leave the envelope honestly
+# rather than claim a launch that cannot be resident
+DAG_VMEM_BUDGET = 64 * 2**20
 
 
 def pad_to_lane(arr: jax.Array, axis: int, lane: int = LANE) -> jax.Array:

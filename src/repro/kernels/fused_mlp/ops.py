@@ -15,8 +15,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.fused_mlp.kernel import (
+    DAG_BLOCK_B,
     DEFAULT_BLOCK_B,
     LANE,
+    eval_dag_plan,
+    fused_dag_padded,
     fused_mlp_classify_padded,
     fused_mlp_padded,
     pack_params,
@@ -101,3 +104,51 @@ def fused_mlp_classify(
 
 def fused_mlp_reference(x, weights, biases):
     return mlp_ref(x, weights, biases)
+
+
+def fused_dag(
+    x: jax.Array,
+    stacks: tuple,
+    *,
+    n_layers: tuple,
+    n_classes: tuple,
+    lanes: tuple,
+    plan: tuple,
+    block_b: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Whole-DAG megakernel entry: x [B, F] -> verdicts [B] int32.
+
+    ``stacks`` is the flat tuple of per-model (w_stack, b_stack) pairs,
+    each packed at its model's own snapped lane (``lanes[i]``); ``plan``
+    the static DAG structure (see ``kernel.eval_dag_plan``).  One
+    ``pallas_call`` for the entire chained/parallel model DAG: weights for
+    ALL models resident in VMEM, gating applied in-kernel on int32
+    verdicts.  The batch tile is ``DAG_BLOCK_B`` in interpret mode (the
+    emulated grid loop is pure overhead on CPU, so one tile covers the
+    micro-batch) and the single-model ``DEFAULT_BLOCK_B`` on TPU (one
+    launch streams the grid either way; smaller tiles keep the VMEM
+    working set down), clamped to the padded batch."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    if block_b is None:
+        block_b = DAG_BLOCK_B if interpret else DEFAULT_BLOCK_B
+    B = x.shape[0]
+    block_b = min(block_b, max(8, B))
+    pad_b = (-B) % block_b
+    x_pad = pad_to_lane(jnp.pad(x, ((0, pad_b), (0, 0))), 1, max(lanes))
+    out = fused_dag_padded(
+        x_pad, *stacks, n_layers=n_layers, n_classes=n_classes,
+        lanes=lanes, plan=plan, block_b=block_b, interpret=interpret,
+    )
+    return out[:B, 0]
+
+
+def fused_dag_reference(x, models: list, plan: tuple) -> jax.Array:
+    """jnp oracle for the megakernel: per-model MLP+argmax, plan folded on
+    the verdicts.  ``models`` is a list of (weights, biases) lists."""
+    verdicts = [
+        jnp.argmax(mlp_ref(x, w, b), -1).astype(jnp.int32)
+        for w, b in models
+    ]
+    return eval_dag_plan(plan, verdicts)

@@ -6,3 +6,4 @@ from repro.serve.steps import (
 )
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.packet_engine import PacketServeEngine, ServeStats
+from repro.serve.sharded import ShardedFlowState, ShardedPacketServeEngine

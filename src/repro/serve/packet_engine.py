@@ -9,18 +9,32 @@ core.chaining), a single ``Pipeline``, or a stateful
 is compiled exactly once; ragged tails are zero-padded and the padding
 verdicts sliced off, so steady-state serving never re-traces.
 
+Overlap pipelining (docs/pipeline_ir.md#serving-performance-contract):
+the engine keeps up to ``depth`` batches in flight — batch N+1 is staged
+(copied into a reusable ring of pinned staging buffers) and dispatched
+while batch N still computes; results are materialized lazily, only when
+``flush()``/stream consumption actually needs them.  Compiled pipelines
+expose ``dispatch`` (launch, no device→host copy) and JAX's async
+dispatch does the overlap; steady-state serving performs zero per-batch
+staging allocations.  ``ServeStats`` separates host dispatch time
+(``dispatch_s``) from per-batch pipeline latency (dispatch → result
+ready) and accumulates ``wall_s`` as the *active serving span*, so pkt/s
+stays honest under overlap instead of crediting hidden device time.
+
 Stateful serving: a ``StatefulPipeline`` threads a per-flow register file
 (``FlowState``) through every batch.  The engine owns the state between
 batches, feeds padded rows with ``valid=0`` so they NEVER touch the
-register table, and applies batches strictly in arrival order — submit/
-flush interleavings with ragged chunk sizes cannot reorder updates
-(property-tested in tests/test_packet_engine.py).
+register table, and applies batches strictly in arrival order — the
+in-flight chain is sequentialized by the state dependency itself (each
+dispatch consumes the previous dispatch's device-resident state), so
+overlap never reorders updates (property-tested in
+tests/test_packet_engine.py under depth>1).
 
 Typical use::
 
     dag = chaining.compile_dag(ad > tc, result)
     eng = PacketServeEngine(dag, feature_dim=7, max_batch=512,
-                            backend="pallas")
+                            backend="pallas", depth=2)
     eng.submit(packets)           # any [n, F] chunk, any n
     verdicts = eng.flush()        # all pending verdicts, in arrival order
     print(eng.stats())            # includes which backend served
@@ -28,6 +42,8 @@ Typical use::
     sp = StatefulPipeline(stages, backend="pallas")
     eng = PacketServeEngine(sp, feature_dim=4, max_batch=512)
     # per-flow registers update per packet; eng.state is the live table
+
+Multi-device serving is ``repro.serve.sharded.ShardedPacketServeEngine``.
 """
 
 from __future__ import annotations
@@ -35,7 +51,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Callable, Iterable, Iterator
+from typing import Any, Callable, Iterable, Iterator
 
 import numpy as np
 
@@ -45,11 +61,21 @@ class ServeStats:
     packets: int = 0
     batches: int = 0
     pad_packets: int = 0           # zero-rows added to fill the last batch
+    # active serving span: dispatch of a batch -> its result materialized,
+    # with overlapping in-flight windows merged (never double-counted), so
+    # packets / wall_s is honest throughput under depth>1 overlap
     wall_s: float = 0.0
+    # host time spent staging + launching batches (the synchronous part of
+    # serving); under overlap this is much smaller than wall_s
+    dispatch_s: float = 0.0
     backend: str = "interpret"     # engine the compiled pipeline runs on
+    depth: int = 1                 # dispatch-pipeline depth (in-flight cap)
+    shards: int = 1                # devices serving (ShardedPacketServeEngine)
     # trailing window of per-batch latencies: bounded so a long-running
     # engine keeps O(1) memory and stats() cost (percentiles are over the
-    # most recent LAT_WINDOW batches)
+    # most recent LAT_WINDOW batches).  A batch's latency is dispatch ->
+    # result ready: under overlap it includes in-flight queueing, which is
+    # what a packet actually waits.
     batch_lat_s: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=ServeStats.LAT_WINDOW)
     )
@@ -77,6 +103,10 @@ class ServeStats:
         return self._lat_ms(95)
 
     @property
+    def lat_p99_ms(self) -> float:
+        return self._lat_ms(99)
+
+    @property
     def backend_batches(self) -> dict:
         """Batch count per serving engine.  One engine serves the whole
         compiled executable, so this is derived; a DAG mixing engines
@@ -90,12 +120,27 @@ class ServeStats:
             "batches": self.batches,
             "pad_packets": self.pad_packets,
             "wall_s": round(self.wall_s, 6),
+            "dispatch_s": round(self.dispatch_s, 6),
             "pkt_per_s": round(self.pkt_per_s, 1),
             "lat_p50_ms": round(self.lat_p50_ms, 4),
             "lat_p95_ms": round(self.lat_p95_ms, 4),
+            "lat_p99_ms": round(self.lat_p99_ms, 4),
             "backend": self.backend,
             "backend_batches": self.backend_batches,
+            "depth": self.depth,
+            "shards": self.shards,
         }
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unfetched batch."""
+
+    n: int                         # real (non-padding) rows
+    out: Any                       # device array (lazy) or numpy (ready)
+    t0: float                      # dispatch start
+    ready: float | None            # completion time if known at dispatch
+    perm: Any = None               # sharded stateful: per-shard row indices
 
 
 class _CompiledPipeline:
@@ -105,8 +150,12 @@ class _CompiledPipeline:
         self._compiled = compiled
         self.backend = compiled.backend
 
+    def dispatch(self, X: np.ndarray):
+        """Launch without forcing the device->host copy."""
+        return self._compiled(X)
+
     def __call__(self, X: np.ndarray) -> np.ndarray:
-        return np.asarray(self._compiled(X), np.int32)
+        return np.asarray(self.dispatch(X), np.int32)
 
 
 def _rebind_backend(pipeline, backend: str):
@@ -139,51 +188,87 @@ class PacketServeEngine:
     * ``backend=None`` (default) serves the callable as given;
     * ``backend="pallas"`` lowers kernel-eligible pipelines onto fused
       Pallas kernel launches (docs/pipeline_ir.md#pallas-lowering-contract)
-      and **falls back to the interpreter** when Pallas is unavailable,
-      the stage sequence is outside the kernel envelope, or the callable
-      carries no stage list to recompile;
+      — a whole kernel-eligible DAG onto ONE megakernel launch
+      (``"pallas-fused-dag"``) — and **falls back to the interpreter**
+      when Pallas is unavailable, the stage sequence is outside the kernel
+      envelope, or the callable carries no stage list to recompile;
     * ``backend="interpret"`` forces the jitted stage-walk engine.
+
+    ``depth`` is the dispatch-pipeline depth: up to ``depth`` batches stay
+    in flight before the engine blocks on the oldest result (``depth=1``
+    reproduces strictly synchronous serving; the default ``2`` is the
+    double-buffered pipeline — stage/dispatch batch N+1 while N computes).
+    Results are only materialized on ``flush()``/stream consumption, and
+    verdicts always come back in arrival order regardless of depth.
 
     Stateful pipelines (``flowstate.StatefulPipeline``, or anything with
     an ``init_state()``/``(state, X, valid)`` shape) thread a per-flow
     register file through the engine: pass ``state=`` to resume an
     existing table or leave it None to start empty.  Padded rows carry
     ``valid=0`` and never touch the registers; batches apply strictly in
-    arrival order.
+    arrival order — the state dependency itself sequentializes the
+    in-flight chain, so overlap is safe.
 
     ``stats()["backend"]`` / ``["backend_batches"]`` report the engine that
     actually served each batch after any fallback; ``lat_p50_ms`` /
-    ``lat_p95_ms`` are per-batch pipeline latency percentiles."""
+    ``lat_p95_ms`` / ``lat_p99_ms`` are per-batch pipeline latency
+    percentiles and ``dispatch_s`` the host-side dispatch time."""
 
     def __init__(self, pipeline: Callable[[np.ndarray], np.ndarray], *,
                  feature_dim: int, max_batch: int = 256,
-                 backend: str | None = None, state=None):
+                 backend: str | None = None, state=None, depth: int = 2):
+        from repro.core import stageir
+
         if backend is not None:
             pipeline = _rebind_backend(pipeline, backend)
         self.pipeline = pipeline
         # engine provenance: "interpret" unless the callable says otherwise
         self.backend = getattr(pipeline, "backend", "interpret")
-        if self.backend not in ("interpret", "pallas", "mixed"):
+        if self.backend not in stageir.REPORT_BACKENDS:
             self.backend = "interpret"   # e.g. Pipeline.backend == "taurus"
         if hasattr(pipeline, "compiled_backend"):   # codegen.Pipeline
             self.backend = pipeline.compiled_backend
         self.feature_dim = int(feature_dim)
         self.max_batch = int(max_batch)
+        self.depth = max(1, int(depth))
         self._stateful = state is not None or hasattr(pipeline, "init_state")
         if self._stateful and state is None:
             state = pipeline.init_state()
         self.state = state
+        # ``dispatch`` launches without the device->host copy; callables
+        # without one are served as-is (their results are simply ready at
+        # dispatch time and the overlap is a no-op)
+        self._dispatch_fn = getattr(pipeline, "dispatch", pipeline)
         self._queue: collections.deque[np.ndarray] = collections.deque()
         self._pending = 0
-        self.stats_ = ServeStats(backend=self.backend)
-        # warm the executable so steady-state timing excludes compilation
+        self._inflight: collections.deque[_InFlight] = collections.deque()
+        # reusable staging ring: depth+1 pinned buffers so the buffer being
+        # filled is never one an in-flight batch may still alias
+        self._staging = [
+            np.zeros((self.max_batch, self.feature_dim), np.float32)
+            for _ in range(self.depth + 1)
+        ]
+        self._valid_staging = [
+            np.zeros((self.max_batch,), np.int32)
+            for _ in range(self.depth + 1)
+        ]
+        self._staging_i = 0
+        self._mark: float | None = None   # active-span bookkeeping
+        self.stats_ = ServeStats(backend=self.backend, depth=self.depth)
+        self._warm_up()
+
+    def _warm_up(self) -> None:
+        """Compile the executable so steady-state timing excludes it."""
         zeros = np.zeros((self.max_batch, self.feature_dim), np.float32)
         if self._stateful:
-            # all-invalid warm-up batch: compiles without touching registers
-            self.pipeline(self.state, zeros,
-                          np.zeros(self.max_batch, np.int32))
+            # all-invalid warm-up batch: compiles without touching
+            # registers; adopt the returned state (identical values) so
+            # donated input buffers are never reused
+            out = self.pipeline(self.state, zeros,
+                                np.zeros(self.max_batch, np.int32))
+            self.state = out[0]
         else:
-            self.pipeline(zeros)
+            np.asarray(self.pipeline(zeros))
 
     # ------------------------------------------------------------ intake
 
@@ -206,10 +291,19 @@ class PacketServeEngine:
     def pending(self) -> int:
         return self._pending
 
+    @property
+    def in_flight(self) -> int:
+        """Batches dispatched but not yet materialized."""
+        return len(self._inflight)
+
     # ----------------------------------------------------------- serving
 
     def _take(self, n: int) -> np.ndarray:
-        """Pop exactly n rows off the queue head (views where possible)."""
+        """Pop exactly n rows off the queue head (views where possible).
+
+        When a split leaves only a small residual of a large parent chunk
+        on the queue, the residual is copied: a view would retain the
+        whole parent buffer for as long as the rows sit queued."""
         taken, got = [], 0
         while got < n:
             head = self._queue[0]
@@ -219,42 +313,90 @@ class PacketServeEngine:
                 got += len(head)
             else:
                 taken.append(head[:need])
-                self._queue[0] = head[need:]   # view; no copy of the tail
+                rest = head[need:]
+                if len(rest) * 4 < len(head):   # retained <25% of parent
+                    rest = rest.copy()
+                self._queue[0] = rest
                 got = n
         self._pending -= n
         return taken[0] if len(taken) == 1 else np.concatenate(taken, 0)
 
-    def _run_batch(self, batch: np.ndarray) -> np.ndarray:
-        n = len(batch)
+    def _requeue_front(self, rows: np.ndarray) -> None:
+        """Push rows back to the queue head (sharded overflow path)."""
+        self._queue.appendleft(rows)
+        self._pending += len(rows)
+
+    def _next_staging(self) -> tuple[np.ndarray, np.ndarray]:
+        buf = self._staging[self._staging_i]
+        valid = self._valid_staging[self._staging_i]
+        self._staging_i = (self._staging_i + 1) % len(self._staging)
+        return buf, valid
+
+    def _dispatch_batch(self, rows: np.ndarray) -> int:
+        """Stage + launch one batch; returns rows actually dispatched."""
+        n = len(rows)
         pad = self.max_batch - n
+        buf, valid = self._next_staging()
+        buf[:n] = rows
         if pad:
-            batch = np.concatenate(
-                [batch, np.zeros((pad, self.feature_dim), np.float32)]
-            )
+            buf[n:] = 0.0
             self.stats_.pad_packets += pad
         t0 = time.perf_counter()
+        if not self._inflight:
+            self._mark = t0            # new active-serving span
         if self._stateful:
-            valid = np.zeros(self.max_batch, np.int32)
             valid[:n] = 1
-            self.state, verdicts = self.pipeline(self.state, batch, valid)
-            verdicts = np.asarray(verdicts)
+            if pad:
+                valid[n:] = 0
+            self.state, out = self._dispatch_fn(self.state, buf, valid)
         else:
-            verdicts = np.asarray(self.pipeline(batch))
-        dt = time.perf_counter() - t0
-        self.stats_.wall_s += dt
-        self.stats_.batch_lat_s.append(dt)
+            out = self._dispatch_fn(buf)
+        t1 = time.perf_counter()
+        # a numpy result was computed synchronously inside the dispatch
+        # call; anything else is a lazy device handle fetched later
+        ready = t1 if isinstance(out, np.ndarray) else None
+        self.stats_.dispatch_s += t1 - t0
         self.stats_.batches += 1
         self.stats_.packets += n
-        return verdicts[:n]
+        self._inflight.append(_InFlight(n, out, t0, ready))
+        return n
+
+    def _fetch_one(self) -> np.ndarray:
+        """Materialize the oldest in-flight batch (FIFO: arrival order)."""
+        f = self._inflight.popleft()
+        v = np.asarray(f.out)          # blocks until the result exists
+        end = f.ready if f.ready is not None else time.perf_counter()
+        self.stats_.batch_lat_s.append(end - f.t0)
+        if self._mark is not None:
+            self.stats_.wall_s += max(0.0, end - self._mark)
+            self._mark = max(self._mark, end) if self._inflight else None
+        if f.perm is not None:
+            return self._unshard(v, f)
+        out = v[:f.n]
+        # a plain-numpy pipeline may return a VIEW of its input — i.e. of a
+        # reusable staging buffer the next dispatch will overwrite; copy so
+        # returned verdicts can never be corrupted in place (device-array
+        # results are fresh buffers and never alias the ring)
+        if isinstance(f.out, np.ndarray) and any(
+            np.shares_memory(out, buf) for buf in self._staging
+        ):
+            out = out.copy()
+        return out
+
+    def _unshard(self, v: np.ndarray, f: _InFlight) -> np.ndarray:
+        raise NotImplementedError      # ShardedPacketServeEngine only
 
     def flush(self) -> np.ndarray:
         """Serve everything pending; verdicts come back in arrival order."""
         outs = []
         while self._pending:
-            outs.append(
-                self._run_batch(self._take(min(self.max_batch,
-                                               self._pending)))
+            while len(self._inflight) >= self.depth:
+                outs.append(self._fetch_one())
+            self._dispatch_batch(
+                self._take(min(self.max_batch, self._pending))
             )
+        while self._inflight:
+            outs.append(self._fetch_one())
         if not outs:
             return np.zeros((0,), np.int32)
         return outs[0] if len(outs) == 1 else np.concatenate(outs, 0)
@@ -262,13 +404,19 @@ class PacketServeEngine:
     def serve_stream(self, chunks: Iterable[np.ndarray]
                      ) -> Iterator[np.ndarray]:
         """Pull-through mode: yield verdicts per full micro-batch as the
-        input stream arrives (tail flushed at end)."""
+        input stream arrives (tail flushed at end).  With ``depth>1`` the
+        next micro-batch dispatches before the previous result is
+        consumed, so the device never sits idle between yields."""
         for chunk in chunks:
             self.submit(chunk)
             while self._pending >= self.max_batch:
-                yield self._run_batch(self._take(self.max_batch))
-        if self._pending:
-            yield self.flush()
+                while len(self._inflight) >= self.depth:
+                    yield self._fetch_one()
+                self._dispatch_batch(self._take(self.max_batch))
+        if self._pending or self._inflight:
+            tail = self.flush()
+            if len(tail):
+                yield tail
 
     def stats(self) -> dict:
         return self.stats_.as_dict()

@@ -1,0 +1,279 @@
+"""Multi-device packet serving: shard each micro-batch across devices.
+
+``ShardedPacketServeEngine`` extends ``PacketServeEngine`` with a
+``jax.shard_map`` serving step over a 1-D ``("data",)`` mesh:
+
+* **Stateless pipelines** split every fixed-shape micro-batch evenly —
+  device *d* serves the contiguous row slice ``[d*b, (d+1)*b)`` — so
+  verdict order is trivially arrival order and the per-device program is
+  exactly the single-device executable (Pallas kernels included).
+
+* **Stateful pipelines** keep one *private register table per device* and
+  route packets by flow key (key-partitioned hashing: a second
+  multiplicative mix of the FNV flow key, independent of the in-table
+  slot hash) so every flow always lands on the same device's table.
+  Rows are routed host-side in arrival order; a device whose sub-batch
+  fills forces the overflow rows back onto the queue head, so per-flow
+  update order is preserved exactly.  Verdicts are scattered back to
+  arrival positions before they leave the engine.
+
+* On a **one-device host** the engine degrades to the plain
+  ``PacketServeEngine`` serving path (no mesh, no routing) — same
+  results, same stats vocabulary (``stats()["shards"] == 1``).
+
+The dispatch-pipeline ``depth`` machinery (overlap, lazy fetch, staging
+ring) is inherited unchanged; the sharded step is just a different
+launch.  See docs/pipeline_ir.md#serving-performance-contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.serve.packet_engine import (
+    PacketServeEngine,
+    _CompiledPipeline,
+    _InFlight,
+    _rebind_backend,
+)
+
+# key-partitioned hashing: mix the (already FNV-folded) flow key once more
+# with a Knuth multiplicative constant and take high bits, so the shard
+# index stays independent of the table's slot index (hash & (S-1)) and a
+# skewed low-bit key pattern cannot pile flows onto one device
+_SHARD_MIX = np.uint32(0x9E3779B1)
+
+
+def shard_of_key(keys: np.ndarray, n_shards: int) -> np.ndarray:
+    """[B] int32 flow keys -> [B] shard ids in [0, n_shards)."""
+    with np.errstate(over="ignore"):
+        mixed = keys.astype(np.uint32) * _SHARD_MIX
+    return ((mixed >> np.uint32(16)) % np.uint32(n_shards)).astype(np.int64)
+
+
+def route_prefix(shard_ids: np.ndarray, n_shards: int, capacity: int
+                 ) -> tuple[int, list]:
+    """Largest arrival-order prefix that fits per-shard ``capacity``.
+
+    Returns ``(m, perm)``: the first ``m`` rows fit, and ``perm[s]`` lists
+    the original row indices (ascending = arrival order) that shard ``s``
+    serves.  Row ``m`` is the first whose shard is already full — rows
+    behind it must wait so per-flow order never inverts."""
+    ranks = np.empty(len(shard_ids), np.int64)
+    for s in range(n_shards):
+        mask = shard_ids == s
+        ranks[mask] = np.arange(int(mask.sum()))
+    over = ranks >= capacity
+    m = int(np.argmax(over)) if over.any() else len(shard_ids)
+    ids = shard_ids[:m]
+    perm = [np.flatnonzero(ids == s) for s in range(n_shards)]
+    return m, perm
+
+
+@dataclasses.dataclass
+class ShardedFlowState:
+    """Per-device register tables, stacked on a leading shard axis."""
+
+    spec: object
+    keys: object                   # [D, S] int32
+    regs: object                   # [D, S, W] f32
+
+    @property
+    def n_shards(self) -> int:
+        return int(np.shape(self.keys)[0])
+
+    @property
+    def occupied(self) -> int:
+        return int(np.sum(np.asarray(self.keys) >= 0))
+
+
+class ShardedPacketServeEngine(PacketServeEngine):
+    """``PacketServeEngine`` that serves each micro-batch across devices.
+
+    ``devices`` defaults to ``jax.devices()``; ``max_batch`` is rounded up
+    to a multiple of the device count (the per-device sub-batch is
+    ``max_batch // n_shards``).  ``min_shards`` is the degradation
+    threshold: with fewer devices the engine serves exactly like the base
+    class (tests pass ``min_shards=1`` to exercise the sharded step on a
+    one-device host).  Pipelines with no traceable program (bare numpy
+    callables) also degrade — shard_map needs something to trace.
+
+    Stateful serving keeps ``n_shards`` private register tables
+    (``ShardedFlowState``); feasibility charges one table per device.
+    Cross-flow interleaving ACROSS devices is not defined (each table only
+    sees its own flows), but per-flow update order is exactly arrival
+    order — the single-table ordering guarantee, per flow."""
+
+    def __init__(self, pipeline, *, feature_dim: int, max_batch: int = 256,
+                 backend: str | None = None, state=None, depth: int = 2,
+                 devices=None, min_shards: int = 2):
+        import jax
+
+        if backend is not None:
+            pipeline = _rebind_backend(pipeline, backend)
+        devices = list(devices) if devices is not None else jax.devices()
+        self.devices = devices
+        n = len(devices)
+        traceable = _traceable_fn(pipeline)
+        self.sharded = n >= max(1, int(min_shards)) and traceable is not None
+        if not self.sharded:
+            super().__init__(pipeline, feature_dim=feature_dim,
+                             max_batch=max_batch, state=state, depth=depth)
+            return
+
+        self.n_shards = n
+        self._sub_batch = -(-int(max_batch) // n)       # ceil
+        stateful = hasattr(pipeline, "init_state")
+        self._mesh, self._sharded_fn = _build_sharded_step(
+            traceable, devices, stateful=stateful
+        )
+        if stateful:
+            from repro.core import stageir
+
+            self._flowkey = next(s for s in pipeline.stages
+                                 if isinstance(s, stageir.FlowKey))
+            if state is None:
+                state = _init_sharded_state(pipeline, n)
+        super().__init__(pipeline, feature_dim=feature_dim,
+                         max_batch=self._sub_batch * n, state=state,
+                         depth=depth)
+        if not self._stateful:
+            self._dispatch_fn = self._sharded_fn
+        self.stats_.shards = n
+
+    # --------------------------------------------------------- overrides
+
+    def _warm_up(self) -> None:
+        if not self.sharded:
+            return super()._warm_up()
+        zeros = np.zeros((self.max_batch, self.feature_dim), np.float32)
+        if self._stateful:
+            state, out = self._launch_stateful(
+                zeros, np.zeros(self.max_batch, np.int32))
+            self.state = state
+            np.asarray(out)
+        else:
+            np.asarray(self._sharded_fn(zeros))
+
+    def _dispatch_batch(self, rows: np.ndarray) -> int:
+        if not self.sharded or not self._stateful:
+            return super()._dispatch_batch(rows)
+        return self._dispatch_routed(rows)
+
+    def _dispatch_routed(self, rows: np.ndarray) -> int:
+        """Stateful sharding: route rows to their flow's device table."""
+        keys = self._flowkey.apply_keys_np(rows)
+        shard_ids = shard_of_key(keys, self.n_shards)
+        m, perm = route_prefix(shard_ids, self.n_shards, self._sub_batch)
+        if m < len(rows):
+            self._requeue_front(rows[m:].copy())
+        rows = rows[:m]
+
+        b = self._sub_batch
+        buf, valid = self._next_staging()
+        x = buf.reshape(self.n_shards, b, self.feature_dim)
+        v = valid.reshape(self.n_shards, b)
+        x[:] = 0.0
+        v[:] = 0
+        for s, idx in enumerate(perm):
+            x[s, :len(idx)] = rows[idx]
+            v[s, :len(idx)] = 1
+        self.stats_.pad_packets += self.max_batch - m
+
+        t0 = time.perf_counter()
+        if not self._inflight:
+            self._mark = t0
+        self.state, out = self._launch_stateful(buf, valid)
+        t1 = time.perf_counter()
+        self.stats_.dispatch_s += t1 - t0
+        self.stats_.batches += 1
+        self.stats_.packets += m
+        self._inflight.append(_InFlight(m, out, t0, None, perm=perm))
+        return m
+
+    def _launch_stateful(self, buf: np.ndarray, valid: np.ndarray):
+        """One sharded stateful step over the stacked register tables."""
+        import jax.numpy as jnp
+
+        b = self._sub_batch
+        x = jnp.asarray(buf, jnp.float32).reshape(
+            self.n_shards, b, self.feature_dim)
+        v = jnp.asarray(valid, jnp.int32).reshape(self.n_shards, b)
+        keys, regs, verdicts = self._sharded_fn(
+            self.state.keys, self.state.regs, x, v)
+        return ShardedFlowState(self.state.spec, keys, regs), verdicts
+
+    def _unshard(self, v: np.ndarray, f: _InFlight) -> np.ndarray:
+        """Scatter per-shard outputs (verdicts, or feature rows when the
+        classifier suffix emits vectors) back to arrival positions."""
+        out = np.empty((f.n,) + v.shape[2:], v.dtype)
+        for s, idx in enumerate(f.perm):
+            out[idx] = v[s, :len(idx)]
+        return out
+
+
+def _traceable_fn(pipeline):
+    """The jnp program shard_map wraps, or None (degrade to base engine)."""
+    from repro.core import stageir
+
+    if hasattr(pipeline, "step_fn"):                 # StatefulPipeline
+        return pipeline.step_fn
+    if hasattr(pipeline, "fn"):                      # chaining.CompiledDag
+        return pipeline.fn
+    if isinstance(pipeline, _CompiledPipeline):
+        return pipeline._compiled.fn
+    if getattr(pipeline, "_compiled", None) is not None:  # codegen.Pipeline
+        return pipeline._compiled.fn
+    if hasattr(pipeline, "stages"):                  # Pipeline w/ custom run
+        return stageir.compile_stages(pipeline.stages).fn
+    return None
+
+
+def _build_sharded_step(traceable, devices, *, stateful: bool):
+    """jit(shard_map(...)) over a 1-D ("data",) mesh of ``devices``."""
+    import jax
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro import _compat  # noqa: F401  (jax.shard_map polyfill)
+
+    mesh = Mesh(np.array(devices), ("data",))
+
+    if stateful:
+        def step(keys, regs, x, valid):
+            # each program sees its shard with the leading axis kept: [1, …]
+            k, r, v = traceable(keys[0], regs[0], x[0], valid[0])
+            return k[None], r[None], v[None]
+
+        fn = jax.shard_map(
+            step, mesh=mesh,
+            in_specs=(P("data"), P("data"), P("data"), P("data")),
+            out_specs=(P("data"), P("data"), P("data")),
+            check_rep=False,
+        )
+        return mesh, jax.jit(fn)
+
+    fn = jax.shard_map(lambda x: traceable(x), mesh=mesh,
+                       in_specs=(P("data"),), out_specs=P("data"),
+                       check_rep=False)
+    jitted = jax.jit(fn)
+
+    def dispatch(buf):
+        import jax.numpy as jnp
+
+        return jitted(jnp.asarray(buf, jnp.float32))
+
+    return mesh, dispatch
+
+
+def _init_sharded_state(pipeline, n_shards: int) -> ShardedFlowState:
+    import jax.numpy as jnp
+
+    spec = pipeline.spec
+    return ShardedFlowState(
+        spec,
+        jnp.full((n_shards, spec.n_slots), -1, jnp.int32),
+        jnp.zeros((n_shards, spec.n_slots, spec.width), jnp.float32),
+    )

@@ -36,7 +36,8 @@ def _tagged(n, start=0):
 @HSET
 def test_submit_flush_interleavings_preserve_arrival_order(data):
     eng = PacketServeEngine(_tag_pipeline, feature_dim=2,
-                            max_batch=data.draw(st.integers(1, 13)))
+                            max_batch=data.draw(st.integers(1, 13)),
+                            depth=data.draw(st.integers(1, 4)))
     total, got = 0, []
     for _ in range(data.draw(st.integers(1, 12))):
         if data.draw(st.booleans()) or total == 0:
@@ -49,6 +50,31 @@ def test_submit_flush_interleavings_preserve_arrival_order(data):
     verdicts = np.concatenate([g for g in got if len(g)])
     np.testing.assert_array_equal(verdicts, np.arange(total))
     assert eng.pending == 0
+    assert eng.in_flight == 0
+
+
+@given(data=st.data())
+@HSET
+def test_async_depth_preserves_order_on_jitted_pipeline(data):
+    """depth>1 keeps device-array results in flight (lazy fetch); order
+    must survive arbitrary submit/flush interleavings on a REAL jitted
+    pipeline, where outputs are async device handles, not numpy."""
+    import jax
+
+    jitted = jax.jit(lambda x: x[:, 0].astype("int32"))
+    eng = PacketServeEngine(jitted, feature_dim=2,
+                            max_batch=data.draw(st.integers(2, 17)),
+                            depth=data.draw(st.integers(2, 4)))
+    total, got = 0, []
+    for _ in range(data.draw(st.integers(1, 8))):
+        n = data.draw(st.integers(1, 53))
+        eng.submit(_tagged(n, start=total))
+        total += n
+        if data.draw(st.booleans()):
+            got.append(eng.flush())
+    got.append(eng.flush())
+    verdicts = np.concatenate([g for g in got if len(g)])
+    np.testing.assert_array_equal(verdicts, np.arange(total))
 
 
 @given(data=st.data())
@@ -71,6 +97,7 @@ def test_serve_stream_ragged_chunks_preserve_order(data):
 def test_latency_percentiles_in_stats():
     stats = ServeStats()
     assert stats.lat_p50_ms == 0.0 and stats.lat_p95_ms == 0.0
+    assert stats.lat_p99_ms == 0.0
     eng = PacketServeEngine(_tag_pipeline, feature_dim=2, max_batch=8)
     assert eng.stats()["lat_p50_ms"] == 0.0    # warm-up batch not counted
     for _ in range(5):
@@ -79,8 +106,47 @@ def test_latency_percentiles_in_stats():
     s = eng.stats()
     assert s["batches"] == 10
     assert len(eng.stats_.batch_lat_s) == 10
-    assert 0.0 < s["lat_p50_ms"] <= s["lat_p95_ms"]
+    assert 0.0 < s["lat_p50_ms"] <= s["lat_p95_ms"] <= s["lat_p99_ms"]
     assert s["lat_p95_ms"] <= s["wall_s"] * 1e3 + 1e-9
+    assert s["dispatch_s"] <= s["wall_s"] + 1e-9
+    assert s["depth"] == eng.depth and s["shards"] == 1
+
+
+def test_view_returning_pipeline_verdicts_survive_buffer_reuse():
+    """A plain-numpy pipeline returning a VIEW of its input must not have
+    its already-returned verdicts corrupted when the staging ring is
+    reused by later batches."""
+    eng = PacketServeEngine(lambda x: x[:, 0], feature_dim=2, max_batch=8,
+                            depth=2)
+    eng.submit(_tagged(40))              # 5 batches > ring size (depth+1)
+    first = eng.flush()
+    np.testing.assert_array_equal(first, np.arange(40))
+    eng.submit(np.full((16, 2), 777.0, np.float32))
+    eng.flush()
+    # the earlier verdicts must be untouched by the ring reuse
+    np.testing.assert_array_equal(first, np.arange(40))
+
+
+def test_requested_pallas_unavailable_reports_interpreter(monkeypatch):
+    """backend="pallas" with no Pallas toolchain must SERVE (interpreter)
+    and REPORT the interpreter — never the engine that was requested."""
+    from repro.core import codegen, feasibility as feas, mlalgos
+    from repro.data import netdata
+
+    monkeypatch.setattr(pallas_backend, "pallas_available", lambda: False)
+    d = netdata.make_ad_dataset(features=7, n_train=256, n_test=128)
+    rep = feas.FeasibilityReport(True, [], {"cu": 1}, 1.0, 1e9)
+    pipe = codegen.taurus_codegen(
+        "ad", mlalgos.train_dnn(d, hidden=[8], epochs=1, seed=0), rep
+    )
+    eng = PacketServeEngine(pipe, feature_dim=7, max_batch=32,
+                            backend="pallas")
+    eng.submit(d.test_x[:50])
+    ref = PacketServeEngine(pipe, feature_dim=7, max_batch=32)
+    ref.submit(d.test_x[:50])
+    np.testing.assert_array_equal(eng.flush(), ref.flush())
+    assert eng.stats()["backend"] == "interpret"
+    assert eng.stats()["backend_batches"] == {"interpret": 2}
 
 
 # ------------------------------------------------------- stateful serving
@@ -115,7 +181,8 @@ def test_stateful_ragged_interleavings_match_single_pass(data):
     ref_state, ref_feats = ref_pipe(ref_pipe.init_state(), X)
 
     eng = PacketServeEngine(_flow_pipeline(), feature_dim=2,
-                            max_batch=data.draw(st.integers(2, 19)))
+                            max_batch=data.draw(st.integers(2, 19)),
+                            depth=data.draw(st.integers(1, 4)))
     got, pos = [], 0
     while pos < len(X):
         n = min(data.draw(st.integers(1, 31)), len(X) - pos)

@@ -27,9 +27,11 @@ def pipes(ad_data):
     rep = feas.FeasibilityReport(True, [], {"cu": 1}, 1.0, 1e9)
     dnn = mlalgos.train_dnn(ad_data, hidden=[16, 8], epochs=2, seed=0)
     km = mlalgos.train_kmeans(ad_data, k=4, seed=0)
+    svm = mlalgos.train_svm(ad_data, epochs=3, seed=0)
     return {
         "dnn": codegen.taurus_codegen("dnn", dnn, rep),
         "km": codegen.taurus_codegen("km", km, rep),
+        "svm": codegen.taurus_codegen("svm", svm, rep),
     }
 
 
@@ -125,6 +127,121 @@ def test_compiled_dag_per_pipeline_backend(pipes, ad_data):
     np.testing.assert_array_equal(dag(X), dag_p(X))
     # with_backend round-trips (what the engine's backend= uses)
     assert dag_p.with_backend("interpret").backend == "interpret"
+
+
+# ------------------------------------------------------- fused-DAG kernel
+
+
+@needs_pallas
+def test_fused_dag_megakernel_bit_exact_and_reported(pipes, ad_data):
+    X = ad_data.test_x[:700]
+    for node in (_leaf("dnn") > _leaf("svm"),
+                 _leaf("dnn") | _leaf("svm"),
+                 _leaf("dnn") > (_leaf("svm") | _leaf("dnn"))):
+        dag = chaining.compile_dag(node, pipes, backend="pallas")
+        assert dag.backend == "pallas-fused-dag"
+        assert dag.fused_dag
+        assert set(dag.model_backends.values()) == {"pallas-fused-dag"}
+        ref = chaining.run_dag(node, pipes, X)
+        np.testing.assert_array_equal(ref, dag(X))
+
+
+@needs_pallas
+def test_fused_dag_combine_and_is_exact(pipes, ad_data):
+    node = _leaf("dnn") | _leaf("svm")
+    dag = chaining.compile_dag(node, pipes, backend="pallas", combine="and")
+    assert dag.backend == "pallas-fused-dag"
+    ref = chaining.run_dag(node, pipes, ad_data.test_x, combine="and")
+    np.testing.assert_array_equal(ref, dag(ad_data.test_x))
+
+
+@needs_pallas
+def test_fused_dag_honest_fallbacks(pipes, ad_data):
+    X = ad_data.test_x[:256]
+    # kmeans leaf -> megakernel ineligible -> per-model mix, still exact
+    node = _leaf("dnn") > _leaf("km")
+    dag = chaining.compile_dag(node, pipes, backend="pallas")
+    assert dag.backend == "mixed"
+    np.testing.assert_array_equal(chaining.run_dag(node, pipes, X), dag(X))
+    # "concat" has no verdict merge: megakernel refuses, per-model serves
+    par = _leaf("dnn") | _leaf("svm")
+    dag_c = chaining.compile_dag(par, pipes, backend="pallas",
+                                 combine="concat")
+    assert dag_c.backend == "pallas"
+    np.testing.assert_array_equal(
+        chaining.run_dag(par, pipes, X, combine="concat"), dag_c(X))
+    # fuse_dag=False is the per-model-launch baseline
+    base = chaining.compile_dag(_leaf("dnn") > _leaf("svm"), pipes,
+                                backend="pallas", fuse_dag=False)
+    assert base.backend == "pallas"
+    assert not base.fused_dag
+
+
+@needs_pallas
+def test_fused_dag_eligibility_probe(pipes):
+    assert pallas_backend.dag_eligible(_leaf("dnn") > _leaf("svm"), pipes)
+    assert not pallas_backend.dag_eligible(_leaf("dnn") > _leaf("km"), pipes)
+    # a bare model is not a DAG: the single-model lowering owns that case
+    assert not pallas_backend.dag_eligible(_leaf("dnn"), pipes)
+
+
+@needs_pallas
+def test_fused_dag_vmem_budget_gate(pipes, ad_data, monkeypatch):
+    """A DAG whose aggregate weight stacks cannot be VMEM-resident must
+    fall back to per-model launches, not claim a megakernel."""
+    from repro.kernels import fused_mlp as fm
+
+    node = _leaf("dnn") > _leaf("svm")
+    monkeypatch.setattr(fm, "DAG_VMEM_BUDGET", 1)   # nothing fits
+    assert not pallas_backend.dag_eligible(node, pipes)
+    dag = chaining.compile_dag(node, pipes, backend="pallas")
+    assert dag.backend == "pallas"                  # honest fallback
+    X = ad_data.test_x[:200]
+    np.testing.assert_array_equal(chaining.run_dag(node, pipes, X), dag(X))
+
+
+@needs_pallas
+def test_fused_dag_feature_select_fold(rng, ad_data):
+    """A sorted-unique FeatureSelect prelude folds into the first layer
+    bit-exactly; an unsorted one refuses (per-model fallback)."""
+    from repro.core.codegen import Pipeline
+    from repro.core.stageir import Dense, FeatureSelect, Reduce
+
+    X = ad_data.test_x[:300]
+    w_full = rng.normal(size=(7, 2)).astype(np.float32)
+    b = np.zeros(2, np.float32)
+    plain = [Dense(w_full, b), Reduce("argmax")]
+    idx = np.array([1, 3, 6], np.int32)
+    sel = [FeatureSelect(idx), Dense(w_full[idx], b), Reduce("argmax")]
+    unsorted = [FeatureSelect(np.array([3, 1, 6], np.int32)),
+                Dense(w_full[[3, 1, 6]], b), Reduce("argmax")]
+
+    def pseudo(stages):
+        class _P:                          # minimal Pipeline stand-in
+            def __init__(self, s):
+                self.stages = s
+
+            def __call__(self, x):
+                import jax.numpy as jnp
+
+                return np.asarray(
+                    stageir.apply_stages(self.stages,
+                                         jnp.asarray(x, jnp.float32))
+                )
+
+        return _P(stages)
+
+    pipes2 = {"a": pseudo(plain), "b": pseudo(sel), "c": pseudo(unsorted)}
+    dag = chaining.compile_dag(_leaf("a") > _leaf("b"), pipes2,
+                               backend="pallas")
+    assert dag.backend == "pallas-fused-dag"
+    ref = chaining.run_dag(_leaf("a") > _leaf("b"), pipes2, X)
+    np.testing.assert_array_equal(ref, dag(X))
+    dag_u = chaining.compile_dag(_leaf("a") > _leaf("c"), pipes2,
+                                 backend="pallas")
+    assert dag_u.backend == "pallas"       # fold refused, per-model serves
+    np.testing.assert_array_equal(
+        chaining.run_dag(_leaf("a") > _leaf("c"), pipes2, X), dag_u(X))
 
 
 # ----------------------------------------------------------- packet engine

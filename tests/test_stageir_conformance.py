@@ -245,6 +245,64 @@ def test_mat_backend_pallas_parity(data, algo):
         assert pipe.verify(X, max_mismatch_frac=0.03) <= 0.03
 
 
+# --------------------------------------------- fused-DAG megakernel parity
+#
+# Random Seq/Par DAGs over kernel-eligible dense models: the whole-DAG
+# megakernel (chaining.compile_dag(..., backend="pallas") ->
+# "pallas-fused-dag") must match the eager run_dag reference bit-for-bit
+# and agree with the per-model-launch baseline (fuse_dag=False) — Seq
+# gating, Par or/and merges and duplicate-model sharing included.
+
+
+def _dag_leaf(name):
+    from repro.core.alchemy import Model
+
+    return Model({"name": name, "data_loader": lambda: None,
+                  "algorithm": None})
+
+
+@needs_pallas
+@given(data=st.data())
+@HSET
+def test_fused_dag_megakernel_conformance(data):
+    from repro.core import chaining
+
+    ds = _AD
+    names = ["m0", "m1", "m2"]
+    pipes = {}
+    for i, name in enumerate(names):
+        algo = data.draw(st.sampled_from(["dnn", "svm", "logreg"]))
+        trained = _train(algo, data.draw, ds)
+        pipes[name] = codegen.taurus_codegen(name, trained, _report())
+    combine = data.draw(st.sampled_from(["or", "and"]))
+    shape = data.draw(st.sampled_from([
+        "a>b", "a|b", "a>(b|c)", "(a|b)>c", "a>b>c", "a>a",
+    ]))
+    a, b, c = (_dag_leaf(n) for n in names)
+    node = {
+        "a>b": lambda: a > b,
+        "a|b": lambda: a | b,
+        "a>(b|c)": lambda: a > (b | c),
+        "(a|b)>c": lambda: (a | b) > c,
+        "a>b>c": lambda: a > b > c,
+        "a>a": lambda: a > _dag_leaf("m0"),   # duplicate model shares weights
+    }[shape]()
+
+    X = ds.test_x
+    ref = chaining.run_dag(node, pipes, X, combine=combine)
+    fused = chaining.compile_dag(node, pipes, backend="pallas",
+                                 combine=combine)
+    assert fused.backend == "pallas-fused-dag", (
+        f"{shape} with dense leaves must fuse, got {fused.backend}"
+    )
+    np.testing.assert_array_equal(ref, fused(X))
+    per_model = chaining.compile_dag(node, pipes, backend="pallas",
+                                     combine=combine, fuse_dag=False)
+    np.testing.assert_array_equal(ref, per_model(X))
+    interp = chaining.compile_dag(node, pipes, combine=combine)
+    np.testing.assert_array_equal(ref, interp(X))
+
+
 # ------------------------------------------- flow-state kernel conformance
 #
 # Random register-file configurations x collision-heavy packet batches:
