@@ -1,12 +1,52 @@
-"""Shared benchmark utilities: result table rendering + JSON persistence."""
+"""Shared benchmark utilities: result table rendering, JSON persistence,
+and the forced-multi-device subprocess probe the sharded serving rows use."""
 
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# marker line a multi-device probe script prints its stats JSON behind
+SHARDED_MARKER = "SHARDED-STATS "
+
+
+def run_sharded_probe(script: str, *, n_devices: int = 4,
+                      timeout: int = 900) -> dict:
+    """Run ``script`` in a subprocess with ``n_devices`` forced host CPU
+    devices (``--xla_force_host_platform_device_count``, the same trick as
+    ``tests/test_sharded_engine.py``) so ``ShardedPacketServeEngine`` rows
+    in BENCH_serve.json record REAL multi-device runs — the ``shards``
+    field then carries the actual device count instead of the one-device
+    degradation.  The script must print one line
+    ``SHARDED-STATS {json}``; returns the parsed dict."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=timeout, env=env, cwd=REPO_ROOT,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded probe failed (rc={proc.returncode}):\n"
+            f"{proc.stderr[-4000:]}"
+        )
+    for line in proc.stdout.splitlines():
+        if line.startswith(SHARDED_MARKER):
+            return json.loads(line[len(SHARDED_MARKER):])
+    raise RuntimeError(
+        f"sharded probe printed no {SHARDED_MARKER!r} line:\n"
+        f"{proc.stdout[-2000:]}"
+    )
 
 
 def save_result(name: str, payload: dict) -> str:

@@ -39,6 +39,7 @@ from benchmarks.common import (
     bench_pps,
     bench_pps_best,
     render_table,
+    run_sharded_probe,
     save_result,
 )
 
@@ -104,6 +105,40 @@ def _serve_stat(pipeline, d, *, label: str, engine_cls=PacketServeEngine,
     }
 
 
+_SHARDED_DAG_SCRIPT = """
+import json
+import jax
+assert len(jax.devices()) == 4, jax.devices()
+from benchmarks.dag_throughput import _leaf, _serve_stat, build_chain
+from repro.core import chaining
+from repro.serve import ShardedPacketServeEngine
+d, node, pipes = build_chain()
+stat = _serve_stat(
+    chaining.compile_dag(_leaf("ad") > _leaf("tc"), pipes,
+                         backend="pallas"),
+    d, label="ad>tc", engine_cls=ShardedPacketServeEngine)
+assert stat["shards"] == 4, stat
+print("SHARDED-STATS " + json.dumps(stat))
+"""
+
+
+def _sharded_serve_stat(d, pipes) -> dict:
+    """The ShardedPacketServeEngine row, measured in a forced-4-device
+    subprocess so ``shards`` records the actual device count (an
+    in-process run on a one-device host degrades to the base engine and
+    would claim a sharded number it never earned).  Falls back to the
+    honest degraded in-process row if the probe cannot run."""
+    try:
+        return run_sharded_probe(_SHARDED_DAG_SCRIPT)
+    except Exception as e:  # noqa: BLE001 — probe is environment-bound
+        print(f"sharded probe unavailable ({e}); recording the "
+              f"in-process (degraded) row")
+        return _serve_stat(
+            chaining.compile_dag(_leaf("ad") > _leaf("tc"), pipes,
+                                 backend="pallas"),
+            d, label="ad>tc", engine_cls=ShardedPacketServeEngine)
+
+
 def bench_fused_dag(d, pipes) -> dict:
     """The megakernel tables: chained AD > TC, one launch vs per-model.
 
@@ -150,10 +185,6 @@ def bench_fused_dag(d, pipes) -> dict:
         rows, ["batch", "permodel_pps", "megakernel_pps", "speedup"]
     ))
     best_direct = max(r["speedup"] for r in rows)
-    assert best_direct >= 1.0, (
-        f"fused-DAG megakernel slower than per-model launches at every "
-        f"batch size ({best_direct}x)"
-    )
 
     # ---- serving path: overlap engine + megakernel vs PR-4 baseline
     stream = np.concatenate([d.test_x] * 4)
@@ -196,10 +227,6 @@ def bench_fused_dag(d, pipes) -> dict:
          "speedup"],
     ))
     best_serve = max(r["speedup"] for r in serve_rows)
-    assert best_serve >= FUSED_DAG_GATE, (
-        f"fused-DAG serving path only {best_serve}x the PR-4 "
-        f"per-model-launch baseline (gate {FUSED_DAG_GATE}x)"
-    )
     return {
         "schedule": fused.schedule,
         "rows": rows,
@@ -281,10 +308,6 @@ def main() -> dict:
         backend_rows, ["batch", "interp_pps", "pallas_pps", "speedup"]
     ))
     best = max(r["speedup"] for r in backend_rows)
-    assert best >= 1.0, (
-        f"Pallas backend slower than the interpreter on the fused-MLP "
-        f"pipeline ({best}x)"
-    )
 
     # serve-engine stats per engine x backend for BENCH_serve.json
     ad_tc = _leaf("ad") > _leaf("tc")
@@ -296,8 +319,7 @@ def main() -> dict:
                     label="ad>tc"),
         _serve_stat(chaining.compile_dag(ad_tc, pipes, backend="pallas"), d,
                     label="ad>tc"),
-        _serve_stat(chaining.compile_dag(ad_tc, pipes, backend="pallas"), d,
-                    label="ad>tc", engine_cls=ShardedPacketServeEngine),
+        _sharded_serve_stat(d, pipes),
     ]
     print("\n== serving-engine stats (BENCH_serve entries) ==")
     print(render_table(
@@ -320,6 +342,22 @@ def main() -> dict:
         "serve_stats": serve_stats,
     }
     save_result("dag_throughput", payload)
+
+    # timing gates LAST, after the artifact records the measured numbers
+    # — a flaky shared-runner measurement must fail the gate, not erase
+    # the trajectory entry
+    assert fused_dag["max_speedup_direct"] >= 1.0, (
+        f"fused-DAG megakernel slower than per-model launches at every "
+        f"batch size ({fused_dag['max_speedup_direct']}x)"
+    )
+    assert best >= 1.0, (
+        f"Pallas backend slower than the interpreter on the fused-MLP "
+        f"pipeline ({best}x)"
+    )
+    assert fused_dag["max_speedup"] >= FUSED_DAG_GATE, (
+        f"fused-DAG serving path only {fused_dag['max_speedup']}x the "
+        f"PR-4 per-model-launch baseline (gate {FUSED_DAG_GATE}x)"
+    )
     return payload
 
 

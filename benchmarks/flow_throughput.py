@@ -1,22 +1,29 @@
-"""Stateful flow pipeline: interpreter vs Pallas flow-update kernel pkt/s.
+"""Stateful flow pipeline: interpreter vs fused Pallas single launch pkt/s.
 
 Builds the streaming DDoS-burst pipeline (per-flow registers + DNN
 classifier, examples/stream_flows.py) and measures end-to-end serving
 throughput through ``PacketServeEngine`` on both execution engines, plus
 the reaction-time report (packets until each attack flow's first correct
-verdict) that the stateless serving path cannot produce at all.
+verdict) that the stateless serving path cannot produce at all.  A
+forced-4-device subprocess then serves the same stream through
+``ShardedPacketServeEngine`` so BENCH_serve.json carries a real
+``shards > 1`` stateful row.
 
 Asserts (the flow-state contract's performance gate):
 
-  * both engines produce bit-identical verdicts on the whole stream;
-  * the Pallas engine serves >= the interpreter in pkt/s (best over
-    batch sizes and repeats — the kernel's conflict-free round schedule
-    must at least match the reference's sequential walk).
+  * the Pallas pipeline lowers onto the single fused launch
+    (``backend == "pallas-fused-flow"``);
+  * both engines produce bit-identical verdicts AND bit-identical final
+    register state (keys + rows) on the whole stream;
+  * the fused engine serves >= FUSED_FLOW_GATE x the interpreter in
+    pkt/s (best over batch sizes and repeats).
 
   PYTHONPATH=src python -m benchmarks.flow_throughput
 """
 
 from __future__ import annotations
+
+import textwrap
 
 import numpy as np
 
@@ -25,12 +32,15 @@ from repro.data import traffic
 from repro.flowstate import StatefulPipeline
 from repro.serve.packet_engine import PacketServeEngine
 
-from benchmarks.common import render_table, save_result
+from benchmarks.common import render_table, run_sharded_probe, save_result
 
 N_PACKETS = 16_000
 N_SLOTS = 2048
 BATCHES = (256, 512)
 REPEATS = 3
+# the fused single-launch path must beat the interpreter by this factor
+# (best over batch sizes and repeats) — the PR-6 perf gate
+FUSED_FLOW_GATE = 3.0
 
 
 def build_pipeline():
@@ -46,29 +56,85 @@ def build_pipeline():
 
 
 def serve_once(pipe: StatefulPipeline, stream, max_batch: int):
-    """Fresh state, whole stream -> (verdicts, pipeline-only pkt/s, stats)."""
+    """Fresh state, whole stream -> (verdicts, pipeline-only pkt/s, stats,
+    final FlowState)."""
     eng = PacketServeEngine(pipe, feature_dim=len(traffic.COLUMNS),
                             max_batch=max_batch)
     got = [v for v in eng.serve_stream(stream.chunks(max_batch))]
-    return np.concatenate(got), eng.stats()["pkt_per_s"], eng.stats()
+    return np.concatenate(got), eng.stats()["pkt_per_s"], eng.stats(), \
+        eng.state
+
+
+# serves the SAME stream through ShardedPacketServeEngine under 4 forced
+# host devices (run_sharded_probe) — the shards>1 stateful trajectory row
+_SHARDED_SCRIPT = textwrap.dedent(f"""
+    import json
+    import jax
+    from benchmarks.flow_throughput import N_PACKETS, build_pipeline
+    from repro.data import traffic
+    from repro.flowstate import StatefulPipeline
+    from repro.serve import ShardedPacketServeEngine
+
+    assert len(jax.devices()) == 4, jax.devices()
+    pipe = StatefulPipeline(build_pipeline(), backend="pallas")
+    assert pipe.backend == "pallas-fused-flow", pipe.backend
+    stream = traffic.make_stream("ddos_burst", n_packets=N_PACKETS, seed=1)
+    eng = ShardedPacketServeEngine(pipe, feature_dim=len(traffic.COLUMNS),
+                                   max_batch=512)
+    assert eng.sharded and eng.n_shards == 4, (eng.sharded, eng.n_shards)
+    # one warm pass compiles the shard_map step; the SAME engine then
+    # serves the stream {REPEATS} more times so the recorded stats
+    # amortize the compile out of the steady-state rate
+    for _ in range(1 + {REPEATS}):
+        for _v in eng.serve_stream(stream.chunks(512)):
+            pass
+    print("SHARDED-STATS " + json.dumps(eng.stats()))
+""")
+
+
+def sharded_stateful_stat() -> dict:
+    """One BENCH_serve entry for the fused stateful pipeline served by
+    ``ShardedPacketServeEngine`` across 4 forced host devices; the
+    ``shards`` field records the actual device count of the run."""
+    s = run_sharded_probe(_SHARDED_SCRIPT)
+    assert s["shards"] > 1, f"sharded probe degraded to {s['shards']} shard"
+    return {
+        "engine": "ShardedPacketServeEngine",
+        "pipeline": "flow-ddos",
+        "backend": s["backend"],
+        "depth": s["depth"],
+        "shards": s["shards"],
+        "pkt_per_s": s["pkt_per_s"],
+        "lat_p50_ms": s["lat_p50_ms"],
+        "lat_p95_ms": s["lat_p95_ms"],
+        "lat_p99_ms": s["lat_p99_ms"],
+    }
 
 
 def main() -> dict:
     stages = build_pipeline()
     stream = traffic.make_stream("ddos_burst", n_packets=N_PACKETS, seed=1)
 
-    rows, verdicts, serve_stats = [], {}, []
+    pipes = {b: StatefulPipeline(stages, backend=b)
+             for b in ("interpret", "pallas")}
+    assert pipes["pallas"].backend == "pallas-fused-flow", (
+        f"the DDoS pipeline must lower onto the single fused launch, "
+        f"got {pipes['pallas'].backend!r}"
+    )
+
+    rows, verdicts, states, serve_stats = [], {}, {}, []
     for max_batch in BATCHES:
         best = {}
         for backend in ("interpret", "pallas"):
-            pipe = StatefulPipeline(stages, backend=backend)
+            pipe = pipes[backend]
             pps, best_stats = [], None
             for _ in range(REPEATS):
-                v, p, s = serve_once(pipe, stream, max_batch)
+                v, p, s, fs = serve_once(pipe, stream, max_batch)
                 if not pps or p > max(pps):
                     best_stats = s
                 pps.append(p)
             verdicts[backend] = v
+            states[backend] = fs
             best[backend] = max(pps)
             if max_batch == BATCHES[-1]:
                 serve_stats.append({
@@ -86,6 +152,19 @@ def main() -> dict:
             verdicts["interpret"], verdicts["pallas"],
             err_msg="engines diverged on the stateful pipeline",
         )
+        # final register state is part of the contract too: the fused
+        # launch must leave the SAME table (keys + rows, bit for bit) as
+        # the scan reference after the whole stream
+        np.testing.assert_array_equal(
+            np.asarray(states["interpret"].keys),
+            np.asarray(states["pallas"].keys),
+            err_msg="final register keys diverged",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(states["interpret"].regs),
+            np.asarray(states["pallas"].regs),
+            err_msg="final register rows diverged",
+        )
         rows.append({
             "batch": max_batch,
             "interp_pps": round(best["interpret"]),
@@ -97,10 +176,15 @@ def main() -> dict:
     print(render_table(rows, ["batch", "interp_pps", "pallas_pps",
                               "speedup"]))
     best_ratio = max(r["speedup"] for r in rows)
-    assert best_ratio >= 1.0, (
-        f"Pallas flow-update kernel slower than the interpreter on the "
-        f"stateful pipeline ({best_ratio}x)"
-    )
+
+    # multi-device stateful trajectory row (forced-4-device subprocess)
+    serve_stats.append(sharded_stateful_stat())
+    print("\n== serving-engine stats (BENCH_serve entries) ==")
+    print(render_table(
+        serve_stats,
+        ["engine", "pipeline", "backend", "depth", "shards", "pkt_per_s",
+         "lat_p50_ms", "lat_p95_ms", "lat_p99_ms"],
+    ))
 
     react = traffic.reaction_report(stream, verdicts["pallas"])
     print("\n== reaction time (DDoS-burst scenario) ==")
@@ -114,12 +198,23 @@ def main() -> dict:
         "n_packets": N_PACKETS,
         "n_slots": N_SLOTS,
         "verdicts_match": True,
+        "final_state_match": True,
+        "fused_backend": pipes["pallas"].backend,
         "rows": rows,
         "pallas_vs_interp_max_speedup": best_ratio,
+        "fused_flow_gate": FUSED_FLOW_GATE,
         "reaction": react,
         "serve_stats": serve_stats,
     }
     save_result("flow_throughput", payload)
+
+    # the timing gate LAST, after the artifact records the measured
+    # numbers — a flaky shared-runner measurement must fail the gate,
+    # not erase the trajectory entry
+    assert best_ratio >= FUSED_FLOW_GATE, (
+        f"fused stateful launch below the {FUSED_FLOW_GATE}x gate vs the "
+        f"interpreter ({best_ratio}x best over batches/repeats)"
+    )
     return payload
 
 

@@ -2,7 +2,9 @@
 backend): analytic packets/s vs depth on the v5e target + interpret-mode
 correctness spot-check on CPU + measured interpreter-vs-Pallas serving
 throughput for the same topologies (the two engines of
-``stageir.compile_stages``)."""
+``stageir.compile_stages``), plus the STATEFUL step — the fused
+single-launch flow pipeline vs the scan interpreter
+(docs/pipeline_ir.md#flow-state-contract)."""
 
 from __future__ import annotations
 
@@ -19,6 +21,55 @@ from benchmarks.common import Timer, bench_pps, render_table, save_result
 
 MEASURE_BATCH = 4096
 MEASURE_REPEATS = 10
+
+STATEFUL_BATCHES = (256, 512)
+STATEFUL_REPEATS = 20
+
+
+def stateful_rows(rng) -> list[dict]:
+    """interp-vs-pallas columns for the STATEFUL step: the canonical
+    flow-feature prefix + a random fused-MLP head, measured as raw
+    chained ``pipe(state, X)`` steps (state threads batch to batch, so
+    the sequential dependency is part of the measured rate)."""
+    from repro.data import traffic
+    from repro.flowstate import StatefulPipeline
+
+    (fk, ru, ws), names = traffic.flow_feature_stages(n_slots=2048)
+    ws_out = ws.n_out
+    W = [np.asarray(rng.normal(size=(ws_out, 16)) * 0.2, np.float32),
+         np.asarray(rng.normal(size=(16, 2)) * 0.2, np.float32)]
+    B = [np.zeros(16, np.float32), np.zeros(2, np.float32)]
+    stages = [fk, ru, ws, FusedMLP(W, B), Reduce("argmax")]
+    pipes = {b: StatefulPipeline(stages, backend=b)
+             for b in ("interpret", "pallas")}
+    assert pipes["pallas"].backend == "pallas-fused-flow", (
+        pipes["pallas"].backend
+    )
+
+    rows = []
+    for batch in STATEFUL_BATCHES:
+        stream = traffic.make_stream("ddos_burst", n_packets=batch * 8,
+                                     seed=2)
+        X = np.stack(list(stream.chunks(batch)))        # [8, batch, F]
+        rates = {}
+        for name, pipe in pipes.items():
+            def run_stream(chunks, _p=pipe):
+                state = _p.init_state()
+                for c in chunks:
+                    state, v = _p(state, c)
+                return v
+            rates[name] = bench_pps(
+                lambda xs: run_stream(xs), list(X),
+                STATEFUL_REPEATS
+            ) * batch           # bench_pps counts chunks; scale to packets
+        rows.append({
+            "batch": batch,
+            "interp_kpkt_s": round(rates["interpret"] / 1e3, 1),
+            "pallas_kpkt_s": round(rates["pallas"] / 1e3, 1),
+            "speedup": round(rates["pallas"] / rates["interpret"], 2),
+            "pallas_backend": pipes["pallas"].backend,
+        })
+    return rows
 
 
 def main() -> dict:
@@ -71,7 +122,13 @@ def main() -> dict:
     for r in rows:
         assert float(r["interpret_err"]) < 1e-3
         assert r["pallas_backend"] == "pallas"
-    payload = {"rows": rows, "wall_s": round(t.wall_s, 1)}
+
+    srows = stateful_rows(rng)
+    print("\n== stateful flow step: interpreter vs fused Pallas launch ==")
+    print(render_table(srows, list(srows[0])))
+
+    payload = {"rows": rows, "stateful_rows": srows,
+               "wall_s": round(t.wall_s, 1)}
     save_result("kernel_roofline", payload)
     return payload
 

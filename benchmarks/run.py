@@ -7,7 +7,10 @@ After the selected benches run, the per-engine serving stats recorded by
 ``dag_throughput`` / ``flow_throughput`` are consolidated into
 ``benchmarks/results/BENCH_serve.json`` — the machine-readable perf
 trajectory (pkt/s + p50/p95/p99 latency per engine x backend) future PRs
-diff throughput against.
+diff throughput against.  ``ShardedPacketServeEngine`` rows are measured
+in forced-multi-device subprocesses (``common.run_sharded_probe``), so
+their ``shards`` field records the actual device count of the run — one
+stateless (ad>tc) and one stateful (flow-ddos, fused launch) row.
 """
 
 from __future__ import annotations
@@ -45,9 +48,10 @@ BENCHES = {
             dag_throughput.main),
     "dse": ("sequential vs batched DSE candidates/sec",
             dse_throughput.main),
-    "flow": ("stateful flow pipeline: interpreter vs Pallas pkt/s",
+    "flow": ("stateful flow pipeline: interpreter vs fused launch pkt/s",
              flow_throughput.main),
-    "kernel": ("fused_mlp kernel roofline", kernel_roofline.main),
+    "kernel": ("fused_mlp kernel roofline + stateful step",
+               kernel_roofline.main),
     "dryrun": ("dry-run roofline summary", dryrun_roofline.main),
 }
 

@@ -6,9 +6,11 @@ DDoS-burst packet stream (repro/data/traffic.py) flows through a STATEFUL
 pipeline — ``FlowKey -> RegisterUpdate`` maintains per-flow counters,
 EWMAs and windowed histograms in a fixed-slot register file, and a DNN
 classifies every packet on its flow's live register row — on both
-execution engines (jitted reference vs fused Pallas flow-update kernel,
-bit-identical verdicts), reporting pkt/s, per-batch latency percentiles
-and reaction time (packets until a flow's first correct verdict).
+execution engines (jitted reference vs ONE fused Pallas launch covering
+registers AND classifier, ``pallas-fused-flow``, bit-identical
+verdicts), reporting the per-part backend, pkt/s, per-batch latency
+percentiles and reaction-time percentiles (packets until a flow's first
+correct verdict).
 
   PYTHONPATH=src python examples/stream_flows.py
 """
@@ -63,10 +65,18 @@ for backend in ("interpret", "pallas"):
     verdicts[backend] = np.concatenate(got)
     s = eng.stats()
     print(f"\n[{s['backend']}] {pipe!r}")
+    # per-part backend report: which engine serves each half of the
+    # pipeline — or ONE fused launch covering both (pallas-fused-flow)
+    part = ("fused single launch" if pipe.fused
+            else f"flow={pipe.flow_backend}  "
+                 f"classifier={pipe.classifier_backend}")
+    print(f"  parts: {part}")
     print(f"  {s['packets']} packets, {s['pkt_per_s']:,.0f} pkt/s, "
           f"{s['batches']} batches, {s['pad_packets']} pad rows")
     print(f"  per-batch latency: p50 {s['lat_p50_ms']:.3f} ms, "
           f"p95 {s['lat_p95_ms']:.3f} ms, p99 {s['lat_p99_ms']:.3f} ms")
+
+assert pipe.backend == "pallas-fused-flow", pipe.backend
 
 assert np.array_equal(verdicts["interpret"], verdicts["pallas"]), \
     "the two engines must produce bit-identical verdicts (same registers)"

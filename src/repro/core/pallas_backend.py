@@ -67,6 +67,8 @@ __all__ = [
     "stateful_eligible",
     "lower_stateful",
     "lower_stateful_pallas",
+    "fused_flow_eligible",
+    "lower_stateful_fused",
 ]
 
 # stages foldable into the kernel's input transform: stateless, cheap,
@@ -494,3 +496,101 @@ def lower_stateful_pallas(prefix: list[Stage]) -> Callable | None:
     if not stateful_eligible(prefix):
         return None
     return lower_stateful(prefix, "pallas")[0]
+
+
+# ------------------------------------------------- fully-fused flow path
+#
+# The whole stateful pipeline — FlowKey -> RegisterUpdate -> feature-emit
+# -> classifier — as ONE Pallas launch (kernels/fused_flow): the register
+# table and the classifier weight stack co-resident in VMEM, feature rows
+# consumed in-kernel, only int32 verdicts and the updated table leaving.
+# StatefulPipeline tries this form FIRST under backend="pallas" and
+# reports "pallas-fused-flow" when it serves; any mismatch below falls
+# back to the two-dispatch prefix+suffix composition (bit-identical by
+# the flow-state contract).
+
+
+def _match_fused_flow(prefix: list[Stage], suffix: list[Stage]):
+    """-> (mode, weights, biases) when the POST-PEEPHOLE suffix is an
+    optional leading WindowStats plus a classify-shaped MLP run, else
+    None.  ``mode`` is the kernel's readout: "all" | "hist" | "raw"."""
+    spec = prefix[1].spec
+    mode, body = "raw", list(suffix)
+    if body and isinstance(body[0], WindowStats):
+        ws = body[0]
+        s = ws.spec
+        if (s.width != spec.width or s.n_counters != spec.n_counters
+                or s.n_ewma != spec.n_ewma):
+            return None                  # readout disagrees with the table
+        mode, body = ws.mode, body[1:]
+        n_in = ws.n_out
+    else:
+        n_in = spec.width
+    mlp = _match_mlp(body)
+    if mlp is None or not mlp[2]:        # fused form needs int32 verdicts
+        return None
+    weights, biases = mlp[0], mlp[1]
+    if int(weights[0].shape[0]) != n_in:
+        return None
+    return mode, list(weights), list(biases)
+
+
+def fused_flow_eligible(prefix: list[Stage], suffix: list[Stage]) -> bool:
+    """Would ``lower_stateful_fused`` produce the single-launch form?
+    Shape checks only — no parameter packing or device transfers."""
+    if not stateful_eligible(prefix):
+        return False
+    matched = _match_fused_flow(prefix, suffix)
+    if matched is None:
+        return False
+    _, weights, _ = matched
+    from repro.kernels.fused_flow import LANE as FF_LANE
+
+    spec = prefix[1].spec
+    widths = [int(weights[0].shape[0])] + [int(w.shape[1]) for w in weights]
+    return max(widths) <= FF_LANE and spec.width <= FF_LANE
+
+
+def lower_stateful_fused(prefix: list[Stage], suffix: list[Stage]
+                         ) -> Callable | None:
+    """Lower the WHOLE stateful pipeline onto one fused Pallas launch.
+
+    ``suffix`` must be post-peephole (``fuse_pipeline_stages``).  Returns
+    a traceable ``fn(keys, regs, x, valid) -> (keys', regs', verdicts)``
+    closing over the packed classifier stack, or ``None`` when the
+    pipeline is outside the fused envelope — the caller then composes
+    the prefix and suffix lowerings as before."""
+    if not fused_flow_eligible(prefix, suffix):
+        return None
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import fused_flow as ff
+    from repro.kernels.fused_mlp import pack_params, snap_lane
+
+    mode, weights, biases = _match_fused_flow(prefix, suffix)
+    fk, ru = prefix
+    spec = ru.spec
+    widths = [int(weights[0].shape[0])] + [int(w.shape[1]) for w in weights]
+    interpret = jax.default_backend() != "tpu"
+    lane = snap_lane(widths, interpret=interpret)
+    w_stack, b_stack = pack_params(
+        [jnp.asarray(w, jnp.float32) for w in weights],
+        [jnp.asarray(b, jnp.float32) for b in biases],
+        lane,
+    )
+    num_classes = int(weights[-1].shape[1])
+
+    def fused_fn(keys, regs, x, valid, _fk=fk, _ru=ru, _spec=spec,
+                 _w=w_stack, _b=b_stack, _mode=mode, _nc=num_classes,
+                 _lane=lane, _interp=interpret):
+        pkt_keys = _fk.apply_keys(x)
+        upd, bins = _ru.prepare(x)
+        return ff.fused_flow_classify(
+            keys, regs, pkt_keys, upd, bins, valid, _w, _b,
+            n_counters=_spec.n_counters, n_ewma=_spec.n_ewma,
+            alpha=_spec.ewma_alpha, mode=_mode, num_classes=_nc,
+            lane=_lane, interpret=_interp,
+        )
+
+    return fused_fn

@@ -536,9 +536,12 @@ EXEC_BACKENDS = ("interpret", "pallas")
 
 # Engines a compiled artifact may REPORT serving on (what actually runs,
 # after fallback): the requestable engines, the whole-DAG megakernel
-# (chaining.compile_dag's "pallas-fused-dag"), and "mixed" for DAGs /
-# stateful pipelines whose parts landed on different engines.
-REPORT_BACKENDS = ("interpret", "pallas", "pallas-fused-dag", "mixed")
+# (chaining.compile_dag's "pallas-fused-dag"), the single-launch stateful
+# pipeline (flowstate.StatefulPipeline's "pallas-fused-flow"), and
+# "mixed" for DAGs / stateful pipelines whose parts landed on different
+# engines.
+REPORT_BACKENDS = ("interpret", "pallas", "pallas-fused-dag",
+                   "pallas-fused-flow", "mixed")
 
 
 class CompiledStages:

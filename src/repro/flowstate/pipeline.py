@@ -11,16 +11,22 @@ Python-side mutation).
 Backend selection mirrors the stateless contract
 (docs/pipeline_ir.md#flow-state-contract):
 
-  * the PREFIX lowers onto the fused flow-update Pallas kernel
+  * under ``backend="pallas"`` the WHOLE pipeline lowers onto the
+    single-launch fused kernel (kernels/fused_flow) when the
+    post-peephole suffix matches the fused envelope — register table and
+    classifier weights co-resident in VMEM, feature rows never touching
+    HBM — reported as ``"pallas-fused-flow"``;
+  * otherwise the PREFIX lowers onto the flow-update Pallas kernel
     (kernels/flow_update) when the table fits the kernel envelope, else
     the jnp scan reference — bit-identical either way;
-  * the SUFFIX lowers through ``core.pallas_backend.lower_stages_pallas``
-    under the existing Pallas lowering contract, else the jitted stage
-    walk.
+  * and the SUFFIX lowers through
+    ``core.pallas_backend.lower_stages_pallas`` under the existing Pallas
+    lowering contract, else the jitted stage walk.
 
-``backend`` reports what actually serves: ``"pallas"`` when both parts
-lowered, ``"interpret"`` when neither did, ``"mixed"`` otherwise — never
-the engine that was merely requested.
+``backend`` reports what actually serves: ``"pallas-fused-flow"`` for
+the single launch, ``"pallas"`` when both parts lowered separately,
+``"interpret"`` when neither did, ``"mixed"`` otherwise — never the
+engine that was merely requested.
 """
 
 from __future__ import annotations
@@ -51,28 +57,42 @@ class StatefulPipeline:
 
         self.stages = list(stages)
         self.requested_backend = backend
+        self.fuse = bool(fuse)
         prefix, suffix = stageir.split_stateful(self.stages)
         self.spec: FlowStateSpec = prefix[1].spec
         self.feature_dim = None          # any F the key/update cols allow
 
-        flow_fn, self.flow_backend = pallas_backend.lower_stateful(
-            prefix, backend
-        )
-
         run_suffix = (stageir.fuse_pipeline_stages(suffix) if fuse
                       else list(suffix))
-        suffix_fn = None
-        if backend == "pallas" and run_suffix:
-            suffix_fn = pallas_backend.lower_stages_pallas(run_suffix)
-        self.classifier_backend = ("pallas" if suffix_fn is not None
-                                   else "interpret")
-        if suffix_fn is None:
-            def suffix_fn(feats, _s=run_suffix):
-                return stageir.apply_stages(_s, feats)
 
-        def step(keys, regs, x, valid, _flow=flow_fn, _cls=suffix_fn):
-            keys, regs, feats = _flow(keys, regs, x, valid)
-            return keys, regs, _cls(feats)
+        # single-launch form first: the whole pipeline as ONE Pallas
+        # kernel (kernels/fused_flow) when backend="pallas" and the
+        # post-peephole suffix matches the fused envelope — bit-identical
+        # to the two-dispatch composition below by the flow-state
+        # contract, reported honestly as "pallas-fused-flow"
+        step = None
+        self.fused = False
+        if backend == "pallas" and fuse:
+            step = pallas_backend.lower_stateful_fused(prefix, run_suffix)
+        if step is not None:
+            self.fused = True
+            self.flow_backend = self.classifier_backend = "pallas"
+        else:
+            flow_fn, self.flow_backend = pallas_backend.lower_stateful(
+                prefix, backend
+            )
+            suffix_fn = None
+            if backend == "pallas" and run_suffix:
+                suffix_fn = pallas_backend.lower_stages_pallas(run_suffix)
+            self.classifier_backend = ("pallas" if suffix_fn is not None
+                                       else "interpret")
+            if suffix_fn is None:
+                def suffix_fn(feats, _s=run_suffix):
+                    return stageir.apply_stages(_s, feats)
+
+            def step(keys, regs, x, valid, _flow=flow_fn, _cls=suffix_fn):
+                keys, regs, feats = _flow(keys, regs, x, valid)
+                return keys, regs, _cls(feats)
 
         # the raw traceable step: what ShardedPacketServeEngine wraps in
         # shard_map over per-device register tables
@@ -86,17 +106,25 @@ class StatefulPipeline:
         # state.)
         donate = (0, 1) if jax.default_backend() != "cpu" else ()
         self._step = jax.jit(step, donate_argnums=donate)
+        self._ones_valid: dict[int, object] = {}  # per-batch-size cache
 
     @property
     def backend(self) -> str:
-        """The engine that actually serves, after any fallback."""
+        """The engine that actually serves, after any fallback:
+        ``"pallas-fused-flow"`` when the whole pipeline runs as one
+        kernel launch, else ``"pallas"``/``"interpret"``/``"mixed"`` for
+        the two-dispatch composition."""
+        if self.fused:
+            return "pallas-fused-flow"
         kinds = {self.flow_backend, self.classifier_backend}
         return kinds.pop() if len(kinds) == 1 else "mixed"
 
     def with_backend(self, backend: str) -> "StatefulPipeline":
         """Recompile for another engine (what PacketServeEngine's
-        ``backend=`` uses)."""
-        return StatefulPipeline(self.stages, backend=backend)
+        ``backend=`` uses).  Preserves the ``fuse`` flag — an unfused
+        pipeline must not silently come back fused."""
+        return StatefulPipeline(self.stages, backend=backend,
+                                fuse=self.fuse)
 
     def init_state(self) -> FlowState:
         return init_state(self.spec)
@@ -111,7 +139,11 @@ class StatefulPipeline:
 
         X = jnp.asarray(X, jnp.float32)
         if valid is None:
-            valid = jnp.ones((X.shape[0],), jnp.int32)
+            B = int(X.shape[0])
+            valid = self._ones_valid.get(B)
+            if valid is None:       # device-resident, reused every step
+                valid = self._ones_valid.setdefault(
+                    B, jnp.ones((B,), jnp.int32))
         keys, regs, verdicts = self._step(
             state.keys, state.regs, X, jnp.asarray(valid, jnp.int32)
         )

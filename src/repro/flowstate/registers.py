@@ -27,6 +27,7 @@ than the engine re-allocating memory mid-stream.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +59,17 @@ class FlowStateSpec:
             raise ValueError("n_counters must be >= 1 (slot 0 = pkt count)")
         if any(int(h) < 1 for h in self.hist_sizes):
             raise ValueError("every histogram needs >= 1 bin")
+        # shift-EWMA contract: a power-of-two alpha keeps both blend
+        # products exact in f32, which is what makes the scan reference,
+        # the segmented kernel and the fused kernel bit-identical no
+        # matter how the compiler groups the multiply-adds (see
+        # kernels.flow_update.ref.ewma_blend).
+        a = float(self.ewma_alpha)
+        if self.n_ewma and not (0.0 < a < 1.0 and math.frexp(a)[0] == 0.5):
+            raise ValueError(
+                "ewma_alpha must be a power of two in (0, 1) "
+                f"(shift-EWMA contract), got {self.ewma_alpha}"
+            )
 
     @property
     def width(self) -> int:

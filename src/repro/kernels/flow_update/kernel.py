@@ -5,42 +5,45 @@ order-dependent (EWMAs are non-commutative, collisions evict), so a naive
 vectorization is wrong.  This kernel exploits the one independence the
 semantics do give: REGISTER SLOTS NEVER INTERACT.  Each slot's final state
 is a function of its own packets' subsequence only, so the sequential loop
-factorizes into per-slot chains, and the kernel executes a *conflict-free
-round schedule*:
+factorizes into per-slot chains.
 
-  round r applies, simultaneously for every slot, the (r+1)-th packet
-  that hashes to it (``rank[p]`` = number of earlier same-slot packets in
-  the batch).  Within a round all targets are distinct, so the whole
-  table updates as a few [S, W] vector ops; across rounds each slot sees
-  its packets in arrival order.
+The wrapper (ops.py) pre-SEGMENTS the batch: a stable sort by slot turns
+every per-slot chain into a contiguous run, preserving per-slot arrival
+order (stable sort), and hands the kernel the segment tables
+(``seg_first/seg_len/seg_slot``) plus each packet's ``rank`` within its
+chain.  The kernel then runs a hybrid, exact schedule:
 
-The schedule is HYBRID: the first ``PAR_ROUNDS`` ranks run as vectorized
-rounds — in busy interleaved traffic (the serving regime this subsystem
-exists for) that retires nearly every packet, since per-flow multiplicity
-within one batch is small — and the deep-chain remainder
-(``rank >= PAR_ROUNDS``) drains through a COMPACTED sequential loop over
-just those packets, reusing the reference's ``_packet_step``.  Both phases
-respect per-slot arrival order, so the combination is exact.  The wrapper
-(ops.py) only launches this kernel when rounds retire most of the batch;
-drain-dominated batches take the reference schedule instead — a pure
-schedule choice, since every schedule computes the same bits.
+  1. COMPACTED LOCKSTEP ROUNDS — round r applies, simultaneously for
+     every occupied segment, that segment's (r+1)-th packet.  The active
+     rows are gathered once into a compacted [B]-sized table (cost
+     independent of the slot count), updated with the same elementwise
+     f32 expressions as the reference's ``_packet_step``, and scattered
+     back after the last round.  Within a round all targets are distinct
+     segments; across rounds each segment sees its packets in arrival
+     order.  Runs ``min(max_rank + 1, PAR_ROUNDS)`` rounds.
 
-Per-slot arithmetic is the SAME elementwise f32 expressions as the
-reference's ``_packet_step`` in the same order, so state, features and
+  2. UNROLLED SEQUENTIAL DRAIN — the deep-chain remainder
+     (``rank >= PAR_ROUNDS``) replays against the full table with the
+     same per-packet expressions as the reference's ``_packet_step``,
+     statically unrolled ``DRAIN_UNROLL`` packets per loop trip with the
+     operand slicing hoisted to the block and the feature-row emit
+     buffered (one store per trip) — the dispatch overhead that dominates
+     the plain scan is amortized away.  ``drain_order`` (from the
+     wrapper) lists those packets in sorted-segment order — per slot that
+     extends the round order exactly — padded with a sentinel row whose
+     ``valid == 0``, so over-stepping past ``n_rem`` is a no-op.
+
+Both phases respect per-slot arrival order and use the SAME per-slot
+arithmetic in the same order as ``_packet_step``, so state, features and
 verdicts are **bit-identical** to ``flow_update_ref`` by the per-slot
-decomposition — the conformance suite pins this over random collision-heavy
-batches.
+decomposition — the conformance suite pins this over random
+collision-heavy batches.  Feature rows come out in SORTED order; the
+wrapper applies the inverse permutation to restore arrival order.
 
-The whole dataflow — key hash, slot gather, counter/EWMA/histogram
-update, slot scatter, per-packet feature emit — runs in one
-``pallas_call`` with the register table resident in VMEM; only the updated
-table and the [B, W] feature rows cross the kernel boundary.  The [B]
-rank vector (each packet's position within its slot's chain, valid rows
-only) is precomputed once by the wrapper — it doubles as the schedule-
-choice input there, and keeps the O(B^2) rank derivation and its [B, B]
-intermediates out of the kernel's VMEM footprint.  The gather/scatter
-constructions use jnp indexing (exact), which the interpret path executes
-directly; on TPU they lower through Mosaic's gather support.
+``_flow_phase`` is the schedule factored over plain jnp values so the
+fused stateful kernel (kernels/fused_flow) can run the identical update
+phase and feed the feature rows straight into its classifier matmuls
+without leaving VMEM.
 
 Grid: (1,) — rounds are a sequential dependency chain; everything is a
 full VMEM-resident block.  VMEM working set = S*(W+1) words + batch rows
@@ -55,106 +58,204 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.flow_update.ref import _packet_step, hash_slot
+from repro.kernels.flow_update.ref import ewma_blend
 
 LANE = 128
-# ranks executed as vectorized cross-slot rounds before the schedule
-# switches to the compacted sequential drain (crossover: one round costs
-# ~a dozen [S, W] vector ops, one drained packet ~a dozen [1, W] ops)
-PAR_ROUNDS = 4
+# ranks executed as compacted lockstep rounds before the schedule switches
+# to the unrolled sequential drain (crossover: one round costs ~a dozen
+# [B, W] vector ops, one drained packet ~a dozen [1, W] ops)
+PAR_ROUNDS = 8
+# packets replayed per drain-loop trip; the static unroll amortizes the
+# while-loop dispatch overhead that dominates a packet-at-a-time scan
+DRAIN_UNROLL = 8
 
 
-def _kernel(keys_ref, regs_ref, pk_ref, upd_ref, bins_ref, valid_ref,
-            rank_ref, keys_out, regs_out, feats_out, *,
-            n_counters: int, n_ewma: int, n_hists: int, alpha: float):
-    """keys_ref [S, Kw] i32; regs_ref [S, W_pad] f32; pk_ref [B, Kw] i32;
-    upd_ref [B, U_pad] f32; bins_ref [B, H_pad] i32; valid_ref/rank_ref
-    [B, Kw] i32.  Only column 0 of the narrow int refs is live (rest is
-    tile padding); only the first ``n_hists`` bins columns are real.
+def _flow_phase(keys, regs, pk, upd, bins, valid, rank, seg_first, seg_len,
+                seg_slot, drain_order, drain_sid, deep_src, *,
+                n_counters: int, n_ewma: int, alpha: float):
+    """The hybrid update schedule over plain jnp values.
 
-    ``rank[p]`` (precomputed by ops.py) = number of earlier VALID
-    same-slot packets — the round in which p fires.  Padding rows carry
-    ``valid == 0``: they are excluded from every round and from the
-    drain, and their feature rows stay zero (matching the reference)."""
-    keys = keys_ref[...][:, 0]                   # [S]
-    regs = regs_ref[...]                         # [S, W]
-    pk = pk_ref[...][:, 0]                       # [B]
-    upd = upd_ref[...]
-    bins = bins_ref[...][:, :max(n_hists, 1)]
-    valid = valid_ref[...][:, 0]
-    rank = rank_ref[...][:, 0]
+    keys [S] i32; regs [S, W] f32; the batch operands are [B_pad]-sized and
+    SORTED by slot (stable, so per-slot arrival order is preserved), with
+    at least one trailing sentinel row (``valid == 0``, ``bins == -1``).
+    ``seg_first/seg_len/seg_slot[k]`` describe segment k (0 for padding
+    entries past the live segment count, which carry ``seg_len == 0``);
+    ``drain_order`` lists the ``rank >= PAR_ROUNDS`` packets in sorted
+    order and ``drain_sid`` their rows in the deep table, both padded
+    with a sentinel index; ``deep_src`` [D] maps deep-table rows back to
+    segment ids (the last row is the drain sentinel).
+
+    -> (keys' [S], regs' [S, W], feats [B_pad, W] in SORTED order)."""
     S, W = regs.shape
     B = pk.shape[0]
     C, E = n_counters, n_ewma
-
-    slot = hash_slot(pk, S)                      # key-hash inside the launch
+    n_hists = bins.shape[1]
     live = valid != 0
+
     n_rounds = jnp.minimum(
         jnp.max(jnp.where(live, rank, 0)) + 1, PAR_ROUNDS
     )
+    col = jax.lax.broadcasted_iota(jnp.int32, (B, W), 1)
 
-    col = jax.lax.broadcasted_iota(jnp.int32, (S, W), 1)
-    b_idx = jnp.arange(B, dtype=jnp.int32)
+    # precompute every packet's full-width update terms ONCE, vectorized
+    # over the batch — the sequential phases then just gather rows:
+    #   add_full[i] = counter increments + hist one-hot bumps.  Counter,
+    #     EWMA and hist columns are DISJOINT, so each column sums at most
+    #     one nonzero term and folding them into one additive tensor is
+    #     exact (same bits as the reference's sequential adds);
+    #   val_full[i] = EWMA set-values padded to full width.
+    add_full = jnp.pad(upd[:, :C], ((0, 0), (0, W - C)))
+    for j in range(n_hists):                     # static unroll per hist
+        add_full = add_full + (col == bins[:, j:j + 1]).astype(jnp.float32)
+    val_full = jnp.pad(upd[:, C:C + E], ((0, 0), (C, W - C - E)))
+    col1 = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+    m_ewma = (col1 >= C) & (col1 < C + E)        # [1, W], broadcasts
+
+    # gather each live segment's row ONCE into a compacted [B]-sized active
+    # table; rounds update the compacted copy (cost independent of S)
+    seg_slot_c = jnp.where(seg_len > 0, seg_slot, 0)
+    act_keys = keys[seg_slot_c]                  # [B]
+    act_regs = regs[seg_slot_c]                  # [B, W]
     feats0 = jnp.zeros((B, W), jnp.float32)
-    pk2, slot2, valid2 = pk[:, None], slot[:, None], valid[:, None]
 
     def round_body(state):
-        r, keys1, regs1, feats = state
-        sel = (rank == r) & live
-        # at most one selected packet per slot: scatter packet ids, drop
-        # the non-selected (targets pushed out of range)
-        tgt = jnp.where(sel, slot, S)
-        pid = jnp.full((S,), -1, jnp.int32).at[tgt].set(b_idx, mode="drop")
-        ok = pid >= 0
-        pidc = jnp.maximum(pid, 0)
-        pk_s = pk[pidc]                          # [S] this round's keys
-        upd_s = upd[pidc]                        # [S, U]
-        bins_s = bins[pidc]                      # [S, H]
+        r, ak, ar, feats = state
+        ok = r < seg_len                         # segment still has packets
+        pid = jnp.where(ok, seg_first + r, 0)    # this round's packet ids
+        key_r = pk[pid]
+        add_r = add_full[pid]
+        val_r = val_full[pid]
 
         # identical per-slot arithmetic to ref._packet_step, vectorized
-        # across slots (elementwise f32: bit-identical per element)
-        fresh = keys1 != pk_s                    # evict-on-collision
-        row0 = jnp.where(fresh[:, None], jnp.zeros_like(regs1), regs1)
-        inc_full = jnp.pad(upd_s[:, :C], ((0, 0), (0, W - C)))
-        val_full = jnp.pad(upd_s[:, C:C + E], ((0, 0), (C, W - C - E)))
-        new = jnp.where(col < C, row0 + inc_full, row0)
-        ewma = jnp.where(fresh[:, None], val_full,
-                         row0 * (1.0 - alpha) + val_full * alpha)
-        new = jnp.where((col >= C) & (col < C + E), ewma, new)
-        for j in range(n_hists):                 # static unroll per hist
-            new = new + (col == bins_s[:, j:j + 1]).astype(jnp.float32)
+        # across segments (elementwise f32: bit-identical per element)
+        fresh = ak != key_r                      # evict-on-collision
+        row0 = jnp.where(fresh[:, None], jnp.zeros_like(ar), ar)
+        ewma = jnp.where(fresh[:, None], val_r,
+                         ewma_blend(row0, val_r, alpha))
+        new = jnp.where(m_ewma, ewma, row0) + add_r
 
-        regs1 = jnp.where(ok[:, None], new, regs1)
-        keys1 = jnp.where(ok, pk_s, keys1)
-        # this round's packets read their slot's post-round row
-        feats = jnp.where(sel[:, None], regs1[slot], feats)
-        return r + 1, keys1, regs1, feats
+        ar = jnp.where(ok[:, None], new, ar)
+        ak = jnp.where(ok, key_r, ak)
+        # this round's packets read their segment's post-round row
+        feats = feats.at[jnp.where(ok, pid, B)].set(new, mode="drop")
+        return r + 1, ak, ar, feats
 
-    _, keys, regs, feats = jax.lax.while_loop(
+    _, act_keys, act_regs, feats = jax.lax.while_loop(
         lambda s: s[0] < n_rounds, round_body,
-        (jnp.int32(0), keys, regs, feats0),
+        (jnp.int32(0), act_keys, act_regs, feats0),
     )
 
-    # compacted sequential drain: deep-chain packets (rank >= PAR_ROUNDS)
-    # in arrival order — per slot that extends the round order exactly
-    rem = (rank >= PAR_ROUNDS) & live
+    # unrolled sequential drain: deep-chain packets (rank >= PAR_ROUNDS)
+    # replay in sorted order — per slot that extends the round order
+    # exactly — against a DOUBLY-COMPACTED table holding only the deep
+    # segments' rows (at most B/(PAR_ROUNDS+1) of them): each step's row
+    # load/store then slices a cache-sized [D, W] buffer (a full-table
+    # dynamic-update would copy S rows per packet, and the active table
+    # still B).  Operands are pre-gathered into drain order so each trip
+    # block-slices them contiguously, and feature rows accumulate in a
+    # drain-order buffer written back with ONE scatter at the end.
+    # Over-stepping past n_rem lands on the sentinel entry (valid == 0,
+    # deep row D-1), which writes the stored values back and emits a zero
+    # feature row.
+    rem = live & (rank >= PAR_ROUNDS)
     n_rem = jnp.sum(rem.astype(jnp.int32))
-    rem_order = jnp.argsort(jnp.where(rem, b_idx, B + b_idx))
+    trips = (n_rem + DRAIN_UNROLL - 1) // DRAIN_UNROLL
+    pk_d = pk[drain_order]                       # [B] drain-ordered
+    add_d = add_full[drain_order]                # [B, W] precomputed terms
+    val_d = val_full[drain_order]
+    valid_d = valid[drain_order]
+    deep_keys = act_keys[deep_src]               # [D]
+    deep_regs = act_regs[deep_src]               # [D, W]
+    dfeats0 = jnp.zeros((B, W), jnp.float32)
+
+    def drain_step(u, pk_b, sid_b, add_b, val_b, valid_b, ak2, ar2):
+        """One packet against the active table — the same elementwise f32
+        expressions as ref._packet_step, minus its per-packet operand
+        slicing (hoisted to the block), update-term construction (the
+        precomputed add_full/val_full rows) and feats scatter (buffered)."""
+        sid = sid_b[u]
+        key = pk_b[u:u + 1, None]                # [1, 1]
+        stored = jax.lax.dynamic_slice(ak2, (sid, 0), (1, 1))
+        row = jax.lax.dynamic_slice(ar2, (sid, 0), (1, W))
+        fresh = stored != key
+        row0 = jnp.where(fresh, jnp.zeros_like(row), row)
+        val_u = val_b[u:u + 1]
+        ewma = jnp.where(fresh, val_u, ewma_blend(row0, val_u, alpha))
+        new = jnp.where(m_ewma, ewma, row0) + add_b[u:u + 1]
+        ok = valid_b[u:u + 1, None] != 0
+        new_row = jnp.where(ok, new, row)
+        ak2 = jax.lax.dynamic_update_slice(
+            ak2, jnp.where(ok, key, stored), (sid, 0))
+        ar2 = jax.lax.dynamic_update_slice(ar2, new_row, (sid, 0))
+        return ak2, ar2, jnp.where(ok, new_row, jnp.zeros_like(new_row))
 
     def drain_body(state):
-        i, keys2, regs2, feats = state
-        p = rem_order[i]
-        keys2, regs2, feats = _packet_step(
-            p, (keys2, regs2, feats), pk2, slot2, upd, bins, valid2,
-            n_counters=C, n_ewma=E, alpha=alpha,
-        )
-        return i + 1, keys2, regs2, feats
+        t, ak2, ar2, dfeats = state
+        base = t * DRAIN_UNROLL
+        pk_b = jax.lax.dynamic_slice(pk_d, (base,), (DRAIN_UNROLL,))
+        sid_b = jax.lax.dynamic_slice(drain_sid, (base,), (DRAIN_UNROLL,))
+        add_b = jax.lax.dynamic_slice(
+            add_d, (base, 0), (DRAIN_UNROLL, W))
+        val_b = jax.lax.dynamic_slice(
+            val_d, (base, 0), (DRAIN_UNROLL, W))
+        valid_b = jax.lax.dynamic_slice(valid_d, (base,), (DRAIN_UNROLL,))
+        out = []
+        for u in range(DRAIN_UNROLL):            # static unroll
+            ak2, ar2, frow = drain_step(
+                u, pk_b, sid_b, add_b, val_b, valid_b, ak2, ar2)
+            out.append(frow)
+        dfeats = jax.lax.dynamic_update_slice(
+            dfeats, jnp.concatenate(out, axis=0), (base, 0))
+        return t + 1, ak2, ar2, dfeats
 
-    _, keys2, regs, feats = jax.lax.while_loop(
-        lambda s: s[0] < n_rem, drain_body,
-        (jnp.int32(0), keys[:, None], regs, feats),
+    _, deep_keys2, deep_regs, dfeats = jax.lax.while_loop(
+        lambda s: s[0] < trips, drain_body,
+        (jnp.int32(0), deep_keys[:, None], deep_regs, dfeats0),
     )
-    keys = keys2[:, 0]
+    deep_keys = deep_keys2[:, 0]
+    # sentinel drain entries all write zero rows onto the sentinel row,
+    # which the wrapper slices off; live entries are distinct positions
+    feats = feats.at[drain_order].set(dfeats, mode="drop")
+
+    # fold the drained deep rows back into the active table (only the
+    # live deep rows; junk copies and the sentinel row drop out of range)
+    n_deep_segs = jnp.sum((seg_len > PAR_ROUNDS).astype(jnp.int32))
+    d_idx = jnp.arange(deep_src.shape[0], dtype=jnp.int32)
+    src_tgt = jnp.where(d_idx < n_deep_segs, deep_src, B)
+    act_keys = act_keys.at[src_tgt].set(deep_keys, mode="drop")
+    act_regs = act_regs.at[src_tgt].set(deep_regs, mode="drop")
+
+    # scatter the compacted rows back; padding segments drop out of range
+    tgt = jnp.where(seg_len > 0, seg_slot, S)
+    keys = keys.at[tgt].set(act_keys, mode="drop")
+    regs = regs.at[tgt].set(act_regs, mode="drop")
+    return keys, regs, feats
+
+
+def _kernel(keys_ref, regs_ref, pk_ref, upd_ref, bins_ref, valid_ref,
+            rank_ref, segf_ref, segl_ref, segs_ref, dord_ref, dsid_ref,
+            dsrc_ref, keys_out, regs_out, feats_out, *,
+            n_counters: int, n_ewma: int, n_hists: int, alpha: float):
+    """keys_ref [S, Kw] i32; regs_ref [S, W_pad] f32; batch refs are
+    [B_pad, *]-shaped and slot-sorted (see ``_flow_phase``).  Only column 0
+    of the narrow int refs is live (rest is tile padding); only the first
+    ``n_hists`` bins columns are real."""
+    keys, regs, feats = _flow_phase(
+        keys_ref[...][:, 0],
+        regs_ref[...],
+        pk_ref[...][:, 0],
+        upd_ref[...],
+        bins_ref[...][:, :max(n_hists, 1)],
+        valid_ref[...][:, 0],
+        rank_ref[...][:, 0],
+        segf_ref[...][:, 0],
+        segl_ref[...][:, 0],
+        segs_ref[...][:, 0],
+        dord_ref[...][:, 0],
+        dsid_ref[...][:, 0],
+        dsrc_ref[...][:, 0],
+        n_counters=n_counters, n_ewma=n_ewma, alpha=alpha,
+    )
     k_w = keys_out.shape[1]
     keys_out[...] = jnp.pad(keys[:, None], ((0, 0), (0, k_w - 1)))
     regs_out[...] = regs
@@ -166,13 +267,19 @@ def _kernel(keys_ref, regs_ref, pk_ref, upd_ref, bins_ref, valid_ref,
                               "interpret")
 )
 def flow_update_padded(
-    keys: jax.Array,       # [S, Kw] int32 (-1 = empty; col 0 live)
-    regs: jax.Array,       # [S, W_pad] f32
-    pkt_keys: jax.Array,   # [B, Kw] int32
-    upd: jax.Array,        # [B, U_pad] f32
-    bins: jax.Array,       # [B, H_pad] int32 absolute cols (-1 = none)
-    valid: jax.Array,      # [B, Kw] int32
-    rank: jax.Array,       # [B, Kw] int32 (earlier valid same-slot count)
+    keys: jax.Array,        # [S, Kw] int32 (-1 = empty; col 0 live)
+    regs: jax.Array,        # [S, W_pad] f32
+    pkt_keys: jax.Array,    # [B_pad, Kw] int32, slot-sorted
+    upd: jax.Array,         # [B_pad, U_pad] f32, slot-sorted
+    bins: jax.Array,        # [B_pad, H_pad] int32 absolute cols (-1 = none)
+    valid: jax.Array,       # [B_pad, Kw] int32 (sentinel rows 0)
+    rank: jax.Array,        # [B_pad, Kw] int32 position within slot chain
+    seg_first: jax.Array,   # [B_pad, Kw] int32 segment start positions
+    seg_len: jax.Array,     # [B_pad, Kw] int32 segment lengths (0 = pad)
+    seg_slot: jax.Array,    # [B_pad, Kw] int32 segment target slots
+    drain_order: jax.Array,  # [B_pad, Kw] int32 deep-packet replay order
+    drain_sid: jax.Array,    # [B_pad, Kw] int32 deep-packet deep-table rows
+    deep_src: jax.Array,     # [D, Kw] int32 deep-table row -> segment id
     *,
     n_counters: int,
     n_ewma: int,
@@ -180,11 +287,12 @@ def flow_update_padded(
     alpha: float,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """-> (keys' [S, Kw], regs' [S, W_pad], feats [B, W_pad])."""
+    """-> (keys' [S, Kw], regs' [S, W_pad], feats [B_pad, W_pad] sorted)."""
     S, k_w = keys.shape
     _, w_pad = regs.shape
     B = pkt_keys.shape[0]
     assert S & (S - 1) == 0, "slot count must be a power of two"
+    narrow = pl.BlockSpec((B, k_w), lambda i: (0, 0))
     return pl.pallas_call(
         functools.partial(
             _kernel, n_counters=n_counters, n_ewma=n_ewma,
@@ -195,11 +303,11 @@ def flow_update_padded(
             # sequential round chain: every operand is one resident block
             pl.BlockSpec((S, k_w), lambda i: (0, 0)),
             pl.BlockSpec((S, w_pad), lambda i: (0, 0)),
-            pl.BlockSpec((B, k_w), lambda i: (0, 0)),
+            narrow,
             pl.BlockSpec((B, upd.shape[1]), lambda i: (0, 0)),
             pl.BlockSpec((B, bins.shape[1]), lambda i: (0, 0)),
-            pl.BlockSpec((B, k_w), lambda i: (0, 0)),
-            pl.BlockSpec((B, k_w), lambda i: (0, 0)),
+            narrow, narrow, narrow, narrow, narrow, narrow, narrow,
+            pl.BlockSpec((deep_src.shape[0], k_w), lambda i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((S, k_w), lambda i: (0, 0)),
@@ -212,14 +320,16 @@ def flow_update_padded(
             jax.ShapeDtypeStruct((B, w_pad), jnp.float32),
         ],
         interpret=interpret,
-    )(keys, regs, pkt_keys, upd, bins, valid, rank)
+    )(keys, regs, pkt_keys, upd, bins, valid, rank, seg_first, seg_len,
+      seg_slot, drain_order, drain_sid, deep_src)
 
 
 def vmem_bytes(n_slots: int, width: int, batch: int = 256) -> int:
     """VMEM working set the kernel claims (feasibility input): the whole
     register file (rows + keys), the batch's packet/update/feature rows,
-    and the int32 scheduling operands (keys/valid/rank/bins)."""
+    the compacted active table, and the int32 scheduling operands
+    (keys/valid/rank/segment tables/drain order + hist bins)."""
     table = n_slots * (width + 1) * 4
-    batch_rows = batch * (width + 1) * 4 * 2   # upd in + feats out
-    aux = batch * 4 * 12                       # pk/valid/rank + hist bins
+    batch_rows = batch * (width + 1) * 4 * 3   # upd in + feats out + active
+    aux = batch * 4 * 16                       # scheduling ints + hist bins
     return table + batch_rows + aux

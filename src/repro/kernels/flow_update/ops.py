@@ -1,9 +1,9 @@
 """Public op: batched flow-register update, fused scatter/gather form.
 
-``flow_update(keys, regs, pkt_keys, upd, bins, valid)`` pads to tile
-widths, launches the Pallas kernel (interpret=True on CPU — the TPU path is
-the same kernel compiled by Mosaic) and slices the padding back off.  This
-is the executable artifact the Pallas serving backend
+``flow_update(keys, regs, pkt_keys, upd, bins, valid)`` segments the batch
+by slot, pads to tile widths, launches the Pallas kernel (interpret=True on
+CPU — the TPU path is the same kernel compiled by Mosaic) and restores
+arrival order.  This is the executable artifact the Pallas serving backend
 (core.pallas_backend.lower_stateful_pallas) emits for the stateful stage
 prefix ``FlowKey -> RegisterUpdate``.
 
@@ -13,18 +13,27 @@ self-masking: padded register columns start zero and are never addressed
 (absolute hist columns < W, counter/EWMA sections are static slices), so
 the real columns are bit-identical to the unpadded reference.
 
-Schedule choice: the kernel's conflict-free rounds only pay off when they
-retire most of the batch (busy interleaved traffic, small per-flow
-multiplicity).  The wrapper computes the batch's rank profile ONCE over
-the valid rows — padding rows are excluded, so ragged tails cannot fake a
-deep chain — routes drain-dominated batches (one flow owning a quiet
-batch) to the reference schedule via ``lax.cond``, and passes the rank
-vector into the kernel as its round schedule.  All inside the same jitted
-program, and a pure schedule choice: every schedule computes identical
-bits.
+Slot segmentation (``segment_batch``, shared with kernels/fused_flow): a
+STABLE argsort by slot makes every per-slot chain contiguous while
+preserving per-slot arrival order, so each packet's rank within its chain
+falls out of a cumulative max in O(B log B) — no [B, B] intermediates —
+and deep same-slot bursts become dense segments the kernel's lockstep
+rounds and unrolled drain both walk efficiently.  The inverse permutation
+restores arrival-order feature rows; the table update itself is
+order-independent across slots, so sorting never changes the final state.
+
+Schedule choice: the hybrid kernel covers every traffic shape (lockstep
+rounds retire interleaved traffic, the unrolled drain replays deep
+chains), so the ``lax.cond`` routes only near-degenerate batches — more
+than 7/8 of live packets sitting deeper than ``PAR_ROUNDS`` in one chain —
+to the reference walk, where the compacted rounds would be pure overhead.
+All inside the same jitted program, and a pure schedule choice: every
+schedule computes identical bits.
 """
 
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +57,122 @@ def _on_tpu() -> bool:
 
 def _snap(n: int, tile: int) -> int:
     return max(tile, -(-n // tile) * tile)
+
+
+class Segments(NamedTuple):
+    """Slot-segmented batch layout (all entries in SORTED order except
+    ``order``/``inv``, which map between arrival and sorted order)."""
+
+    order: jax.Array       # [B] arrival index of sorted position i
+    inv: jax.Array         # [B] sorted position of arrival index p
+    rank: jax.Array        # [B] position within the slot's chain
+    seg_first: jax.Array   # [B] segment k's first sorted position
+    seg_len: jax.Array     # [B] segment k's packet count (0 = padding)
+    seg_slot: jax.Array    # [B] segment k's table slot
+    drain_order: jax.Array  # [B] rank >= PAR_ROUNDS packets, sorted; B = pad
+    drain_sid: jax.Array   # [B] those packets' deep-table rows; -1 = pad
+    deep_src: jax.Array    # [B] segment id behind each deep-table row
+    n_deep: jax.Array      # [] live packets with rank >= par_rounds
+    n_live: jax.Array      # [] live packets
+
+
+def segment_batch(slot: jax.Array, valid: jax.Array, n_slots: int, *,
+                  par_rounds: int = PAR_ROUNDS) -> Segments:
+    """Stable-sort the batch by slot and derive the segment tables.
+
+    Stability preserves per-slot arrival order, so ranks — and therefore
+    the final table state — are exactly those of the arrival-order walk.
+    Invalid rows sort last (keyed ``n_slots``) and never start or extend a
+    segment.  Runs as part of the jitted serving step."""
+    B = slot.shape[0]
+    live = valid != 0
+    pos = jnp.arange(B, dtype=jnp.int32)
+    order = jnp.argsort(jnp.where(live, slot, n_slots), stable=True)
+    slot_s = slot[order]
+    live_s = live[order]
+
+    is_new = jnp.concatenate(
+        [jnp.ones((1,), bool), slot_s[1:] != slot_s[:-1]]
+    ) & live_s
+    seg_id = jnp.cumsum(is_new.astype(jnp.int32)) - 1
+    # rank = distance from the most recent segment head (live rows only)
+    rank = pos - jax.lax.cummax(jnp.where(is_new, pos, 0))
+    head_tgt = jnp.where(is_new, seg_id, B)
+    seg_first = jnp.zeros(B, jnp.int32).at[head_tgt].set(pos, mode="drop")
+    seg_slot = jnp.zeros(B, jnp.int32).at[head_tgt].set(slot_s, mode="drop")
+    seg_len = jnp.zeros(B, jnp.int32).at[
+        jnp.where(live_s, seg_id, B)
+    ].add(1, mode="drop")
+    inv = jnp.zeros(B, jnp.int32).at[order].set(pos)
+
+    rem = live_s & (rank >= par_rounds)
+    n_deep = jnp.sum(rem.astype(jnp.int32))
+    n_live = jnp.sum(live_s.astype(jnp.int32))
+    packed = jnp.argsort(jnp.where(rem, pos, B + pos))
+    drain_order = jnp.where(pos < n_deep, packed, B)
+    # the drain runs against a doubly-compacted table holding only the
+    # DEEP segments (seg_len > par_rounds, so at most B/(par_rounds+1)
+    # rows): each replay step then moves [1, W] of a cache-sized buffer.
+    # drain_sid[i] = deep-table row of drain packet i (-1 = sentinel,
+    # remapped by pack_segmented_operands); deep_src[d] = segment id the
+    # deep-table row d was compacted from.
+    deep = seg_len > par_rounds
+    did = jnp.cumsum(deep.astype(jnp.int32)) - 1
+    drain_sid = jnp.where(pos < n_deep, did[seg_id[packed]], -1)
+    deep_src = jnp.zeros(B, jnp.int32).at[
+        jnp.where(deep, did, B)
+    ].set(pos, mode="drop")
+    return Segments(order, inv, rank, seg_first, seg_len, seg_slot,
+                    drain_order, drain_sid, deep_src, n_deep, n_live)
+
+
+def deep_rows(batch: int, tile: int, par_rounds: int = PAR_ROUNDS) -> int:
+    """Rows of the kernel's doubly-compacted deep-segment table: at most
+    ``batch // (par_rounds + 1)`` segments can be deep, plus one sentinel
+    row, snapped to the 8-row sublane tile (both CPU and TPU)."""
+    del tile
+    return _snap(batch // (par_rounds + 1) + 1, 8)
+
+
+def pack_segmented_operands(seg: Segments, keys, regs, pkt_keys, upd, bins,
+                            valid, *, tile: int, w_pad: int, u_pad: int,
+                            h_pad: int):
+    """Permute the batch into sorted-segment order and pad to kernel tile
+    shapes.  Adds ``tile`` trailing sentinel rows (``valid == 0``,
+    ``bins == -1``, ``drain_order == B``) so the kernel's unrolled drain
+    can over-step past ``n_rem`` as a no-op; sentinel drain packets are
+    remapped onto the deep table's reserved last row.  Narrow int
+    operands keep column 0 live only."""
+    S = keys.shape[0]
+    B = pkt_keys.shape[0]
+    b_pad = B + tile
+    d_rows = deep_rows(B, tile)
+    o = seg.order
+
+    def icol(vals, fill=0):
+        out = jnp.full((b_pad, tile), fill, jnp.int32)
+        return out.at[:B, 0].set(vals)
+
+    sid = jnp.where(seg.drain_sid < 0, d_rows - 1, seg.drain_sid)
+    take = min(d_rows, B)
+    deep_src = jnp.zeros((d_rows, tile), jnp.int32).at[:take, 0].set(
+        seg.deep_src[:take])
+    return (
+        jnp.zeros((S, tile), jnp.int32).at[:, 0].set(keys),
+        jnp.pad(regs, ((0, 0), (0, w_pad - regs.shape[1]))),
+        icol(pkt_keys[o]),
+        jnp.pad(upd[o], ((0, tile), (0, u_pad - upd.shape[1]))),
+        jnp.pad(bins[o], ((0, tile), (0, h_pad - bins.shape[1])),
+                constant_values=-1),
+        icol(valid[o]),
+        icol(seg.rank),
+        icol(seg.seg_first),
+        icol(seg.seg_len),
+        icol(seg.seg_slot),
+        icol(seg.drain_order, fill=B),
+        icol(sid, fill=d_rows - 1),
+        deep_src,
+    )
 
 
 def flow_update(
@@ -79,7 +204,7 @@ def flow_update(
             n_counters=n_counters, n_ewma=n_ewma, alpha=alpha,
         )
     # CPU interpret mode snaps pads to 8-wide tiles; TPU pads the last dim
-    # to the full 128 lane.  Narrow int operands keep col 0 live only.
+    # to the full 128 lane.
     tile = 8 if interpret else LANE
     w_pad = _snap(W, tile)
     u_pad = _snap(upd.shape[1], tile)
@@ -92,31 +217,22 @@ def flow_update(
     bins = jnp.asarray(bins, jnp.int32)
     valid = jnp.asarray(valid, jnp.int32)
 
-    # rank[p] = earlier VALID packets hashing to p's slot — the kernel's
-    # round schedule AND the schedule-choice profile, computed once.
-    # Padding rows (valid=0) are excluded on both sides: they never touch
-    # the table, so a ragged tail cannot fake a deep chain.
-    live = valid != 0
-    slot = hash_slot(pkt_keys, S)
-    p_i = jax.lax.broadcasted_iota(jnp.int32, (B, B), 0)
-    q_i = jax.lax.broadcasted_iota(jnp.int32, (B, B), 1)
-    rank = jnp.sum(((slot[:, None] == slot[None, :]) & (q_i < p_i)
-                    & live[None, :]).astype(jnp.int32), axis=1)
+    # segment ONCE: the layout is the kernel's schedule AND the
+    # schedule-choice profile.  Padding rows (valid=0) are excluded, so a
+    # ragged tail cannot fake a deep chain.
+    seg = segment_batch(hash_slot(pkt_keys, S), valid, S)
 
     def launch(_):
-        keys2 = jnp.zeros((S, tile), jnp.int32).at[:, 0].set(keys)
-        regs2 = jnp.pad(regs, ((0, 0), (0, w_pad - W)))
-        pk2 = jnp.zeros((B, tile), jnp.int32).at[:, 0].set(pkt_keys)
-        upd2 = jnp.pad(upd, ((0, 0), (0, u_pad - upd.shape[1])))
-        bins2 = jnp.pad(bins, ((0, 0), (0, h_pad - H)), constant_values=-1)
-        valid2 = jnp.zeros((B, tile), jnp.int32).at[:, 0].set(valid)
-        rank2 = jnp.zeros((B, tile), jnp.int32).at[:, 0].set(rank)
+        ops = pack_segmented_operands(
+            seg, keys, regs, pkt_keys, upd, bins, valid,
+            tile=tile, w_pad=w_pad, u_pad=u_pad, h_pad=h_pad,
+        )
         k_out, r_out, feats = flow_update_padded(
-            keys2, regs2, pk2, upd2, bins2, valid2, rank2,
-            n_counters=n_counters, n_ewma=n_ewma, n_hists=H,
+            *ops, n_counters=n_counters, n_ewma=n_ewma, n_hists=H,
             alpha=float(alpha), interpret=interpret,
         )
-        return k_out[:, 0], r_out[:, :W], feats[:, :W]
+        # feats come back in sorted order: inverse-permute to arrival order
+        return k_out[:, 0], r_out[:, :W], feats[:B, :W][seg.inv]
 
     def reference(_):
         return flow_update_ref(
@@ -124,8 +240,8 @@ def flow_update(
             n_counters=n_counters, n_ewma=n_ewma, alpha=alpha,
         )
 
-    # route drain-dominated batches (deep chains the rounds cannot retire)
-    # to the reference walk
-    n_deep = jnp.sum((live & (rank >= PAR_ROUNDS)).astype(jnp.int32))
-    n_live = jnp.maximum(jnp.sum(live.astype(jnp.int32)), 1)
-    return jax.lax.cond(n_deep * 2 > n_live, reference, launch, 0)
+    # route only near-degenerate batches (> 7/8 of live packets deeper
+    # than the lockstep rounds, i.e. one chain owning the batch) to the
+    # reference walk; the hybrid kernel covers everything else
+    return jax.lax.cond(seg.n_deep * 8 > seg.n_live * 7,
+                        reference, launch, 0)

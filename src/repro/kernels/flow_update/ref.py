@@ -38,6 +38,25 @@ import jax.numpy as jnp
 _HASH_MULT = 2654435761
 
 
+def ewma_blend(row0: jax.Array, val: jax.Array, alpha: float) -> jax.Array:
+    """EWMA blend with CONTRACTION-PROOF rounding, shared by every engine.
+
+    The naive ``row0*(1-a) + val*a`` is a mul+add pair that LLVM may or
+    may not contract into an FMA depending on the surrounding fusion
+    cluster (``lax.optimization_barrier`` does not survive to codegen), so
+    the same expression rounds differently in the reference loop, the
+    kernel's lockstep rounds and its drain — a one-ulp break of the
+    bit-identity contract.  Instead we rely on ``alpha`` being a power of
+    two (validated by ``FlowStateSpec``; it is the hardware shift-EWMA
+    regime the dataplane targets anyway): ``row0*alpha`` and ``val*alpha``
+    are then EXACT in f32, and an FMA whose product is exact rounds
+    identically to the separate mul+add.  Every grouping LLVM can pick
+    computes the same bits."""
+    ta = row0 * alpha   # exact: power-of-two scaling never rounds
+    tv = val * alpha    # exact
+    return (row0 - ta) + tv
+
+
 def hash_slot(keys: jax.Array, n_slots: int) -> jax.Array:
     """int32 flow keys -> int32 slot ids in [0, n_slots).  n_slots must be a
     power of two (masked, not modulo — same cheap op a switch ALU does)."""
@@ -75,8 +94,7 @@ def _packet_step(p, carry, pkt_keys, slots, upd, bins, valid, *,
     val_full = jnp.pad(u[:, C:C + E], ((0, 0), (C, W - C - E)))
 
     new = jnp.where(col < C, row0 + inc_full, row0)
-    ewma = jnp.where(fresh, val_full,
-                     row0 * (1.0 - alpha) + val_full * alpha)
+    ewma = jnp.where(fresh, val_full, ewma_blend(row0, val_full, alpha))
     new = jnp.where((col >= C) & (col < C + E), ewma, new)
     b = jax.lax.dynamic_slice(bins, (p, 0), (1, bins.shape[1]))
     for j in range(bins.shape[1]):       # static unroll: one hist per column

@@ -1,0 +1,7 @@
+from repro.kernels.fused_flow.kernel import (
+    LANE,
+    READOUT_MODES,
+    fused_flow_classify_padded,
+    vmem_bytes,
+)
+from repro.kernels.fused_flow.ops import fused_flow_classify

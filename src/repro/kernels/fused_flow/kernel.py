@@ -1,0 +1,186 @@
+"""Pallas kernel: the WHOLE stateful pipeline in ONE launch.
+
+``FlowKey -> RegisterUpdate -> feature-emit -> classifier`` previously
+cost two dispatches: the flow-update kernel (kernels/flow_update) wrote
+[B, W] feature rows back to HBM, and the fused-MLP kernel
+(kernels/fused_mlp) read them again.  Here the post-update feature rows
+feed the snapped-lane MLP matmuls *inside the same kernel body* — the
+register table AND the classifier weight stack are co-resident in VMEM
+for the launch, and only int32 verdicts (plus the updated table) cross
+the kernel boundary.  This is the Taurus per-packet story (PAPERS.md):
+stateful features and the ML decision as one dataplane pass.
+
+The update phase is literally ``flow_update.kernel._flow_phase`` — the
+segmented hybrid schedule (compacted lockstep rounds + doubly-compacted
+unrolled drain) — so state and features are bit-identical to the scan
+reference by the same per-slot decomposition.  The classifier phase
+(``_suffix_eval``) reproduces the two-dispatch composition bit for bit:
+
+  * the WindowStats readout is the same elementwise divide
+    (``hist / max(count, 1)``) the stage applies, with ``mode`` folded
+    statically (``all`` | ``hist`` | ``raw`` = no WindowStats);
+  * the matmul chain runs at the SAME snapped lane the stateless
+    lowering would pick (``fused_mlp.snap_lane`` over the same widths),
+    so every dot has the same reduction length — pad lanes are exact
+    zeros and per-row reductions round identically;
+  * padded lanes >= num_classes mask to -inf before the in-kernel argmax,
+    exactly as ``fused_mlp._classify_kernel``.
+
+Feature rows never exist in HBM at all: the suffix consumes them in
+SORTED (segment) order and the wrapper inverse-permutes only the [B]
+int32 verdicts back to arrival order.
+
+Grid: (1,) — the update phase is a sequential dependency chain; the
+register table, batch operands and weight stack are all VMEM-resident
+(``vmem_bytes`` is the feasibility claim).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flow_update.kernel import LANE, _flow_phase
+
+READOUT_MODES = ("all", "hist", "raw")
+
+
+def _suffix_eval(feats, w_stack, b_stack, *, head: int, mode: str,
+                 width: int, n_layers: int, num_classes: int, lane: int):
+    """Post-update feature rows -> int32 class ids, inside the kernel.
+
+    feats [B, >=width] f32 (zero beyond ``width``); w_stack
+    [L, lane, lane]; b_stack [L, lane].  Reproduces WindowStats.apply +
+    fused_mlp's ``_classify_kernel`` bit for bit: same elementwise
+    divide, same lane-padded dot shapes, same -inf argmax masking.
+    Rows that are all zero (ragged padding / sentinels) classify to the
+    bias chain's argmax — the engine slices those verdicts off."""
+    if mode not in READOUT_MODES:
+        raise KeyError(f"readout mode must be one of {READOUT_MODES}")
+    denom = jnp.maximum(feats[:, :1], 1.0)      # counter 0 = pkt count
+    if mode == "raw":
+        z = feats[:, :width]
+    elif mode == "hist":
+        z = feats[:, head:width] / denom
+    else:                                        # "all"
+        z = jnp.concatenate(
+            [feats[:, :head], feats[:, head:width] / denom], 1
+        )
+    z = jnp.pad(z, ((0, 0), (0, lane - z.shape[1])))
+    h = z.astype(jnp.float32)
+    for l in range(n_layers):   # static unroll: the whole DNN in-kernel
+        w = w_stack[l].astype(jnp.float32)
+        h = jnp.dot(h, w, preferred_element_type=jnp.float32)
+        h = h + b_stack[l][None, :]
+        if l < n_layers - 1:
+            h = jnp.maximum(h, 0.0)
+    lane_ids = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+    h = jnp.where(lane_ids < num_classes, h, -jnp.inf)
+    return jnp.argmax(h, axis=1).astype(jnp.int32)
+
+
+def _kernel(keys_ref, regs_ref, pk_ref, upd_ref, bins_ref, valid_ref,
+            rank_ref, segf_ref, segl_ref, segs_ref, dord_ref, dsid_ref,
+            dsrc_ref, w_ref, b_ref, keys_out, regs_out, verd_out, *,
+            n_counters: int, n_ewma: int, n_hists: int, alpha: float,
+            head: int, mode: str, width: int, n_layers: int,
+            num_classes: int, lane: int):
+    keys = keys_ref[...][:, 0]
+    regs = regs_ref[...]
+    pk = pk_ref[...][:, 0]
+    upd = upd_ref[...]
+    bins = bins_ref[...][:, :max(n_hists, 1)]
+    valid = valid_ref[...][:, 0]
+    rank = rank_ref[...][:, 0]
+    seg_first = segf_ref[...][:, 0]
+    seg_len = segl_ref[...][:, 0]
+    seg_slot = segs_ref[...][:, 0]
+    drain_order = dord_ref[...][:, 0]
+    drain_sid = dsid_ref[...][:, 0]
+    deep_src = dsrc_ref[...][:, 0]
+
+    keys2, regs2, feats = _flow_phase(
+        keys, regs, pk, upd, bins, valid, rank, seg_first, seg_len,
+        seg_slot, drain_order, drain_sid, deep_src,
+        n_counters=n_counters, n_ewma=n_ewma, alpha=alpha,
+    )
+    verd = _suffix_eval(
+        feats, w_ref[...], b_ref[...], head=head, mode=mode, width=width,
+        n_layers=n_layers, num_classes=num_classes, lane=lane,
+    )
+    keys_out[...] = jnp.pad(
+        keys2[:, None], ((0, 0), (0, keys_ref.shape[1] - 1))
+    )
+    regs_out[...] = regs2
+    verd_out[...] = jnp.broadcast_to(verd[:, None], verd_out.shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_counters", "n_ewma", "n_hists", "alpha", "head",
+                     "mode", "width", "n_layers", "num_classes", "lane",
+                     "interpret"),
+)
+def fused_flow_classify_padded(
+    keys, regs, pkt_keys, upd, bins, valid, rank, seg_first, seg_len,
+    seg_slot, drain_order, drain_sid, deep_src, w_stack, b_stack, *,
+    n_counters: int, n_ewma: int, n_hists: int, alpha: float, head: int,
+    mode: str, width: int, n_layers: int, num_classes: int, lane: int,
+    interpret: bool = False,
+):
+    """Padded/segmented operands -> (keys' [S, kw], regs' [S, w_pad],
+    verdicts [B_pad, kw] int32 in SORTED order, class id in column 0)."""
+    S, w_pad = regs.shape
+    B, k_w = pkt_keys.shape
+    d_rows = deep_src.shape[0]
+    full = lambda r, c: pl.BlockSpec((r, c), lambda i: (0, 0))
+    narrow = full(B, k_w)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, n_counters=n_counters, n_ewma=n_ewma,
+            n_hists=n_hists, alpha=alpha, head=head, mode=mode,
+            width=width, n_layers=n_layers, num_classes=num_classes,
+            lane=lane,
+        ),
+        grid=(1,),
+        in_specs=[
+            full(S, k_w),                        # stored keys
+            full(S, w_pad),                      # register rows
+            narrow,                              # pkt keys
+            full(B, upd.shape[1]),               # update vectors
+            full(B, bins.shape[1]),              # hist columns
+            narrow,                              # valid
+            narrow,                              # rank
+            narrow,                              # seg_first
+            narrow,                              # seg_len
+            narrow,                              # seg_slot
+            narrow,                              # drain_order
+            narrow,                              # drain_sid
+            full(d_rows, k_w),                   # deep_src
+            pl.BlockSpec((n_layers, lane, lane), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_layers, lane), lambda i: (0, 0)),
+        ],
+        out_specs=[full(S, k_w), full(S, w_pad), narrow],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, k_w), jnp.int32),
+            jax.ShapeDtypeStruct((S, w_pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, k_w), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys, regs, pkt_keys, upd, bins, valid, rank, seg_first, seg_len,
+      seg_slot, drain_order, drain_sid, deep_src, w_stack, b_stack)
+
+
+def vmem_bytes(n_slots: int, width: int, n_layers: int, lane: int,
+               batch: int = 256) -> int:
+    """Resident working set of the fused launch: the flow-update set plus
+    the classifier weight stack and one activation tile (feasibility
+    input; mirrors flow_update.vmem_bytes + fused_mlp.vmem_bytes)."""
+    from repro.kernels.flow_update.kernel import vmem_bytes as flow_bytes
+
+    weights = n_layers * (lane * lane + lane) * 4
+    act = 2 * batch * lane * 4
+    return flow_bytes(n_slots, width, batch) + weights + act

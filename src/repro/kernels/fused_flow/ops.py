@@ -1,0 +1,132 @@
+"""Public op: the whole stateful pipeline as ONE fused kernel launch.
+
+``fused_flow_classify(keys, regs, pkt_keys, upd, bins, valid, w_stack,
+b_stack, ...)`` segments the batch by slot (the same
+``flow_update.segment_batch`` prelude), launches the fused Pallas kernel
+(update phase + in-kernel classifier; interpret=True on CPU) and
+inverse-permutes the [B] int32 verdicts back to arrival order.  This is
+the executable artifact ``core.pallas_backend.lower_stateful_fused``
+emits for a fused-eligible stateful pipeline — the backend string
+``"pallas-fused-flow"`` means exactly this launch is serving.
+
+Weights arrive PRE-PACKED (``fused_mlp.pack_params`` at the snapped
+lane): packing happens once at lowering time, not per batch.
+
+Bit-identity contract: state, features and verdicts equal the
+two-dispatch composition (flow_update + WindowStats.apply + fused-MLP
+classify) bit for bit — the update phase is the shared ``_flow_phase``
+schedule and the classifier phase reuses the composition's lane-padded
+dot shapes (see kernels/fused_flow/kernel.py).  Outside the kernel
+envelope the op falls back to the jnp scan reference + the same suffix
+evaluation, and the drain-routing ``lax.cond`` (same profile as
+``flow_update``) routes near-degenerate batches — more than 7/8 of live
+packets deeper than ``PAR_ROUNDS`` in one chain — to that reference
+walk; every path computes identical bits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flow_update.ops import (
+    MAX_HISTS,
+    MAX_SLOTS,
+    MAX_WIDTH,
+    _snap,
+    pack_segmented_operands,
+    segment_batch,
+)
+from repro.kernels.flow_update.ref import flow_update_ref, hash_slot
+from repro.kernels.fused_flow.kernel import (
+    LANE,
+    _suffix_eval,
+    fused_flow_classify_padded,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_flow_classify(
+    keys: jax.Array,       # [S] int32 stored keys (-1 = empty)
+    regs: jax.Array,       # [S, W] f32 register rows
+    pkt_keys: jax.Array,   # [B] int32 per-packet flow keys (>= 0)
+    upd: jax.Array,        # [B, C+E] f32 counter increments ++ EWMA values
+    bins: jax.Array,       # [B, H] int32 absolute hist columns (-1 = none)
+    valid: jax.Array,      # [B] int-ish; 0 = padding row, never applied
+    w_stack: jax.Array,    # [L, lane, lane] packed layer weights
+    b_stack: jax.Array,    # [L, lane] packed biases
+    *,
+    n_counters: int,
+    n_ewma: int,
+    alpha: float,
+    mode: str,             # WindowStats readout: all | hist | raw (none)
+    num_classes: int,
+    lane: int,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (keys' [S], regs' [S, W], verdicts [B] int32), one kernel launch.
+
+    Verdicts are in arrival order; rows with ``valid == 0`` never touch
+    the table and classify the all-zero feature row (the engine slices
+    them off).  Bit-identical to the two-dispatch composition; see the
+    flow-state contract in docs/pipeline_ir.md."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    S, W = regs.shape
+    B = int(pkt_keys.shape[0])
+    H = int(bins.shape[1]) if bins.ndim == 2 else 0
+    head = n_counters + n_ewma
+    n_layers = int(w_stack.shape[0])
+
+    keys = jnp.asarray(keys, jnp.int32)
+    regs = jnp.asarray(regs, jnp.float32)
+    pkt_keys = jnp.asarray(pkt_keys, jnp.int32)
+    upd = jnp.asarray(upd, jnp.float32)
+    bins = jnp.asarray(bins, jnp.int32)
+    valid = jnp.asarray(valid, jnp.int32)
+
+    def suffix(feats):
+        return _suffix_eval(
+            feats, w_stack, b_stack, head=head, mode=mode, width=W,
+            n_layers=n_layers, num_classes=num_classes, lane=lane,
+        )
+
+    def reference_full():
+        k, r, feats = flow_update_ref(
+            keys, regs, pkt_keys, upd, bins, valid,
+            n_counters=n_counters, n_ewma=n_ewma, alpha=alpha,
+        )
+        return k, r, suffix(feats)
+
+    if S > MAX_SLOTS or W > MAX_WIDTH or H > MAX_HISTS or B == 0:
+        return reference_full()
+
+    tile = 8 if interpret else LANE
+    w_pad = _snap(W, tile)
+    u_pad = _snap(upd.shape[1], tile)
+    h_pad = _snap(H, tile) if not interpret else max(H, 1)
+
+    seg = segment_batch(hash_slot(pkt_keys, S), valid, S)
+
+    def launch(_):
+        ops = pack_segmented_operands(
+            seg, keys, regs, pkt_keys, upd, bins, valid,
+            tile=tile, w_pad=w_pad, u_pad=u_pad, h_pad=h_pad,
+        )
+        k_out, r_out, verd = fused_flow_classify_padded(
+            *ops, w_stack, b_stack, n_counters=n_counters, n_ewma=n_ewma,
+            n_hists=H, alpha=float(alpha), head=head, mode=mode, width=W,
+            n_layers=n_layers, num_classes=num_classes, lane=lane,
+            interpret=interpret,
+        )
+        # verdicts come back in sorted order: inverse-permute to arrival
+        return k_out[:, 0], r_out[:, :W], verd[:B, 0][seg.inv]
+
+    def reference(_):
+        return reference_full()
+
+    return jax.lax.cond(seg.n_deep * 8 > seg.n_live * 7,
+                        reference, launch, 0)

@@ -285,7 +285,8 @@ def test_stateful_pipeline_pallas_parity_and_with_backend(rng):
     stages = _mini_pipeline(spec)
     pi = StatefulPipeline(stages)
     pp = StatefulPipeline(stages, backend="pallas")
-    assert pp.backend == "pallas"
+    assert pp.backend == "pallas-fused-flow"
+    assert pp.fused
     assert pp.flow_backend == pp.classifier_backend == "pallas"
     X = _packets(rng, 40)
     si, vi = pi(pi.init_state(), X)

@@ -1,0 +1,211 @@
+"""Fused single-launch stateful path (kernels/fused_flow): parity,
+segmentation ordering, fallback honesty, with_backend regression.
+
+The flow-state contract's fused form: under ``backend="pallas"`` the
+whole ``FlowKey -> RegisterUpdate -> feature-emit -> classifier`` chain
+runs as ONE Pallas launch, bit-identical to the two-dispatch
+prefix+suffix composition — verdicts in arrival order and the same final
+register table.  These tests pin the guarantee over the collision
+patterns the slot-segmentation prelude must survive: one hot flow (deep
+sequential drain), all-distinct keys (pure lockstep rounds), all packets
+in the SAME slot with different keys (eviction chain), and ragged-tail
+valid masks."""
+
+import numpy as np
+import pytest
+
+from repro.core import pallas_backend, stageir
+from repro.flowstate import FlowStateSpec, StatefulPipeline
+from repro.kernels.fused_flow import fused_flow_classify
+from repro.kernels.fused_mlp import pack_params, snap_lane
+
+needs_pallas = pytest.mark.skipif(
+    not pallas_backend.pallas_available(),
+    reason="Pallas toolchain unavailable in this environment",
+)
+
+
+def _spec(n_slots=16):
+    return FlowStateSpec(n_slots=n_slots, n_counters=1, n_ewma=1,
+                         hist_sizes=(4,), ewma_alpha=0.25)
+
+
+def _stages(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    fk = stageir.FlowKey((0,), spec.n_slots)
+    ru = stageir.RegisterUpdate(
+        spec, ewma_cols=(1,), hist_cols=(1,),
+        hist_edges=(np.linspace(0, 1, spec.hist_sizes[0] + 1)[1:-1],),
+    )
+    ws = stageir.WindowStats(spec, mode="all")
+    w1 = rng.normal(size=(ws.n_out, 6)).astype(np.float32)
+    w2 = rng.normal(size=(6, 2)).astype(np.float32)
+    mlp = stageir.FusedMLP([w1, w2], [np.zeros(6, np.float32),
+                                      np.zeros(2, np.float32)])
+    return [fk, ru, ws, mlp, stageir.Reduce("argmax")]
+
+
+def _same_slot_keys(n, n_slots):
+    """n DISTINCT keys that all hash to one slot (eviction chain)."""
+    from repro.kernels.flow_update import hash_slot
+
+    cand = np.arange(1, 512 * n_slots, dtype=np.int32)
+    slots = np.asarray(hash_slot(cand, n_slots))
+    hit = cand[slots == slots[0]]
+    assert len(hit) >= n, "widen the candidate scan"
+    return hit[:n]
+
+
+def _traffic(rng, pattern, n, n_slots):
+    """[n, 2] packets keyed to exercise one segmentation regime."""
+    X = np.zeros((n, 2), np.float32)
+    if pattern == "one_hot_flow":       # ~90% one flow: deep drain chain
+        hot = rng.random(n) < 0.9
+        X[:, 0] = np.where(hot, 7, rng.integers(0, 200, n))
+    elif pattern == "all_distinct":     # every key unique: rounds only
+        X[:, 0] = np.arange(n) + 1
+    elif pattern == "same_slot":        # same slot, different keys: the
+        X[:, 0] = _same_slot_keys(n, n_slots)    # eviction chain
+    else:                               # mixed collision-heavy
+        X[:, 0] = rng.integers(0, 9, n)
+    X[:, 1] = rng.random(n)
+    return X
+
+
+@needs_pallas
+@pytest.mark.parametrize("pattern", ["one_hot_flow", "all_distinct",
+                                     "same_slot", "mixed"])
+def test_fused_parity_over_collision_patterns(rng, pattern):
+    """Fused launch == interpreter, bit for bit, over a multi-chunk
+    stream: verdicts in arrival order AND the final register table."""
+    spec = _spec()
+    stages = _stages(spec)
+    pi = StatefulPipeline(stages)
+    pp = StatefulPipeline(stages, backend="pallas")
+    assert pp.backend == "pallas-fused-flow"
+    si, sp = pi.init_state(), pp.init_state()
+    for chunk in range(4):
+        X = _traffic(rng, pattern, 96, spec.n_slots)
+        si, vi = pi(si, X)
+        sp, vp = pp(sp, X)
+        np.testing.assert_array_equal(vi, vp, err_msg=f"{pattern}#{chunk}")
+    np.testing.assert_array_equal(np.asarray(si.keys), np.asarray(sp.keys))
+    np.testing.assert_array_equal(np.asarray(si.regs), np.asarray(sp.regs))
+
+
+@needs_pallas
+def test_fused_parity_ragged_valid(rng):
+    """Padding rows (valid=0) never touch the table and the live
+    verdicts keep arrival order through the inverse permutation."""
+    spec = _spec()
+    stages = _stages(spec)
+    pi = StatefulPipeline(stages)
+    pp = StatefulPipeline(stages, backend="pallas")
+    X = _traffic(rng, "one_hot_flow", 64, spec.n_slots)
+    valid = np.ones(64, np.int32)
+    valid[40:] = 0                       # ragged tail
+    valid[rng.integers(0, 40, 5)] = 0    # holes mid-batch
+    si, vi = pi(pi.init_state(), X, valid)
+    sp, vp = pp(pp.init_state(), X, valid)
+    np.testing.assert_array_equal(np.asarray(si.keys), np.asarray(sp.keys))
+    np.testing.assert_array_equal(np.asarray(si.regs), np.asarray(sp.regs))
+    np.testing.assert_array_equal(vi[valid != 0], vp[valid != 0])
+
+
+@needs_pallas
+def test_fused_op_matches_stage_walk(rng):
+    """kernels/fused_flow.fused_flow_classify directly vs the independent
+    interpret path (scan-reference update + stage-walk suffix)."""
+    from repro.flowstate.registers import init_state, update_flows
+
+    spec = _spec()
+    stages = _stages(spec)
+    fk, ru = stages[0], stages[1]
+    suffix = stages[2:]
+    widths = [w.shape[0] for w in stages[3].weights] + [2]
+    lane = snap_lane(widths, interpret=True)
+    w_stack, b_stack = pack_params(stages[3].weights, stages[3].biases,
+                                   lane)
+    st = init_state(spec)
+    X = _traffic(rng, "same_slot", 80, spec.n_slots)
+    pkt_keys = fk.apply_keys(X)
+    upd, bins = ru.prepare(X)
+    valid = np.ones(80, np.int32)
+
+    keys2, regs2, verd = fused_flow_classify(
+        st.keys, st.regs, pkt_keys, upd, bins, valid, w_stack, b_stack,
+        n_counters=spec.n_counters, n_ewma=spec.n_ewma,
+        alpha=spec.ewma_alpha, mode="all", num_classes=2, lane=lane,
+    )
+    st_ref, feats_ref = update_flows(st, pkt_keys, upd, bins, valid)
+    verd_ref = stageir.apply_stages(suffix, feats_ref)
+    np.testing.assert_array_equal(np.asarray(verd), np.asarray(verd_ref))
+    np.testing.assert_array_equal(np.asarray(keys2),
+                                  np.asarray(st_ref.keys))
+    np.testing.assert_array_equal(np.asarray(regs2),
+                                  np.asarray(st_ref.regs))
+
+
+@needs_pallas
+def test_with_backend_preserves_fuse_flag():
+    """Regression: with_backend must thread ``fuse`` through — an
+    unfused pipeline must not silently come back fused."""
+    spec = _spec()
+    stages = _stages(spec)
+    unfused = StatefulPipeline(stages, backend="pallas", fuse=False)
+    assert not unfused.fused and unfused.backend == "pallas"
+    again = unfused.with_backend("pallas")
+    assert not again.fused and again.backend == "pallas"
+
+    fused = StatefulPipeline(stages, backend="pallas")
+    assert fused.fused
+    assert fused.with_backend("interpret").backend == "interpret"
+    assert fused.with_backend("interpret").with_backend("pallas").fused
+
+
+@needs_pallas
+def test_fused_fallback_stays_honest(rng):
+    """A suffix outside the fused envelope must NOT report the fused
+    backend — and still serve bit-identically to the interpreter."""
+    spec = _spec()
+    stages = _stages(spec)[:3] + [
+        stageir.CentroidDistance(np.asarray(
+            np.random.default_rng(1).normal(size=(3, stages_out(spec))),
+            np.float32)),
+        stageir.Reduce("argmin"),
+    ]
+    pp = StatefulPipeline(stages, backend="pallas")
+    assert not pp.fused
+    assert pp.backend in ("pallas", "mixed")
+    pi = StatefulPipeline(stages)
+    X = _traffic(rng, "mixed", 48, spec.n_slots)
+    _, vi = pi(pi.init_state(), X)
+    _, vp = pp(pp.init_state(), X)
+    np.testing.assert_array_equal(vi, vp)
+
+
+def stages_out(spec):
+    """WindowStats(mode='all') output width for ``spec``."""
+    return stageir.WindowStats(spec, mode="all").n_out
+
+
+@needs_pallas
+def test_fused_step_through_sharded_engine(rng):
+    """ShardedPacketServeEngine wraps the fused step (1-ary mesh on a
+    one-device host) and matches the interpreter engine's verdicts."""
+    from repro.serve import PacketServeEngine, ShardedPacketServeEngine
+
+    spec = _spec(n_slots=32)
+    stages = _stages(spec)
+    pp = StatefulPipeline(stages, backend="pallas")
+    assert pp.backend == "pallas-fused-flow"
+    X = _traffic(rng, "mixed", 300, spec.n_slots)
+    sh = ShardedPacketServeEngine(pp, feature_dim=2, max_batch=64,
+                                  min_shards=1)
+    sh.submit(X)
+    vs = sh.flush()
+    assert sh.stats()["backend"] == "pallas-fused-flow"
+    base = PacketServeEngine(StatefulPipeline(stages), feature_dim=2,
+                             max_batch=64)
+    base.submit(X)
+    np.testing.assert_array_equal(vs, base.flush())

@@ -409,7 +409,8 @@ def test_stateful_pipeline_backend_parity(data):
 
     pi = StatefulPipeline(stages, backend="interpret")
     pp = StatefulPipeline(stages, backend="pallas")
-    assert pi.backend == "interpret" and pp.backend == "pallas"
+    assert pi.backend == "interpret"
+    assert pp.backend == "pallas-fused-flow"
     assert pp.requested_backend == "pallas"
     si, vi = pi(pi.init_state(), X)
     sp, vp = pp(pp.init_state(), X)
