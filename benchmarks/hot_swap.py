@@ -1,0 +1,160 @@
+"""Hot-swap benchmark: swap latency + post-drift F1 recovery rows.
+
+Builds the ``concept_drift`` scenario's two models deterministically — a
+phase-A classifier (the signature before the drift) and its replacement
+trained on drifted traffic — then serves the drifting stream through
+``PacketServeEngine`` and ``ShardedPacketServeEngine`` with an atomic
+``swap`` injected at the detection point.  No background thread here:
+the benchmark measures the SWAP itself (park -> ring-boundary install
+latency, F1 before/after), not the retrain search, so the swap is
+injected at a fixed chunk boundary and repeated for a stable latency
+estimate.
+
+Asserts (structural, not timing): zero dropped packets across the swap,
+exactly one swap recorded with per-backend batch counts summing to the
+total, and post-swap F1 recovering on drifted traffic (the phase-A model
+degrades, the replacement does not).
+
+  PYTHONPATH=src python -m benchmarks.hot_swap
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import codegen, mlalgos
+from repro.data import traffic
+from repro.flowstate import StatefulPipeline
+from repro.serve import PacketServeEngine, ShardedPacketServeEngine
+
+from benchmarks.common import render_table, save_result
+
+CHUNK = 512
+N_PACKETS = 24_000
+N_SLOTS = 2048
+SPAN_S = 120.0
+REPEATS = 3
+# swap this many chunks after the drift onset (a patience-like detection
+# delay, so the degraded segment is non-empty and deterministic)
+DETECT_CHUNKS = 4
+
+
+def _drift_index(stream) -> int:
+    return int(np.searchsorted(stream.times, SPAN_S * traffic.DRIFT_FRAC))
+
+
+def build_pipelines():
+    """(phase-A pipeline, retrained pipeline, stages) — both share the
+    FlowStateSpec, so the swap carries the register table bit-identically."""
+    stages, names = traffic.flow_feature_stages(n_slots=N_SLOTS)
+    train = traffic.make_stream("concept_drift", n_packets=N_PACKETS,
+                                seed=0)
+    cut = _drift_index(train)
+    pipes = []
+    for seg in (train.slice(0, cut), train.slice(cut)):
+        ds, mu, sd = traffic.stream_feature_dataset(seg, stages, names,
+                                                    sample_every=2)
+        dnn = mlalgos.train_dnn(ds, hidden=[16, 8], epochs=3, seed=0)
+        suffix = traffic.fold_input_standardization(
+            codegen.taurus_stages(dnn), mu, sd
+        )
+        pipes.append(StatefulPipeline(list(stages) + suffix))
+    return pipes[0], pipes[1], stages
+
+
+def serve_with_swap(engine, old_pipe, new_pipe, stream, swap_chunk: int):
+    """Serve the stream, swapping at a fixed chunk boundary ->
+    (verdicts, stats dict)."""
+    verdicts = []
+    for i, chunk in enumerate(stream.chunks(CHUNK)):
+        if i == swap_chunk:
+            engine.swap(new_pipe)
+        engine.submit(chunk)
+        verdicts.append(engine.flush())
+    return np.concatenate(verdicts), engine.stats()
+
+
+def bench_engine(make_engine, label: str, old_pipe, new_pipe,
+                 stream) -> dict:
+    drift_idx = _drift_index(stream)
+    swap_chunk = drift_idx // CHUNK + DETECT_CHUNKS
+    lats, row = [], None
+    for _ in range(REPEATS):
+        eng = make_engine()
+        verdicts, stats = serve_with_swap(eng, old_pipe, new_pipe, stream,
+                                          swap_chunk)
+        # structural gates: nothing dropped, exactly one swap, and the
+        # per-backend batch counts account for every dispatched batch
+        assert len(verdicts) == stream.n_packets, (
+            f"dropped packets: {len(verdicts)} != {stream.n_packets}"
+        )
+        assert stats["swaps"] == 1, stats
+        assert sum(eng.stats_.backend_batches.values()) == stats["batches"]
+        lats.append(stats["swap_lat_ms"][0])
+        off = stats["swap_pkt_offsets"][0]
+        f1 = mlalgos.f1_score
+        row = {
+            "engine": label,
+            "pipeline": "flow-drift-swap",
+            "backend": stats["backend"],
+            "depth": stats["depth"],
+            "shards": stats["shards"],
+            "pkt_per_s": stats["pkt_per_s"],
+            "lat_p50_ms": stats["lat_p50_ms"],
+            "lat_p95_ms": stats["lat_p95_ms"],
+            "lat_p99_ms": stats["lat_p99_ms"],
+            "f1_pre_drift": round(f1(stream.labels[:drift_idx],
+                                     verdicts[:drift_idx]), 4),
+            "f1_post_drift": round(f1(stream.labels[drift_idx:off],
+                                      verdicts[drift_idx:off]), 4),
+            "f1_post_swap": round(f1(stream.labels[off:], verdicts[off:]),
+                                  4),
+        }
+    row["swap_lat_ms"] = round(float(np.median(lats)), 3)
+    # the recovery gate: the swap must matter (structural, not timing)
+    assert row["f1_pre_drift"] > 0.85, row
+    assert row["f1_post_drift"] < 0.5, row
+    assert row["f1_post_swap"] > 0.85, row
+    return row
+
+
+def main() -> dict:
+    old_pipe, new_pipe, _stages = build_pipelines()
+    stream = traffic.make_stream("concept_drift", n_packets=N_PACKETS,
+                                 seed=1)
+
+    feature_dim = len(traffic.COLUMNS)
+    rows = [
+        bench_engine(
+            lambda: PacketServeEngine(old_pipe, feature_dim=feature_dim,
+                                      max_batch=CHUNK, depth=2),
+            "PacketServeEngine", old_pipe, new_pipe, stream,
+        ),
+        bench_engine(
+            lambda: ShardedPacketServeEngine(
+                old_pipe, feature_dim=feature_dim, max_batch=CHUNK,
+                depth=2, min_shards=1,
+            ),
+            "ShardedPacketServeEngine", old_pipe, new_pipe, stream,
+        ),
+    ]
+
+    print("\n== hot swap: latency + F1 recovery ==")
+    print(render_table(
+        rows,
+        ["engine", "backend", "depth", "shards", "swap_lat_ms",
+         "f1_pre_drift", "f1_post_drift", "f1_post_swap", "pkt_per_s"],
+    ))
+
+    payload = {
+        "n_packets": N_PACKETS,
+        "chunk": CHUNK,
+        "repeats": REPEATS,
+        "serve_stats": rows,
+    }
+    save_result("hot_swap", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

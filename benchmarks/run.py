@@ -29,6 +29,7 @@ from benchmarks import (
     flow_throughput,
     fig6_reaction_time,
     fig7_kmeans_mats,
+    hot_swap,
     kernel_roofline,
     table2_f1,
     table3_chaining,
@@ -50,6 +51,7 @@ BENCHES = {
             dse_throughput.main),
     "flow": ("stateful flow pipeline: interpreter vs fused launch pkt/s",
              flow_throughput.main),
+    "swap": ("hot-swap latency + post-drift F1 recovery", hot_swap.main),
     "kernel": ("fused_mlp kernel roofline + stateful step",
                kernel_roofline.main),
     "dryrun": ("dry-run roofline summary", dryrun_roofline.main),
@@ -57,7 +59,7 @@ BENCHES = {
 
 
 # benches whose saved results carry "serve_stats" entries
-_SERVE_SOURCES = ("dag_throughput", "flow_throughput")
+_SERVE_SOURCES = ("dag_throughput", "flow_throughput", "hot_swap")
 
 
 def write_bench_serve() -> str | None:

@@ -453,3 +453,39 @@ def generate(
     )
     platform.generated = out
     return out
+
+
+def retrain_model(
+    platform: Platform,
+    data,
+    *,
+    name: str = "retrain",
+    metric: str = "f1",
+    algorithms: list[str] | None = None,
+    budget: int = 12,
+    n_init: int = 4,
+    seed: int = 0,
+    batch_k: int = 4,
+    cache: CandidateCache | None = GLOBAL_CACHE,
+) -> ModelResult:
+    """One-shot re-search over a FRESH dataset: the online-learning hook.
+
+    The drift loop (serve.online.BackgroundRetrainer) hands in a Dataset
+    assembled from recent drifted windows; this wraps it into a Model and
+    reruns the racer with the process-wide trained-candidate cache, so
+    every (algorithm, config, seed) pair whose content hash survived the
+    drift — i.e. anything retrained on identical data, plus the seed
+    anchors on repeat episodes — warm-starts instead of retraining.  The
+    default budget is deliberately smaller than an offline ``generate``:
+    a retrain races against ongoing traffic degradation, and the cache
+    plus the already-narrowed algorithm list close most of the gap."""
+    model = Model({
+        "name": name,
+        "optimization_metric": [metric],
+        "algorithm": list(algorithms) if algorithms else None,
+        "data_loader": lambda data=data: data,
+    })
+    return search_model(
+        platform, model, budget=budget, n_init=n_init, seed=seed,
+        batch_k=batch_k, cache=cache,
+    )

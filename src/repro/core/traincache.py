@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import threading
 
 from repro.core import mlalgos
 from repro.data.netdata import Dataset
@@ -56,6 +57,12 @@ class CandidateCache:
     arrays) stay resident, so a long-lived process racing many datasets /
     seeds does not grow without bound.  The default comfortably holds
     several full ``generate()`` searches.
+
+    Thread-safe: the online-learning loop (serve.online) retrains on a
+    background worker while the foreground may run its own searches
+    against ``GLOBAL_CACHE``, so every store access holds a lock.  The
+    lock protects the LRU bookkeeping (get's move-to-front mutates), not
+    just the dict ops.
     """
 
     _store: dict[str, mlalgos.TrainedModel] = dataclasses.field(
@@ -63,32 +70,38 @@ class CandidateCache:
     max_entries: int = 1024
     hits: int = 0
     misses: int = 0
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     def __len__(self) -> int:
         return len(self._store)
 
     def get(self, key: str) -> mlalgos.TrainedModel | None:
-        hit = self._store.get(key)
-        if hit is None:
-            self.misses += 1
-        else:
-            self.hits += 1
-            self._store[key] = self._store.pop(key)   # mark most-recent
-        return hit
+        with self._lock:
+            hit = self._store.get(key)
+            if hit is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+                self._store[key] = self._store.pop(key)   # mark most-recent
+            return hit
 
     def put(self, key: str, trained: mlalgos.TrainedModel) -> None:
-        self._store.pop(key, None)
-        self._store[key] = trained
-        while len(self._store) > self.max_entries:    # evict least-recent
-            self._store.pop(next(iter(self._store)))
+        with self._lock:
+            self._store.pop(key, None)
+            self._store[key] = trained
+            while len(self._store) > self.max_entries:  # evict least-recent
+                self._store.pop(next(iter(self._store)))
 
     def clear(self) -> None:
-        self._store.clear()
-        self.hits = self.misses = 0
+        with self._lock:
+            self._store.clear()
+            self.hits = self.misses = 0
 
     def stats(self) -> dict:
-        return {"entries": len(self._store), "hits": self.hits,
-                "misses": self.misses}
+        with self._lock:
+            return {"entries": len(self._store), "hits": self.hits,
+                    "misses": self.misses}
 
 
 # process-wide default: racing BOs across algorithms, repeated generate()

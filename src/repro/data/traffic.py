@@ -28,6 +28,12 @@ inherit the flow's):
                      SYN-sized flows sweeping ports
   ``elephant_mice``  heavy-hitter detection: few elephant flows (MTU
                      packets, tiny gaps, label 1) among many mice
+  ``concept_drift``  the attack SIGNATURE shifts mid-stream: phase A
+                     (before ``DRIFT_FRAC`` of the span) is a tiny-packet
+                     volumetric flood, phase B a stealth MTU flood whose
+                     per-packet shape mimics benign bulk transfers — a
+                     model trained on phase A degrades on phase B (the
+                     hot-swap loop's test scenario)
 
 Streams are deterministic in (scenario, seed, sizes) and replayable —
 ``PacketStream.chunks`` re-yields the identical sequence every call.
@@ -42,7 +48,12 @@ import numpy as np
 COLUMNS = ("flow_id", "pkt_len", "ipt_s", "dst_port")
 COL_FLOW, COL_LEN, COL_IPT, COL_PORT = range(4)
 
-SCENARIOS = ("benign", "ddos_burst", "port_scan", "elephant_mice")
+SCENARIOS = ("benign", "ddos_burst", "port_scan", "elephant_mice",
+             "concept_drift")
+
+# concept_drift: fraction of the span where phase B (the shifted attack
+# signature) begins — phase A attacks live strictly before it
+DRIFT_FRAC = 0.5
 
 
 @dataclasses.dataclass
@@ -54,6 +65,7 @@ class PacketStream:
     labels: np.ndarray         # [N] int32 per-packet (= flow label)
     flow_ids: np.ndarray       # [N] int32 (packets[:, COL_FLOW] as int)
     flow_labels: dict          # flow_id -> label
+    times: np.ndarray | None = None   # [N] f64 arrival timestamps
 
     @property
     def n_packets(self) -> int:
@@ -67,6 +79,18 @@ class PacketStream:
         """Replayable chunk iterator (fresh, identical sequence per call)."""
         for s in range(0, len(self.packets), size):
             yield self.packets[s:s + size]
+
+    def slice(self, start: int, stop: int | None = None) -> "PacketStream":
+        """A contiguous packet-index window as its own stream (flow_labels
+        keep only flows that appear — reaction metrics stay per-segment)."""
+        sl = slice(start, stop)
+        fids = self.flow_ids[sl]
+        present = set(int(f) for f in np.unique(fids))
+        return PacketStream(
+            self.scenario, self.packets[sl], self.labels[sl], fids,
+            {f: l for f, l in self.flow_labels.items() if f in present},
+            None if self.times is None else self.times[sl],
+        )
 
 
 # ------------------------------------------------------------- flow shapes
@@ -130,6 +154,30 @@ def _attack_flows(rng, scenario: str, span: float) -> list[dict]:
             gaps = rng.lognormal(np.log(8e-4), 0.4, n)
             flows.append(_flow(0, 1, rng.uniform(0, span * 0.3), sizes,
                                gaps, 443))
+    elif scenario == "concept_drift":
+        drift_t = span * DRIFT_FRAC
+        # phase A (< DRIFT_FRAC): the ddos_burst signature — many short
+        # tiny-packet high-rate flows onto one service port.  A model
+        # trained on this phase keys on the small-packet histogram mass.
+        for _ in range(70):
+            n = int(rng.integers(40, 120))
+            sizes = rng.normal(90, 25, n)
+            gaps = rng.lognormal(np.log(1.5e-3), 0.5, n)
+            flows.append(_flow(0, 1,
+                               rng.uniform(span * 0.05, drift_t * 0.7),
+                               sizes, gaps, 80))
+        # phase B (>= DRIFT_FRAC): a stealth MTU flood — per-packet shape
+        # mimics benign bulk transfers (MTU sizes, similar gaps, port
+        # 443); only flow VOLUME separates it (elephant lifetimes, so
+        # pkt/byte counters run far past any benign bulk flow).  The
+        # phase-A model sees none of its signature and misses it.
+        for _ in range(30):
+            n = int(rng.integers(500, 1100))
+            sizes = rng.normal(1430, 40, n)
+            gaps = rng.lognormal(np.log(8e-3), 0.3, n)
+            flows.append(_flow(0, 1,
+                               drift_t + rng.uniform(0, span * 0.25),
+                               sizes, gaps, 443))
     else:
         raise KeyError(scenario)
     return flows
@@ -192,7 +240,8 @@ def make_stream(scenario: str, *, n_packets: int = 30_000,
     ).astype(np.float32)
     flow_labels = {int(f["fid"]): int(f["label"]) for f in flows}
     return PacketStream(scenario, packets, lab[:n].astype(np.int32),
-                        fid[:n].astype(np.int32), flow_labels)
+                        fid[:n].astype(np.int32), flow_labels,
+                        times=t[:n].astype(np.float64))
 
 
 # ------------------------------------------------- stateful feature stages
@@ -250,16 +299,28 @@ def stream_feature_dataset(stream: PacketStream, stages, names,
     for c in stream.chunks(chunk):
         eng.submit(c)
         feats.append(eng.flush())
-    X = np.concatenate(feats, 0).astype(np.float32)
+    X = (np.concatenate(feats, 0).astype(np.float32) if feats
+         else np.zeros((0, len(list(names))), np.float32))
     y = stream.labels.astype(np.int32)
     X, y = X[::sample_every], y[::sample_every]
 
     rng = np.random.default_rng(seed)
     perm = rng.permutation(len(X))
-    n_test = int(len(X) * test_frac)
-    te, tr = perm[:n_test], perm[n_test:]
-    mu = X[tr].mean(0)
-    sd = X[tr].std(0) + 1e-6
+    # degenerate guards: a stream shorter than one window still yields a
+    # usable dataset — both splits non-empty whenever >= 2 rows exist, a
+    # single row serves as its own train AND test, zero rows standardize
+    # with identity moments (never NaN)
+    if len(X) >= 2:
+        n_test = min(max(1, int(len(X) * test_frac)), len(X) - 1)
+        te, tr = perm[:n_test], perm[n_test:]
+    else:
+        te = tr = perm
+    if len(tr):
+        mu = X[tr].mean(0)
+        sd = X[tr].std(0) + 1e-6
+    else:
+        mu = np.zeros(X.shape[1], np.float32)
+        sd = np.ones(X.shape[1], np.float32)
     ds = Dataset(
         name=f"flowstats-{stream.scenario}",
         train_x=((X[tr] - mu) / sd).astype(np.float32), train_y=y[tr],
@@ -326,14 +387,17 @@ def reaction_report(stream: PacketStream, verdicts: np.ndarray) -> dict:
             fp_flows += bool(len(hits))
     react_arr = np.asarray(react, np.float64)
     n_attack = len(react) + undetected
+    # sentinel 0.0 (not NaN) when nothing was detected / no attack flows
+    # exist: an all-benign stream must produce a json-clean, comparable
+    # report rather than NaNs that poison downstream aggregation
     return {
         "attack_flows": n_attack,
         "detected_flows": len(react),
         "detection_rate": (len(react) / n_attack) if n_attack else 0.0,
         "reaction_pkts_median": (float(np.median(react_arr))
-                                 if len(react) else float("nan")),
+                                 if len(react) else 0.0),
         "reaction_pkts_p95": (float(np.percentile(react_arr, 95))
-                              if len(react) else float("nan")),
+                              if len(react) else 0.0),
         "benign_fp_flow_rate": (fp_flows / benign_flows) if benign_flows
         else 0.0,
     }

@@ -5,6 +5,8 @@ from repro.flowstate.registers import (
     FlowState,
     FlowStateSpec,
     init_state,
+    migrate_state,
     update_flows,
 )
+from repro.flowstate.drift import DriftDetector, DriftSnapshot
 from repro.flowstate.pipeline import StatefulPipeline

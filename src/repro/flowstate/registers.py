@@ -114,6 +114,59 @@ def init_state(spec: FlowStateSpec) -> FlowState:
     )
 
 
+def hash_slot_np(keys: np.ndarray, n_slots: int) -> np.ndarray:
+    """Numpy twin of ``kernels.flow_update.ref.hash_slot`` — same Knuth
+    multiplicative mix, same xor-fold — for host-side table migration.
+    Pinned equal to the traceable form in tests/test_hot_swap.py."""
+    with np.errstate(over="ignore"):
+        h = np.asarray(keys).astype(np.uint32) * np.uint32(2654435761)
+    h = h ^ (h >> np.uint32(16))
+    return (h & np.uint32(n_slots - 1)).astype(np.int32)
+
+
+def migrate_state(state: FlowState, new_spec: FlowStateSpec) -> FlowState:
+    """The documented re-key path for a hot swap that CHANGES the spec
+    (docs/pipeline_ir.md#hot-swap-contract).  Same-spec swaps never come
+    here — the live table carries over bit-identically.
+
+    Every occupied row is re-hashed into the new table (``hash_slot`` over
+    ``new_spec.n_slots``), walking slots in ascending order with the table's
+    own collision policy: two old flows landing on one new slot resolve
+    last-writer-wins, exactly as live eviction would.  Register columns
+    carry over section by section — the shared prefix of counters, the
+    shared prefix of EWMAs, and each histogram section up to the smaller
+    bin count — anything the new spec adds starts at zero, anything it
+    drops is discarded.  This is a host-side control-plane operation (one
+    table scan), not a per-packet path."""
+    old = state.spec
+    keys = np.asarray(state.keys)
+    regs = np.asarray(state.regs)
+    out_k = np.full((new_spec.n_slots,), -1, np.int32)
+    out_r = np.zeros((new_spec.n_slots, new_spec.width), np.float32)
+
+    # (old column, new column) pairs of the shared layout sections
+    pairs: list[tuple[int, int]] = []
+    for j in range(min(old.n_counters, new_spec.n_counters)):
+        pairs.append((j, j))
+    for j in range(min(old.n_ewma, new_spec.n_ewma)):
+        pairs.append((old.n_counters + j, new_spec.n_counters + j))
+    for h, (o_off, n_off) in enumerate(
+        zip(old.hist_offsets, new_spec.hist_offsets)
+    ):
+        for j in range(min(old.hist_sizes[h], new_spec.hist_sizes[h])):
+            pairs.append((o_off + j, n_off + j))
+    o_cols = np.array([p[0] for p in pairs], np.int64)
+    n_cols = np.array([p[1] for p in pairs], np.int64)
+
+    occupied = np.flatnonzero(keys >= 0)      # ascending slot order
+    slots = hash_slot_np(keys[occupied], new_spec.n_slots)
+    for i, s in zip(occupied, slots):         # last-writer-wins collisions
+        out_k[s] = keys[i]
+        out_r[s] = 0.0
+        out_r[s, n_cols] = regs[i, o_cols]
+    return FlowState(new_spec, jnp.asarray(out_k), jnp.asarray(out_r))
+
+
 def update_flows(
     state: FlowState,
     pkt_keys,              # [B] int32 flow key per packet (>= 0)

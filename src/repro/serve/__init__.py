@@ -5,5 +5,6 @@ from repro.serve.steps import (
     init_cache,
 )
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.online import BackgroundRetrainer, HotSwapController
 from repro.serve.packet_engine import PacketServeEngine, ServeStats
 from repro.serve.sharded import ShardedFlowState, ShardedPacketServeEngine

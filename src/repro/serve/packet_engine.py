@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import Any, Callable, Iterable, Iterator
 
@@ -61,6 +62,17 @@ class ServeStats:
     packets: int = 0
     batches: int = 0
     pad_packets: int = 0           # zero-rows added to fill the last batch
+    # hot-swap accounting (docs/pipeline_ir.md#hot-swap-contract): each
+    # installed swap records its end-to-end latency (swap() request ->
+    # ring-boundary install, warm-up compile included) and the packet
+    # offset of the boundary — packets [0, off) were served by the model
+    # before the swap, packets [off, ...) by the model after it
+    swaps: int = 0
+    swap_lat_s: list = dataclasses.field(default_factory=list)
+    swap_pkt_offsets: list = dataclasses.field(default_factory=list)
+    # batch count per serving engine, accumulated at dispatch time so the
+    # split stays correct across hot swaps that change the backend
+    backend_counts: dict = dataclasses.field(default_factory=dict)
     # active serving span: dispatch of a batch -> its result materialized,
     # with overlapping in-flight windows merged (never double-counted), so
     # packets / wall_s is honest throughput under depth>1 overlap
@@ -108,11 +120,27 @@ class ServeStats:
 
     @property
     def backend_batches(self) -> dict:
-        """Batch count per serving engine.  One engine serves the whole
-        compiled executable, so this is derived; a DAG mixing engines
-        per-model reports as "mixed" here with the per-model detail on
-        ``CompiledDag.model_backends``."""
+        """Batch count per serving engine, accumulated per dispatched
+        batch — across a hot swap the old and new engines keep separate
+        counts.  A DAG mixing engines per-model reports as "mixed" here
+        with the per-model detail on ``CompiledDag.model_backends``."""
+        if self.backend_counts:
+            return dict(self.backend_counts)
         return {self.backend: self.batches} if self.batches else {}
+
+    def count_batch(self, backend: str, n: int, pad: int = 0) -> None:
+        """Record one dispatched batch of ``n`` real rows on ``backend``."""
+        self.batches += 1
+        self.packets += n
+        self.pad_packets += pad
+        self.backend_counts[backend] = \
+            self.backend_counts.get(backend, 0) + 1
+
+    def record_swap(self, lat_s: float) -> None:
+        """Record one installed hot swap at the current packet offset."""
+        self.swaps += 1
+        self.swap_lat_s.append(float(lat_s))
+        self.swap_pkt_offsets.append(int(self.packets))
 
     def as_dict(self) -> dict:
         return {
@@ -129,6 +157,9 @@ class ServeStats:
             "backend_batches": self.backend_batches,
             "depth": self.depth,
             "shards": self.shards,
+            "swaps": self.swaps,
+            "swap_lat_ms": [round(s * 1e3, 3) for s in self.swap_lat_s],
+            "swap_pkt_offsets": [int(p) for p in self.swap_pkt_offsets],
         }
 
 
@@ -178,6 +209,18 @@ def _rebind_backend(pipeline, backend: str):
     return pipeline
 
 
+def _pipeline_backend(pipeline) -> str:
+    """The engine a compiled pipeline reports it actually serves on."""
+    from repro.core import stageir
+
+    backend = getattr(pipeline, "backend", "interpret")
+    if backend not in stageir.REPORT_BACKENDS:
+        backend = "interpret"          # e.g. Pipeline.backend == "taurus"
+    if hasattr(pipeline, "compiled_backend"):        # codegen.Pipeline
+        backend = pipeline.compiled_backend
+    return backend
+
+
 class PacketServeEngine:
     """Micro-batching front-end over one compiled pipeline/DAG callable.
 
@@ -217,17 +260,11 @@ class PacketServeEngine:
     def __init__(self, pipeline: Callable[[np.ndarray], np.ndarray], *,
                  feature_dim: int, max_batch: int = 256,
                  backend: str | None = None, state=None, depth: int = 2):
-        from repro.core import stageir
-
         if backend is not None:
             pipeline = _rebind_backend(pipeline, backend)
         self.pipeline = pipeline
         # engine provenance: "interpret" unless the callable says otherwise
-        self.backend = getattr(pipeline, "backend", "interpret")
-        if self.backend not in stageir.REPORT_BACKENDS:
-            self.backend = "interpret"   # e.g. Pipeline.backend == "taurus"
-        if hasattr(pipeline, "compiled_backend"):   # codegen.Pipeline
-            self.backend = pipeline.compiled_backend
+        self.backend = _pipeline_backend(pipeline)
         self.feature_dim = int(feature_dim)
         self.max_batch = int(max_batch)
         self.depth = max(1, int(depth))
@@ -254,6 +291,11 @@ class PacketServeEngine:
         ]
         self._staging_i = 0
         self._mark: float | None = None   # active-span bookkeeping
+        # hot-swap plumbing: swap() (any thread) prepares a new pipeline
+        # and parks it here; the serving path installs it at the next
+        # dispatch-ring boundary (docs/pipeline_ir.md#hot-swap-contract)
+        self._swap_lock = threading.Lock()
+        self._pending_swap: tuple | None = None
         self.stats_ = ServeStats(backend=self.backend, depth=self.depth)
         self._warm_up()
 
@@ -334,13 +376,13 @@ class PacketServeEngine:
 
     def _dispatch_batch(self, rows: np.ndarray) -> int:
         """Stage + launch one batch; returns rows actually dispatched."""
+        self._maybe_install_swap()     # dispatch-ring boundary
         n = len(rows)
         pad = self.max_batch - n
         buf, valid = self._next_staging()
         buf[:n] = rows
         if pad:
             buf[n:] = 0.0
-            self.stats_.pad_packets += pad
         t0 = time.perf_counter()
         if not self._inflight:
             self._mark = t0            # new active-serving span
@@ -356,10 +398,95 @@ class PacketServeEngine:
         # call; anything else is a lazy device handle fetched later
         ready = t1 if isinstance(out, np.ndarray) else None
         self.stats_.dispatch_s += t1 - t0
-        self.stats_.batches += 1
-        self.stats_.packets += n
+        self.stats_.count_batch(self.backend, n, pad)
         self._inflight.append(_InFlight(n, out, t0, ready))
         return n
+
+    # ---------------------------------------------------------- hot swap
+
+    def swap(self, pipeline, *, backend: str | None = None) -> None:
+        """Install ``pipeline`` at the next dispatch-ring boundary.
+
+        Zero-downtime model replacement (the hot-swap contract,
+        docs/pipeline_ir.md#hot-swap-contract): the new pipeline is
+        compiled and warmed HERE, off the serving hot path — typically on
+        a background retrain thread — then parked; the serving loop
+        installs it between two dispatches, so in-flight batches finish
+        on the old model, no batch is dropped or reordered, and from the
+        recorded boundary (``stats()["swap_pkt_offsets"]``) on every
+        verdict comes from the new model.
+
+        Stateful engines carry the live ``FlowState`` across the swap
+        bit-identically when the new pipeline shares the old
+        ``FlowStateSpec``; a changed spec migrates the table through the
+        documented re-key path (``flowstate.registers.migrate_state``).
+        Swapping between stateless and stateful pipelines is an error —
+        that is a different engine, not a new model."""
+        t_req = time.perf_counter()
+        if backend is not None:
+            pipeline = _rebind_backend(pipeline, backend)
+        stateful = hasattr(pipeline, "init_state")
+        if stateful != self._stateful:
+            raise ValueError(
+                "hot swap cannot change statefulness: engine is "
+                f"{'stateful' if self._stateful else 'stateless'}, new "
+                f"pipeline is {'stateful' if stateful else 'stateless'}"
+            )
+        payload = self._prepare_swap(pipeline)
+        with self._swap_lock:
+            self._pending_swap = (payload, t_req)
+
+    @property
+    def swap_pending(self) -> bool:
+        return self._pending_swap is not None
+
+    def _prepare_swap(self, pipeline) -> dict:
+        """Compile + warm the new pipeline on throwaway inputs so the
+        install itself is O(1) — never a recompile on the serving path."""
+        zeros = np.zeros((self.max_batch, self.feature_dim), np.float32)
+        if self._stateful:
+            # throwaway table: the live state is NOT touched until install
+            out = pipeline(pipeline.init_state(), zeros,
+                           np.zeros(self.max_batch, np.int32))
+            np.asarray(out[1])
+        else:
+            np.asarray(pipeline(zeros))
+        return {"pipeline": pipeline}
+
+    def _maybe_install_swap(self) -> None:
+        # lock-free fast path: this runs at EVERY ring boundary, and the
+        # single attribute read is atomic — the lock is only needed to
+        # claim an actually-parked swap
+        if self._pending_swap is None:
+            return
+        with self._swap_lock:
+            pending, self._pending_swap = self._pending_swap, None
+        if pending is None:
+            return
+        payload, t_req = pending
+        self._install_swap(payload)
+        self.stats_.record_swap(time.perf_counter() - t_req)
+
+    def _install_swap(self, payload: dict) -> None:
+        pipeline = payload["pipeline"]
+        self._carry_state(pipeline)
+        self.pipeline = pipeline
+        self.backend = _pipeline_backend(pipeline)
+        self._dispatch_fn = getattr(pipeline, "dispatch", pipeline)
+
+    def _carry_state(self, pipeline) -> None:
+        """Same spec: registers carry over bit-identically (the live
+        arrays are simply kept).  Changed spec: the documented re-key
+        migration (see the hot-swap contract)."""
+        if not self._stateful:
+            return
+        new_spec = getattr(pipeline, "spec", None)
+        old_spec = getattr(self.state, "spec", None)
+        if new_spec is None or old_spec is None or new_spec == old_spec:
+            return
+        from repro.flowstate.registers import migrate_state
+
+        self.state = migrate_state(self.state, new_spec)
 
     def _fetch_one(self) -> np.ndarray:
         """Materialize the oldest in-flight batch (FIFO: arrival order)."""
@@ -397,6 +524,10 @@ class PacketServeEngine:
             )
         while self._inflight:
             outs.append(self._fetch_one())
+        # the ring is drained: a boundary — install any pending swap even
+        # when no further traffic arrives, so a swap never sits parked
+        # past a flush
+        self._maybe_install_swap()
         if not outs:
             return np.zeros((0,), np.int32)
         return outs[0] if len(outs) == 1 else np.concatenate(outs, 0)

@@ -165,6 +165,7 @@ class ShardedPacketServeEngine(PacketServeEngine):
 
     def _dispatch_routed(self, rows: np.ndarray) -> int:
         """Stateful sharding: route rows to their flow's device table."""
+        self._maybe_install_swap()     # dispatch-ring boundary
         keys = self._flowkey.apply_keys_np(rows)
         shard_ids = shard_of_key(keys, self.n_shards)
         m, perm = route_prefix(shard_ids, self.n_shards, self._sub_batch)
@@ -181,7 +182,6 @@ class ShardedPacketServeEngine(PacketServeEngine):
         for s, idx in enumerate(perm):
             x[s, :len(idx)] = rows[idx]
             v[s, :len(idx)] = 1
-        self.stats_.pad_packets += self.max_batch - m
 
         t0 = time.perf_counter()
         if not self._inflight:
@@ -189,8 +189,7 @@ class ShardedPacketServeEngine(PacketServeEngine):
         self.state, out = self._launch_stateful(buf, valid)
         t1 = time.perf_counter()
         self.stats_.dispatch_s += t1 - t0
-        self.stats_.batches += 1
-        self.stats_.packets += m
+        self.stats_.count_batch(self.backend, m, self.max_batch - m)
         self._inflight.append(_InFlight(m, out, t0, None, perm=perm))
         return m
 
@@ -213,6 +212,91 @@ class ShardedPacketServeEngine(PacketServeEngine):
         for s, idx in enumerate(f.perm):
             out[idx] = v[s, :len(idx)]
         return out
+
+    # ---------------------------------------------------------- hot swap
+
+    def _prepare_swap(self, pipeline) -> dict:
+        """Build + warm the NEW shard_map step off the serving path.
+
+        The swap must keep the engine sharded: a pipeline shard_map cannot
+        trace (a bare callable) is rejected rather than silently degrading
+        a multi-device engine to one device mid-stream.  Stateful swaps
+        must also keep the flow-key columns — the shard a flow lives on is
+        a pure function of its key, so changed key columns would strand
+        rows on the wrong device's table (re-key across shards is a
+        restart, not a swap — see the hot-swap contract)."""
+        if not self.sharded:
+            return super()._prepare_swap(pipeline)
+        traceable = _traceable_fn(pipeline)
+        if traceable is None:
+            raise ValueError(
+                "cannot hot-swap an untraceable pipeline into a sharded "
+                "engine (shard_map needs a traceable program)"
+            )
+        payload = {"pipeline": pipeline}
+        mesh, fn = _build_sharded_step(
+            traceable, self.devices, stateful=self._stateful
+        )
+        payload["mesh"], payload["fn"] = mesh, fn
+        b = self._sub_batch
+        if self._stateful:
+            from repro.core import stageir
+
+            flowkey = next(s for s in pipeline.stages
+                           if isinstance(s, stageir.FlowKey))
+            if tuple(flowkey.key_cols) != tuple(self._flowkey.key_cols):
+                raise ValueError(
+                    "sharded hot swap must preserve FlowKey.key_cols "
+                    f"(flows are key-partitioned across shards): "
+                    f"{tuple(self._flowkey.key_cols)} -> "
+                    f"{tuple(flowkey.key_cols)}"
+                )
+            payload["flowkey"] = flowkey
+            tmp = _init_sharded_state(pipeline, self.n_shards)
+            import jax.numpy as jnp
+
+            x = jnp.zeros((self.n_shards, b, self.feature_dim), jnp.float32)
+            v = jnp.zeros((self.n_shards, b), jnp.int32)
+            np.asarray(fn(tmp.keys, tmp.regs, x, v)[2])
+        else:
+            np.asarray(fn(np.zeros((self.max_batch, self.feature_dim),
+                                   np.float32)))
+        return payload
+
+    def _install_swap(self, payload: dict) -> None:
+        if not self.sharded:
+            return super()._install_swap(payload)
+        super()._install_swap(payload)
+        self._sharded_fn = payload["fn"]
+        self._mesh = payload["mesh"]
+        if self._stateful:
+            self._flowkey = payload["flowkey"]
+        else:
+            self._dispatch_fn = self._sharded_fn
+
+    def _carry_state(self, pipeline) -> None:
+        if not (self.sharded and self._stateful):
+            return super()._carry_state(pipeline)
+        new_spec = getattr(pipeline, "spec", None)
+        if new_spec is None or new_spec == self.state.spec:
+            return                     # bit-identical carry-over
+        from repro.flowstate.registers import FlowState, migrate_state
+
+        import jax.numpy as jnp
+
+        keys, regs = [], []
+        for d in range(self.n_shards):  # re-key each shard's private table
+            m = migrate_state(
+                FlowState(self.state.spec,
+                          jnp.asarray(np.asarray(self.state.keys)[d]),
+                          jnp.asarray(np.asarray(self.state.regs)[d])),
+                new_spec,
+            )
+            keys.append(np.asarray(m.keys))
+            regs.append(np.asarray(m.regs))
+        self.state = ShardedFlowState(
+            new_spec, jnp.asarray(np.stack(keys)), jnp.asarray(np.stack(regs))
+        )
 
 
 def _traceable_fn(pipeline):

@@ -1,0 +1,401 @@
+"""Hot-swap contract (docs/pipeline_ir.md#hot-swap-contract), tier-1.
+
+The core property: a ``swap`` injected between arbitrary ``submit`` calls
+under the overlap engine (depth > 1) never drops or reorders verdicts —
+the stream output equals old-model verdicts for every packet before the
+recorded boundary and new-model verdicts after, for stateless AND
+stateful pipelines, with the register file carried bit-identically
+across a same-spec swap.  Plus: the changed-spec migration path
+(``migrate_state``), the drift detector / online controller, and the
+stats fields the swap adds."""
+
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stageir
+from repro.flowstate import (
+    DriftDetector,
+    DriftSnapshot,
+    FlowStateSpec,
+    StatefulPipeline,
+    init_state,
+    migrate_state,
+)
+from repro.flowstate.registers import FlowState, hash_slot_np
+from repro.serve import HotSwapController, PacketServeEngine
+
+HSET = settings(max_examples=10, deadline=None)
+
+OLD_TAG = 0
+NEW_TAG = 1_000_000
+
+
+def _tagged(n, start=0):
+    out = np.zeros((n, 2), np.float32)
+    out[:, 0] = np.arange(start, start + n)
+    return out
+
+
+def _spec(n_slots=16, n_counters=1, n_ewma=1, hist=(3,)):
+    return FlowStateSpec(n_slots=n_slots, n_counters=n_counters,
+                         n_ewma=n_ewma, hist_sizes=hist, ewma_alpha=0.5)
+
+
+def _flow_stages(spec, extra_counter=False):
+    fk = stageir.FlowKey((0,), spec.n_slots)
+    ru = stageir.RegisterUpdate(
+        spec, counter_cols=(1,) if extra_counter else (),
+        ewma_cols=(1,), hist_cols=(1,),
+        hist_edges=(np.linspace(0, 1, 4)[1:-1],),
+    )
+    return [fk, ru, stageir.WindowStats(spec, mode="all")]
+
+
+def _classifier_pipeline(spec, seed):
+    """Flow prefix + a seed-dependent MLP: two pipelines with different
+    seeds share the register file but emit different verdicts."""
+    base = _flow_stages(spec)
+    rng = np.random.default_rng(seed)
+    n_in = base[2].n_out
+    w1 = rng.normal(size=(n_in, 6)).astype(np.float32)
+    w2 = rng.normal(size=(6, 2)).astype(np.float32)
+    mlp = stageir.FusedMLP([w1, w2], [np.zeros(6, np.float32),
+                                      np.zeros(2, np.float32)])
+    return StatefulPipeline(base + [mlp, stageir.Reduce("argmax")])
+
+
+def _flow_packets(rng, n):
+    X = np.zeros((n, 2), np.float32)
+    X[:, 0] = rng.integers(0, 6, n)
+    X[:, 1] = rng.random(n)
+    return X
+
+
+# ----------------------------------------- swap ordering property (tentpole)
+
+
+@given(data=st.data())
+@HSET
+def test_stateless_swap_never_drops_or_reorders_under_overlap(data):
+    """Arbitrary submit/flush interleavings with ONE swap injected at an
+    arbitrary point: output == old verdicts before the recorded boundary,
+    new verdicts after, length preserved."""
+    old = jax.jit(lambda x: x[:, 0].astype("int32") + OLD_TAG)
+    new = jax.jit(lambda x: x[:, 0].astype("int32") + NEW_TAG)
+    eng = PacketServeEngine(old, feature_dim=2,
+                            max_batch=data.draw(st.integers(2, 17)),
+                            depth=data.draw(st.integers(2, 4)))
+    n_ops = data.draw(st.integers(1, 8))
+    swap_at = data.draw(st.integers(0, n_ops - 1))
+    total, got = 0, []
+    for i in range(n_ops):
+        if i == swap_at:
+            eng.swap(new)
+        n = data.draw(st.integers(1, 53))
+        eng.submit(_tagged(n, start=total))
+        total += n
+        if data.draw(st.booleans()):
+            got.append(eng.flush())
+    got.append(eng.flush())
+    verdicts = np.concatenate([g for g in got if len(g)])
+
+    assert len(verdicts) == total, "a batch was dropped across the swap"
+    assert eng.stats_.swaps == 1
+    off = eng.stats_.swap_pkt_offsets[0]
+    np.testing.assert_array_equal(verdicts[:off],
+                                  np.arange(off) + OLD_TAG)
+    np.testing.assert_array_equal(verdicts[off:],
+                                  np.arange(off, total) + NEW_TAG)
+    # per-backend batch counts account for every dispatched batch
+    assert sum(eng.stats_.backend_counts.values()) == eng.stats_.batches
+
+
+@given(data=st.data())
+@HSET
+def test_stateful_swap_preserves_order_and_carries_state(data):
+    """Same property on the stateful path: verdicts split exactly at the
+    boundary between the two classifiers, and the register file equals a
+    reference run that switches pipelines at the same packet — i.e. the
+    table carried over bit-identically (same spec)."""
+    spec = _spec()
+    p_old = _classifier_pipeline(spec, seed=7)
+    p_new = _classifier_pipeline(spec, seed=11)
+
+    rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+    X = _flow_packets(rng, data.draw(st.integers(10, 120)))
+    eng = PacketServeEngine(p_old, feature_dim=2,
+                            max_batch=data.draw(st.integers(2, 19)),
+                            depth=data.draw(st.integers(2, 4)))
+    n_ops = data.draw(st.integers(1, 6))
+    swap_at = data.draw(st.integers(0, n_ops - 1))
+    got, pos = [], 0
+    for i in range(n_ops):
+        if i == swap_at:
+            eng.swap(p_new)
+        n = min(data.draw(st.integers(1, 31)), len(X) - pos)
+        if n:
+            eng.submit(X[pos:pos + n])
+            pos += n
+        if data.draw(st.booleans()):
+            got.append(eng.flush())
+    got.append(eng.flush())
+    verdicts = np.concatenate([g for g in got if len(g)])
+
+    assert len(verdicts) == pos
+    assert eng.stats_.swaps == 1
+    off = min(eng.stats_.swap_pkt_offsets[0], pos)
+
+    # reference: one continuous register file, classifier switched at off
+    ref_old = _classifier_pipeline(spec, seed=7)
+    state = ref_old.init_state()
+    ref = []
+    if off:
+        state, v = ref_old(state, X[:off])
+        ref.append(v)
+    if pos - off:
+        ref_new = _classifier_pipeline(spec, seed=11)
+        state, v = ref_new(state, X[off:pos])
+        ref.append(v)
+    np.testing.assert_array_equal(verdicts, np.concatenate(ref))
+    np.testing.assert_array_equal(np.asarray(eng.state.keys),
+                                  np.asarray(state.keys))
+    np.testing.assert_array_equal(np.asarray(eng.state.regs),
+                                  np.asarray(state.regs))
+
+
+# ------------------------------------------------------------ swap API edges
+
+
+def test_swap_rejects_statefulness_change():
+    spec = _spec()
+    stateless = jax.jit(lambda x: x[:, 0].astype("int32"))
+    eng = PacketServeEngine(stateless, feature_dim=2, max_batch=8)
+    with pytest.raises(ValueError, match="statefulness"):
+        eng.swap(StatefulPipeline(_flow_stages(spec)))
+
+    eng_sf = PacketServeEngine(StatefulPipeline(_flow_stages(spec)),
+                               feature_dim=2, max_batch=8)
+    with pytest.raises(ValueError, match="statefulness"):
+        eng_sf.swap(stateless)
+
+
+def test_swap_installs_on_flush_without_traffic():
+    """A parked swap never outlives a flush: the drained ring is a
+    boundary even when no further packets arrive."""
+    old = jax.jit(lambda x: x[:, 0].astype("int32"))
+    new = jax.jit(lambda x: x[:, 0].astype("int32") + 1)
+    eng = PacketServeEngine(old, feature_dim=2, max_batch=8, depth=3)
+    eng.submit(_tagged(20))
+    eng.flush()
+    eng.swap(new)
+    assert eng.swap_pending
+    out = eng.flush()                  # no pending traffic
+    assert len(out) == 0
+    assert not eng.swap_pending
+    assert eng.stats_.swaps == 1
+    assert eng.pipeline is new
+    eng.submit(_tagged(4))
+    np.testing.assert_array_equal(eng.flush(), np.arange(4) + 1)
+
+
+def test_serve_stats_as_dict_json_round_trips_after_swap():
+    """No numpy scalars / non-serializable values leak into the new
+    swaps/latency fields (regression: json.dumps must succeed and parse
+    back equal)."""
+    spec = _spec()
+    eng = PacketServeEngine(_classifier_pipeline(spec, 7), feature_dim=2,
+                            max_batch=8, depth=2)
+    rng = np.random.default_rng(0)
+    eng.submit(_flow_packets(rng, 30))
+    eng.flush()
+    eng.swap(_classifier_pipeline(spec, 11))
+    eng.submit(_flow_packets(rng, 30))
+    eng.flush()
+    d = eng.stats()
+    blob = json.dumps(d)
+    assert json.loads(blob) == d
+    assert d["swaps"] == 1
+    assert len(d["swap_lat_ms"]) == len(d["swap_pkt_offsets"]) == 1
+    assert isinstance(d["swap_pkt_offsets"][0], int)
+    assert sum(d["backend_batches"].values()) == d["batches"]
+
+
+def test_swap_changed_spec_migrates_live_table():
+    spec = _spec(n_slots=16)
+    eng = PacketServeEngine(StatefulPipeline(_flow_stages(spec)),
+                            feature_dim=2, max_batch=8)
+    rng = np.random.default_rng(1)
+    eng.submit(_flow_packets(rng, 40))
+    eng.flush()
+    before = eng.state
+    spec2 = _spec(n_slots=64)
+    eng.swap(StatefulPipeline(_flow_stages(spec2)))
+    eng.flush()
+    assert eng.state.spec == spec2
+    expect = migrate_state(before, spec2)
+    np.testing.assert_array_equal(np.asarray(eng.state.keys),
+                                  np.asarray(expect.keys))
+    np.testing.assert_array_equal(np.asarray(eng.state.regs),
+                                  np.asarray(expect.regs))
+    # serving continues on the migrated table
+    eng.submit(_flow_packets(rng, 10))
+    assert len(eng.flush()) == 10
+
+
+# ------------------------------------------------------- migrate_state rules
+
+
+def test_hash_slot_np_matches_kernel_reference(rng):
+    from repro.kernels.flow_update.ref import hash_slot
+
+    keys = rng.integers(0, 1 << 31, 500).astype(np.int32)
+    for n_slots in (16, 64, 1024):
+        np.testing.assert_array_equal(
+            hash_slot_np(keys, n_slots),
+            np.asarray(hash_slot(keys, n_slots)),
+        )
+
+
+def test_migrate_state_rekeys_and_carries_shared_sections():
+    spec = _spec(n_slots=16, n_counters=1, n_ewma=1, hist=(3,))
+    state = init_state(spec)
+    keys = np.asarray(state.keys).copy()
+    regs = np.asarray(state.regs).copy()
+    # two occupied rows with distinct register patterns
+    keys[3], keys[9] = 111, 222
+    regs[3] = [5.0, 0.25, 1.0, 2.0, 3.0]      # count, ewma, hist[3]
+    regs[9] = [7.0, 0.75, 4.0, 5.0, 6.0]
+    state = FlowState(spec, jnp.asarray(keys), jnp.asarray(regs))
+
+    # grow the table, add a counter column, shrink the histogram
+    spec2 = FlowStateSpec(n_slots=64, n_counters=2, n_ewma=1,
+                          hist_sizes=(2,), ewma_alpha=0.5)
+    out = migrate_state(state, spec2)
+    ok, orr = np.asarray(out.keys), np.asarray(out.regs)
+    for key, old_row in ((111, regs[3]), (222, regs[9])):
+        s = int(hash_slot_np(np.array([key]), spec2.n_slots)[0])
+        assert ok[s] == key
+        # counter 0 carried, new counter 1 zero, ewma at its new offset,
+        # hist carried up to min(3, 2) bins, third bin dropped
+        assert orr[s, 0] == old_row[0]
+        assert orr[s, 1] == 0.0
+        assert orr[s, 2] == old_row[1]
+        np.testing.assert_array_equal(orr[s, 3:5], old_row[2:4])
+    assert (ok >= 0).sum() == 2
+
+
+def test_migrate_state_collision_is_last_writer_wins():
+    spec = _spec(n_slots=16)
+    # find two keys that collide in a 2-slot table (hash_slot & 1)
+    keys_all = np.arange(1, 200, dtype=np.int32)
+    slots = hash_slot_np(keys_all, 2)
+    k0 = int(keys_all[slots == 0][0])
+    k1 = int(keys_all[slots == 0][1])
+    state = init_state(spec)
+    keys = np.asarray(state.keys).copy()
+    regs = np.asarray(state.regs).copy()
+    s0 = int(hash_slot_np(np.array([k0]), spec.n_slots)[0])
+    s1 = int(hash_slot_np(np.array([k1]), spec.n_slots)[0])
+    if s0 == s1:                       # same 16-table slot: pick another k1
+        k1 = int(keys_all[slots == 0][2])
+        s1 = int(hash_slot_np(np.array([k1]), spec.n_slots)[0])
+    assert s0 != s1
+    keys[s0], keys[s1] = k0, k1
+    regs[s0, 0], regs[s1, 0] = 10.0, 20.0
+    spec_tiny = _spec(n_slots=2)
+    out = migrate_state(FlowState(spec, jnp.asarray(keys),
+                                  jnp.asarray(regs)), spec_tiny)
+    ok = np.asarray(out.keys)
+    # both map to new slot 0; the higher ORIGINAL slot index wrote last
+    winner = k0 if s0 > s1 else k1
+    expect_count = 10.0 if winner == k0 else 20.0
+    assert ok[0] == winner
+    assert np.asarray(out.regs)[0, 0] == expect_count
+    assert (ok >= 0).sum() == 1
+
+
+# -------------------------------------------------- drift detector / online
+
+
+def test_drift_snapshot_degenerate_streams_never_nan():
+    short = np.ones((3, 4), np.float32)
+    snap = DriftSnapshot.from_packets(short, cols=(1, 2), window=100)
+    assert not np.isnan(snap.mu).any() and (snap.sd > 0).all()
+    empty = np.zeros((0, 4), np.float32)
+    snap = DriftSnapshot.from_packets(empty, cols=(1,), window=10)
+    assert not np.isnan(snap.mu).any() and (snap.sd > 0).all()
+
+
+def test_drift_detector_needs_patience_and_rearms():
+    base = np.zeros((400, 3), np.float32)
+    snap = DriftSnapshot.from_packets(base, cols=(0, 1), window=100)
+    det = DriftDetector(snap, alpha=1.0, threshold=0.5, patience=3)
+    hot = np.full((100, 3), 50.0, np.float32)
+    cold = np.zeros((100, 3), np.float32)
+    # spikes shorter than patience never fire
+    for w in (hot, hot, cold, hot, hot, cold):
+        det.update(w)
+    assert not det.fired
+    for w in (hot, hot, hot):
+        det.update(w)
+    assert det.fired
+    det.reset()
+    assert not det.fired and det.score == 0.0 and det.windows == 0
+    with pytest.raises(ValueError, match="alpha"):
+        DriftDetector(snap, alpha=0.0)
+
+
+def test_controller_fires_once_and_swaps():
+    old = jax.jit(lambda x: x[:, 0].astype("int32"))
+    new = jax.jit(lambda x: x[:, 0].astype("int32") + 1)
+    eng = PacketServeEngine(old, feature_dim=3, max_batch=16, depth=2)
+    snap = DriftSnapshot.from_packets(np.zeros((400, 3), np.float32),
+                                      cols=(1,), window=100)
+    det = DriftDetector(snap, alpha=1.0, threshold=0.5, patience=2)
+    seen, release = [], threading.Event()
+
+    def retrain(ws):
+        seen.append(len(ws))
+        # hold the episode open until the observe loop is done, so the
+        # detector cannot re-arm and fire a second episode mid-loop
+        release.wait(60)
+        return new
+
+    ctrl = HotSwapController(eng, det, retrain, buffer_windows=4)
+    hot = np.full((100, 3), 9.0, np.float32)
+    for _ in range(6):
+        ctrl.observe(hot)
+    release.set()
+    assert ctrl.wait(60)
+    eng.flush()
+    assert ctrl.episodes == 1          # fired once, not once per window
+    assert ctrl.swapped == 1 and not ctrl.errors
+    assert eng.stats_.swaps == 1 and eng.pipeline is new
+    assert seen == [2]                 # windows buffered when it fired
+    assert not det.fired               # re-armed after the swap
+
+
+def test_controller_captures_retrain_errors():
+    eng = PacketServeEngine(jax.jit(lambda x: x[:, 0].astype("int32")),
+                            feature_dim=3, max_batch=16)
+    snap = DriftSnapshot.from_packets(np.zeros((200, 3), np.float32),
+                                      cols=(1,), window=100)
+    det = DriftDetector(snap, alpha=1.0, threshold=0.5, patience=1)
+
+    def boom(_ws):
+        raise RuntimeError("search exploded")
+
+    ctrl = HotSwapController(eng, det, boom)
+    ctrl.observe(np.full((50, 3), 9.0, np.float32))
+    assert ctrl.wait(60)
+    assert ctrl.episodes == 1 and ctrl.swapped == 0
+    assert len(ctrl.errors) == 1
+    assert eng.stats_.swaps == 0       # old model keeps serving
+    blob = json.dumps(ctrl.report())
+    assert "search exploded" in blob

@@ -293,3 +293,57 @@ def test_reaction_report_counts_packets_to_detection():
     assert rep["attack_flows"] == 1 and rep["detected_flows"] == 1
     assert rep["reaction_pkts_median"] == 3      # flow 2's 3rd packet
     assert rep["benign_fp_flow_rate"] == 1.0     # flow 1 was flagged once
+
+
+def test_reaction_report_all_benign_stream_is_json_clean():
+    """No attack flows and no detections -> 0.0 sentinels everywhere, not
+    NaN: the report must stay json-serializable and aggregation-safe."""
+    import json
+
+    stream = traffic.make_stream("benign", n_packets=2000, seed=0)
+    rep = traffic.reaction_report(
+        stream, np.zeros(stream.n_packets, np.int32)
+    )
+    assert rep["attack_flows"] == 0 and rep["detected_flows"] == 0
+    assert rep["detection_rate"] == 0.0
+    assert rep["reaction_pkts_median"] == 0.0
+    assert rep["benign_fp_flow_rate"] == 0.0
+    vals = [v for v in rep.values() if isinstance(v, float)]
+    assert np.isfinite(vals).all()
+    assert json.loads(json.dumps(rep)) == rep
+
+
+def _tiny_stream(n):
+    pkts = np.zeros((n, len(traffic.COLUMNS)), np.float32)
+    pkts[:, traffic.COL_FLOW] = np.arange(n) % 2
+    pkts[:, traffic.COL_LEN] = 500.0
+    pkts[:, traffic.COL_IPT] = 1e-3
+    fids = pkts[:, traffic.COL_FLOW].astype(np.int32)
+    labels = fids % 2
+    return traffic.PacketStream("tiny", pkts, labels.astype(np.int32),
+                                fids, {0: 0, 1: 1})
+
+
+@pytest.mark.parametrize("n", [1, 5])
+def test_stream_feature_dataset_shorter_than_one_window(n):
+    """A stream far shorter than one chunk window still yields a usable,
+    finite dataset: both splits non-empty (a single row serves as its own
+    train AND test) and identity-safe standardization moments."""
+    stages, names = traffic.flow_feature_stages(n_slots=64)
+    ds, mu, sd = traffic.stream_feature_dataset(
+        _tiny_stream(n), stages, names, sample_every=1
+    )
+    assert len(ds.train_x) >= 1 and len(ds.test_x) >= 1
+    assert np.isfinite(ds.train_x).all() and np.isfinite(ds.test_x).all()
+    assert np.isfinite(mu).all() and np.isfinite(sd).all()
+    assert (sd > 0).all()              # never divides by zero downstream
+
+
+def test_stream_feature_dataset_empty_stream_identity_moments():
+    stages, names = traffic.flow_feature_stages(n_slots=64)
+    ds, mu, sd = traffic.stream_feature_dataset(
+        _tiny_stream(0), stages, names, sample_every=1
+    )
+    assert len(ds.train_x) == 0 and len(ds.test_x) == 0
+    np.testing.assert_array_equal(mu, np.zeros_like(mu))
+    np.testing.assert_array_equal(sd, np.ones_like(sd))

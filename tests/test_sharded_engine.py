@@ -153,6 +153,74 @@ def test_sharded_stream_empty_input():
     assert list(eng.serve_stream(iter([]))) == []
 
 
+# ------------------------------------------- overflow push-back + hot swap
+
+
+def test_dispatch_routed_pushes_overflow_back(rng):
+    """Rows beyond a shard's per-dispatch capacity are requeued at the
+    FRONT (arrival order preserved), not dropped: a direct
+    ``_dispatch_routed`` of more rows than ``max_batch`` dispatches
+    exactly the capacity prefix and a flush serves the rest."""
+    eng = ShardedPacketServeEngine(_flow_pipeline(), feature_dim=2,
+                                   max_batch=16, min_shards=1)
+    assert eng.sharded and eng._sub_batch == 16
+    X = _flow_packets(rng, 30)
+    m = eng._dispatch_routed(X)
+    assert m == 16                     # capacity prefix only
+    assert eng.pending == 14           # overflow requeued, not dropped
+    out = eng.flush()
+    assert len(out) == 30
+    ref = PacketServeEngine(_flow_pipeline(), feature_dim=2, max_batch=16)
+    ref.submit(X)
+    np.testing.assert_array_equal(out, ref.flush())
+
+
+def test_swap_works_on_degraded_engine():
+    """min_shards unreachable on a one-device host -> base-engine path;
+    the hot swap must keep working there (it is the base swap)."""
+    eng = ShardedPacketServeEngine(
+        lambda x: x[:, 0].astype(np.int32), feature_dim=2, max_batch=8,
+        min_shards=2,
+    )
+    assert not eng.sharded
+    X = np.zeros((6, 2), np.float32)
+    X[:, 0] = np.arange(6)
+    eng.submit(X)
+    np.testing.assert_array_equal(eng.flush(), np.arange(6))
+    eng.swap(lambda x: x[:, 0].astype(np.int32) + 100)
+    eng.submit(X)
+    np.testing.assert_array_equal(eng.flush(), np.arange(6) + 100)
+    assert eng.stats()["swaps"] == 1
+
+
+def test_sharded_swap_rejects_untraceable_pipeline(ad_pipe):
+    eng = ShardedPacketServeEngine(ad_pipe, feature_dim=7, max_batch=64,
+                                   min_shards=1)
+    assert eng.sharded
+    with pytest.raises(ValueError, match="untraceable"):
+        eng.swap(lambda x: x[:, 0].astype(np.int32))
+
+
+def test_sharded_swap_rejects_key_cols_change(rng):
+    eng = ShardedPacketServeEngine(_flow_pipeline(), feature_dim=2,
+                                   max_batch=16, min_shards=1)
+    assert eng.sharded
+    spec = FlowStateSpec(n_slots=32, n_counters=1, n_ewma=1,
+                         hist_sizes=(3,), ewma_alpha=0.5)
+    rekeyed = StatefulPipeline([
+        stageir.FlowKey((1,), spec.n_slots),
+        stageir.RegisterUpdate(spec, ewma_cols=(1,), hist_cols=(1,),
+                               hist_edges=(np.linspace(0, 1, 4)[1:-1],)),
+        stageir.WindowStats(spec, mode="all"),
+    ])
+    with pytest.raises(ValueError, match="key_cols"):
+        eng.swap(rekeyed)
+    # the rejection is clean: the engine still serves on the old pipeline
+    X = _flow_packets(rng, 20)
+    eng.submit(X)
+    assert len(eng.flush()) == 20 and eng.stats()["swaps"] == 0
+
+
 # ------------------------------------------------------ real multi-device
 
 
