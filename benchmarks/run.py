@@ -22,6 +22,7 @@ import time
 import traceback
 
 from benchmarks import (
+    attack_defense,
     dag_throughput,
     dryrun_roofline,
     dse_throughput,
@@ -51,6 +52,8 @@ BENCHES = {
             dse_throughput.main),
     "flow": ("stateful flow pipeline: interpreter vs fused launch pkt/s",
              flow_throughput.main),
+    "attack": ("closed-loop attack/defense replay with SLO gates",
+               attack_defense.main),
     "swap": ("hot-swap latency + post-drift F1 recovery", hot_swap.main),
     "kernel": ("fused_mlp kernel roofline + stateful step",
                kernel_roofline.main),
@@ -59,7 +62,8 @@ BENCHES = {
 
 
 # benches whose saved results carry "serve_stats" entries
-_SERVE_SOURCES = ("dag_throughput", "flow_throughput", "hot_swap")
+_SERVE_SOURCES = ("dag_throughput", "flow_throughput", "hot_swap",
+                  "attack_defense")
 
 
 def write_bench_serve() -> str | None:

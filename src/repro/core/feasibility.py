@@ -334,8 +334,46 @@ def flowstate_report(spec, platform_kind: str = "taurus", model: Any = None
     calibrations above)."""
     from repro.core.stageir import flowstate_specs, spec_params
 
-    specs = flowstate_specs(spec)
-    words = spec_params(specs)             # slots * (key + W register words)
+    words = spec_params(flowstate_specs(spec))
+    return _register_table_report(
+        words, platform_kind, model, what="flow registers",
+        tpu_vmem=lambda m: _flow_update_vmem(spec, m),
+    )
+
+
+def mitigation_report(spec, platform_kind: str = "taurus", model: Any = None
+                      ) -> FeasibilityReport:
+    """Resource/latency report for one mitigation ACTION table — the
+    per-flow drop/rate-limit registers a trailing ``Mitigate`` stage
+    keeps (docs/pipeline_ir.md#mitigation-contract).
+
+    ``spec`` is a ``flowstate.MitigationSpec``.  The action table is a
+    second register file co-resident with the detection table, so it is
+    charged through the SAME per-platform register model and composed via
+    ``FeasibilityReport.merge`` — mitigation SRAM is never free.  On the
+    TPU target the scan is a jnp loop (no Pallas kernel yet), so the
+    charge is the table's working set, not a kernel envelope."""
+    from repro.core.stageir import mitigation_specs, spec_params
+
+    words = spec_params(mitigation_specs(spec))
+    return _register_table_report(
+        words, platform_kind, model, what="mitigation registers",
+        # table + per-batch key/verdict/valid int words, resident in VMEM
+        tpu_vmem=lambda m: words * 4 + m.batch * 3 * 4,
+    )
+
+
+def _flow_update_vmem(spec, m) -> int:
+    from repro.kernels.flow_update import vmem_bytes as flow_vmem
+
+    return flow_vmem(spec.n_slots, spec.width, m.batch)
+
+
+def _register_table_report(words: int, platform_kind: str, model: Any, *,
+                           what: str, tpu_vmem) -> FeasibilityReport:
+    """Shared per-platform charging for one register table of ``words``
+    32-bit words (stored keys included) — the flow-state detection table
+    and the mitigation action table go through the same rules."""
     nbytes = words * 4
     reasons: list[str] = []
 
@@ -347,7 +385,7 @@ def flowstate_report(spec, platform_kind: str = "taurus", model: Any = None
         cu = 2
         if mu > m.total_mu:
             reasons.append(
-                f"flow registers need {mu} MU > {m.total_mu} available"
+                f"{what} need {mu} MU > {m.total_mu} available"
             )
         return FeasibilityReport(
             feasible=not reasons, reasons=reasons,
@@ -359,7 +397,7 @@ def flowstate_report(spec, platform_kind: str = "taurus", model: Any = None
         m = model or MATModel()
         if nbytes > m.register_bytes:
             reasons.append(
-                f"flow registers need {nbytes} B > {m.register_bytes} B "
+                f"{what} need {nbytes} B > {m.register_bytes} B "
                 "register SRAM"
             )
         return FeasibilityReport(
@@ -373,7 +411,7 @@ def flowstate_report(spec, platform_kind: str = "taurus", model: Any = None
         bram = max(1, math.ceil(nbytes / 4608))   # 36Kb BRAM blocks
         if bram + m.base_bram > m.total_bram:
             reasons.append(
-                f"flow registers need {bram} BRAM > "
+                f"{what} need {bram} BRAM > "
                 f"{m.total_bram - m.base_bram} available"
             )
         return FeasibilityReport(
@@ -384,12 +422,10 @@ def flowstate_report(spec, platform_kind: str = "taurus", model: Any = None
         )
     if platform_kind == "tpu":
         m = model or TPUModel()
-        from repro.kernels.flow_update import vmem_bytes as flow_vmem
-
-        vmem = flow_vmem(spec.n_slots, spec.width, m.batch)
+        vmem = tpu_vmem(m)
         if vmem > m.vmem_bytes:
             reasons.append(
-                f"flow table needs {vmem} B VMEM > {m.vmem_bytes} budget"
+                f"{what} need {vmem} B VMEM > {m.vmem_bytes} budget"
             )
         launch = m.launch_overhead_us * 1e-6
         return FeasibilityReport(

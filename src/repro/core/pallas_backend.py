@@ -66,6 +66,7 @@ __all__ = [
     "lower_dag_pallas",
     "stateful_eligible",
     "lower_stateful",
+    "lower_mitigation",
     "lower_stateful_pallas",
     "fused_flow_eligible",
     "lower_stateful_fused",
@@ -487,6 +488,28 @@ def lower_stateful(prefix: list[Stage], backend: str
         )
 
     return flow_fn, ("pallas" if use_kernel else "interpret")
+
+
+def lower_mitigation(mit) -> tuple[Callable, str]:
+    """Lower a trailing ``Mitigate`` stage for serving.
+
+    -> (traceable ``fn(mit_keys, mit_regs, pkt_keys, verdicts, valid) ->
+    (mit_keys', mit_regs', out_verdicts)``, the engine that actually
+    serves).  The action-table scan is order-dependent shared jnp
+    (flowstate.mitigation.mitigate_update) with NO Pallas lowering yet,
+    so the engine is always ``"interpret"`` — reported honestly:
+    ``StatefulPipeline`` composes it into ``"mixed"`` when the detection
+    half serves on Pallas.  This is the ONE place the mitigation calling
+    convention is wired, mirroring ``lower_stateful``."""
+    from repro.flowstate.mitigation import mitigate_update
+
+    spec = mit.spec
+
+    def mit_fn(mit_keys, mit_regs, pkt_keys, verdicts, valid, _spec=spec):
+        return mitigate_update(mit_keys, mit_regs, pkt_keys, verdicts,
+                               valid, spec=_spec)
+
+    return mit_fn, "interpret"
 
 
 def lower_stateful_pallas(prefix: list[Stage]) -> Callable | None:

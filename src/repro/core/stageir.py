@@ -28,6 +28,9 @@ Stateful vocabulary (per-flow registers, docs/pipeline_ir.md
                         kernel launch (kernels/flow_update)
   ``WindowStats``       registers -> model-ready windowed statistics
                         (histograms normalized by the packet count)
+  ``Mitigate``          verdicts -> actions: per-flow drop/rate-limit
+                        action table fed by the classifier's verdicts
+                        (must be the LAST stage; ``split_mitigation``)
 
 Stateful stages carry ``stateful = True`` and cannot be compiled
 statelessly — ``compile_stages`` rejects them; the serving path is
@@ -478,8 +481,63 @@ class WindowStats(Stage):
                 "mode": self.mode}
 
 
+@dataclasses.dataclass(repr=False)
+class Mitigate(Stage):
+    """Verdicts -> actions: per-flow drop / rate-limit action table.
+
+    Closes the detection loop (docs/pipeline_ir.md#mitigation-contract):
+    the classifier's verdict stream feeds a second register file keyed by
+    the SAME flow key as the detection table; a flow that accumulates
+    ``spec.threshold`` positive verdicts is marked, and its later packets
+    are dropped (verdict replaced by ``flowstate.mitigation.MITIGATED``)
+    or rate-limited.  Stateful and order-dependent — it must be the LAST
+    stage of a stateful pipeline (``split_mitigation``), served through
+    ``repro.flowstate.StatefulPipeline``."""
+
+    spec: "object"                       # flowstate.mitigation.MitigationSpec
+
+    kind = "mitigate"
+    stateful = True
+
+    def apply(self, h):
+        raise TypeError(
+            "Mitigate is stateful; serve it through "
+            "repro.flowstate.StatefulPipeline, not compile_stages"
+        )
+
+    def meta(self):
+        s = self.spec
+        return {
+            "n_slots": s.n_slots,
+            "mode": s.mode,
+            "threshold": s.threshold,
+            # stored key + [hits, since] per slot: the SRAM the
+            # feasibility oracle charges (matches mitigation_specs)
+            "params": s.n_slots * (s.width + 1),
+            "sram_bytes": s.sram_bytes,
+        }
+
+
 def is_stateful(stage: Stage) -> bool:
     return bool(getattr(stage, "stateful", False))
+
+
+def split_mitigation(stages: list[Stage]
+                     ) -> tuple[list[Stage], Mitigate | None]:
+    """Split off the trailing ``Mitigate`` stage -> (rest, mitigate|None).
+
+    A mitigation stage consumes the pipeline's *verdicts*, so it can only
+    sit LAST; any other placement (or more than one) raises.  The
+    remainder is a plain stateful pipeline for ``split_stateful``."""
+    mits = [i for i, s in enumerate(stages) if isinstance(s, Mitigate)]
+    if not mits:
+        return list(stages), None
+    if len(mits) > 1 or mits[0] != len(stages) - 1:
+        raise ValueError(
+            "Mitigate consumes verdicts and must be the single LAST "
+            f"stage; got it at positions {mits} of {len(stages)} stages"
+        )
+    return list(stages[:-1]), stages[-1]
 
 
 def split_stateful(stages: list[Stage]
@@ -737,6 +795,19 @@ def flowstate_specs(spec, *, mode: str = "all") -> list[StageSpec]:
                   params=spec.n_slots * (W + 1),
                   extra=(spec.n_slots, W)),
         StageSpec("window_stats", n_in=W, n_out=n_out),
+    ]
+
+
+def mitigation_specs(spec) -> list[StageSpec]:
+    """Shape-only spec for the mitigation action table — what
+    ``feasibility.mitigation_report`` charges.  ``params`` is the table's
+    word count (stored key + [hits, since] per slot) and must stay equal
+    to ``Mitigate.meta()["params"]``, like the other stateful specs."""
+    W = spec.width
+    return [
+        StageSpec("mitigate", n_in=1, n_out=1,
+                  params=spec.n_slots * (W + 1),
+                  extra=(spec.n_slots, W)),
     ]
 
 

@@ -34,6 +34,28 @@ inherit the flow's):
                      per-packet shape mimics benign bulk transfers — a
                      model trained on phase A degrades on phase B (the
                      hot-swap loop's test scenario)
+  ``syn_flood``      TCP SYN flood in three escalating-rate waves:
+                     spoofed-source flows of SYN-sized packets onto one
+                     service port, each wave doubling the per-flow rate
+  ``udp_flood``      UDP amplification-style flood onto port 53 in two
+                     rate waves, mid-size payloads
+  ``icmp_flood``     ICMP (port-0 proxy) ping flood: constant small
+                     echo-sized packets at kHz per-flow rates
+  ``slow_scan``      slow-drip reconnaissance: one scanner emitting
+                     1-2-packet SYN-sized probes every few hundred ms
+                     across the WHOLE span (rate-invisible, shape-visible)
+  ``coordinated_ddos`` multi-source DDoS: several source groups with
+                     staggered onsets and per-group rates converging on
+                     one service port
+
+Topology-aware serving (``switch_streams``/``compose_streams``) pins
+every flow to an ingress switch and slices one stream into per-switch
+arrival-ordered views — a multi-switch deployment serves each view
+through its own engine, and composing the views reconstructs the global
+stream.  ``windowed_flow_stats`` collects Ryu-controller-style per-window
+per-flow aggregates, and ``auto_label`` derives heuristic ground-truth
+labels from them (pinned against the generating labels in
+tests/test_traffic_scenarios.py).
 
 Streams are deterministic in (scenario, seed, sizes) and replayable —
 ``PacketStream.chunks`` re-yields the identical sequence every call.
@@ -49,7 +71,17 @@ COLUMNS = ("flow_id", "pkt_len", "ipt_s", "dst_port")
 COL_FLOW, COL_LEN, COL_IPT, COL_PORT = range(4)
 
 SCENARIOS = ("benign", "ddos_burst", "port_scan", "elephant_mice",
-             "concept_drift")
+             "concept_drift", "syn_flood", "udp_flood", "icmp_flood",
+             "slow_scan", "coordinated_ddos")
+
+# scenarios whose attack flows a rate-style detector should catch (used by
+# the replay harness to pick what the closed loop is exercised on)
+FLOOD_SCENARIOS = ("ddos_burst", "syn_flood", "udp_flood", "icmp_flood",
+                   "coordinated_ddos")
+
+# mirror of repro.flowstate.mitigation.MITIGATED, kept local so this
+# module stays importable without jax (test_mitigation pins the equality)
+_MITIGATED = -1
 
 # concept_drift: fraction of the span where phase B (the shifted attack
 # signature) begins — phase A attacks live strictly before it
@@ -178,6 +210,59 @@ def _attack_flows(rng, scenario: str, span: float) -> list[dict]:
             flows.append(_flow(0, 1,
                                drift_t + rng.uniform(0, span * 0.25),
                                sizes, gaps, 443))
+    elif scenario == "syn_flood":
+        # three escalating waves of spoofed-source SYN-sized flows onto
+        # one service port; each wave doubles the per-flow packet rate
+        for t_frac, gap in ((0.25, 2e-3), (0.45, 1e-3), (0.65, 5e-4)):
+            for _ in range(45):
+                n = int(rng.integers(30, 120))
+                sizes = rng.normal(60, 6, n)
+                gaps = rng.lognormal(np.log(gap), 0.4, n)
+                flows.append(_flow(0, 1,
+                                   span * t_frac + rng.uniform(0, span * 0.08),
+                                   sizes, gaps, 443))
+    elif scenario == "udp_flood":
+        # amplification-style UDP flood onto port 53, two rate waves
+        for t_frac, gap in ((0.3, 1.5e-3), (0.55, 8e-4)):
+            for _ in range(60):
+                n = int(rng.integers(40, 150))
+                sizes = rng.normal(512, 120, n)
+                gaps = rng.lognormal(np.log(gap), 0.5, n)
+                flows.append(_flow(0, 1,
+                                   span * t_frac + rng.uniform(0, span * 0.1),
+                                   sizes, gaps, 53))
+    elif scenario == "icmp_flood":
+        # ping flood: constant echo-sized packets, port-0 proxy for ICMP
+        for _ in range(100):
+            n = int(rng.integers(40, 160))
+            sizes = rng.normal(84, 8, n)
+            gaps = rng.lognormal(np.log(1e-3), 0.5, n)
+            flows.append(_flow(0, 1,
+                               span * 0.3 + rng.uniform(0, span * 0.25),
+                               sizes, gaps, 0))
+    elif scenario == "slow_scan":
+        # slow-drip recon: probes every few hundred ms across the WHOLE
+        # span — per-flow rate looks benign, only the 1-2-packet
+        # SYN-sized shape gives it away
+        t = span * 0.05
+        for _ in range(260):
+            n = int(rng.integers(1, 3))
+            sizes = rng.normal(48, 4, n)
+            gaps = rng.lognormal(np.log(5e-3), 0.4, n)
+            flows.append(_flow(0, 1, t, sizes, gaps,
+                               1024 + int(rng.integers(0, 4096))))
+            t += float(rng.uniform(0.25, 0.45))
+    elif scenario == "coordinated_ddos":
+        # multi-source DDoS: four source groups, staggered onsets and
+        # per-group rates, converging on one service port
+        for g, gap in enumerate((2.5e-3, 1.8e-3, 1.2e-3, 8e-4)):
+            t0 = span * (0.3 + 0.08 * g)
+            for _ in range(35):
+                n = int(rng.integers(30, 120))
+                sizes = rng.normal(110, 30, n)
+                gaps = rng.lognormal(np.log(gap), 0.4, n)
+                flows.append(_flow(0, 1, t0 + rng.uniform(0, span * 0.06),
+                                   sizes, gaps, 80))
     else:
         raise KeyError(scenario)
     return flows
@@ -362,30 +447,174 @@ def fold_input_standardization(stages, mu: np.ndarray, sd: np.ndarray):
     return out
 
 
+# -------------------------------------------------- topology-aware streams
+
+
+def switch_of_flow(flow_ids: np.ndarray, n_switches: int) -> np.ndarray:
+    """Deterministic flow -> ingress-switch pinning (Knuth multiplicative
+    mix, so consecutive flow ids spread across switches)."""
+    h = np.asarray(flow_ids, np.int64).astype(np.uint32) * np.uint32(2654435761)
+    h ^= h >> np.uint32(16)
+    return (h % np.uint32(n_switches)).astype(np.int64)
+
+
+def switch_streams(stream: PacketStream, n_switches: int) -> list:
+    """Slice one stream into ``n_switches`` per-switch views: every flow is
+    pinned whole to one ingress switch, so per-flow inter-arrival gaps in
+    the packet records stay valid and each view is itself arrival-ordered.
+    A multi-switch deployment serves each view through its own engine."""
+    if n_switches < 1:
+        raise ValueError("n_switches must be >= 1")
+    sw = switch_of_flow(stream.flow_ids, n_switches)
+    out = []
+    for s in range(n_switches):
+        mask = sw == s
+        fids = stream.flow_ids[mask]
+        present = set(int(f) for f in np.unique(fids))
+        out.append(PacketStream(
+            f"{stream.scenario}@sw{s}", stream.packets[mask],
+            stream.labels[mask], fids,
+            {f: l for f, l in stream.flow_labels.items() if f in present},
+            None if stream.times is None else stream.times[mask],
+        ))
+    return out
+
+
+def compose_streams(streams, *, scenario: str | None = None) -> PacketStream:
+    """Merge time-stamped streams back into one arrival-ordered stream
+    (the inverse of ``switch_streams`` up to same-timestamp cross-flow
+    ties).  Flow labels merge with attack (1) winning on collision."""
+    streams = list(streams)
+    if not streams:
+        raise ValueError("need at least one stream to compose")
+    if any(s.times is None for s in streams):
+        raise ValueError("compose_streams requires timestamped streams")
+    packets = np.concatenate([s.packets for s in streams])
+    labels = np.concatenate([s.labels for s in streams])
+    fids = np.concatenate([s.flow_ids for s in streams])
+    times = np.concatenate([s.times for s in streams])
+    order = np.argsort(times, kind="stable")
+    flow_labels: dict = {}
+    for s in streams:
+        for f, l in s.flow_labels.items():
+            flow_labels[f] = max(flow_labels.get(f, 0), l)
+    name = scenario or streams[0].scenario.split("@", 1)[0]
+    return PacketStream(name, packets[order], labels[order], fids[order],
+                        flow_labels, times=times[order])
+
+
+# ------------------------------------- windowed stats + heuristic labeling
+
+
+def windowed_flow_stats(stream: PacketStream, *,
+                        window_s: float = 1.0) -> dict:
+    """Ryu-controller-style stat collection: aggregate the stream into
+    per-(time-window, flow) rows.  Returns a dict of equal-length arrays:
+    ``window``, ``flow_id``, ``pkt_count``, ``byte_count``, ``mean_len``,
+    ``mean_ipt`` (gap sum / packet count, first-packet gap counted as 0).
+    Requires timestamps and flow ids < 2^21 (``make_stream`` guarantees
+    both)."""
+    if stream.times is None:
+        raise ValueError("windowed_flow_stats requires timestamped streams")
+    if stream.n_packets == 0:
+        z = np.zeros(0)
+        return {"window": z.astype(np.int64), "flow_id": z.astype(np.int64),
+                "pkt_count": z.astype(np.int64), "byte_count": z,
+                "mean_len": z, "mean_ipt": z}
+    t = stream.times
+    win = np.floor((t - t[0]) / float(window_s)).astype(np.int64)
+    fid = stream.flow_ids.astype(np.int64)
+    if fid.max() >= (1 << 21):
+        raise ValueError("flow ids must be < 2^21 for windowed aggregation")
+    code = win * (1 << 21) + fid
+    uniq, inv = np.unique(code, return_inverse=True)
+    count = np.bincount(inv)
+    byte = np.bincount(inv, weights=stream.packets[:, COL_LEN].astype(np.float64))
+    iptsum = np.bincount(inv, weights=stream.packets[:, COL_IPT].astype(np.float64))
+    return {
+        "window": uniq >> 21,
+        "flow_id": uniq & ((1 << 21) - 1),
+        "pkt_count": count.astype(np.int64),
+        "byte_count": byte,
+        "mean_len": byte / count,
+        "mean_ipt": iptsum / count,
+    }
+
+
+def auto_label(stats: dict, *, flood_ipt_s: float = 4e-3,
+               flood_min_pkts: int = 10, volume_min_pkts: int = 450,
+               scan_max_pkts: int = 3, scan_max_len: float = 80.0) -> dict:
+    """Heuristic ground-truth labeling from windowed flow stats -> dict of
+    flow_id -> {0, 1}.  Three rules, each with analytic margin against the
+    benign generators in ``_benign_flows``:
+
+      flood   mean gap < ``flood_ipt_s`` over >= ``flood_min_pkts``
+              packets (benign bulk floors at ~10 ms gaps, floods run
+              <= 2.7 ms)
+      volume  total packets >= ``volume_min_pkts`` (benign bulk tops out
+              at 300; elephants and stealth-drift flows start at 500)
+      scan    <= ``scan_max_pkts`` packets of <= ``scan_max_len`` bytes
+              (benign flows all run >= 8 packets)
+    """
+    fid = np.asarray(stats["flow_id"])
+    count = np.asarray(stats["pkt_count"], np.float64)
+    byte = np.asarray(stats["byte_count"], np.float64)
+    iptsum = np.asarray(stats["mean_ipt"], np.float64) * count
+    flows, inv = np.unique(fid, return_inverse=True)
+    total = np.bincount(inv, weights=count)
+    mean_len = np.bincount(inv, weights=byte) / total
+    mean_ipt = np.bincount(inv, weights=iptsum) / total
+    is_flood = (mean_ipt < flood_ipt_s) & (total >= flood_min_pkts)
+    is_volume = total >= volume_min_pkts
+    is_scan = (total <= scan_max_pkts) & (mean_len <= scan_max_len)
+    label = (is_flood | is_volume | is_scan).astype(np.int64)
+    return {int(f): int(l) for f, l in zip(flows, label)}
+
+
 # -------------------------------------------------------- reaction metrics
 
 
 def reaction_report(stream: PacketStream, verdicts: np.ndarray) -> dict:
     """Reaction-time report: per attack flow, how many of ITS packets
     arrive before the first positive verdict (1-based; the paper's
-    packets-until-detection).  Also benign false-positive flow rate."""
+    packets-until-detection).  Also benign false-positive flow rate.
+
+    When the verdict stream carries ``MITIGATED`` (-1) sentinels from an
+    in-pipeline ``Mitigate`` stage, the report additionally measures what
+    the data plane ENFORCES, not just what it flags: ``mitigation_lag_*``
+    is the per-flow packet count between first detection and first drop
+    (>= 1 by construction — the state BEFORE a packet decides its fate, so
+    the threshold-tripping packet itself is still verdicted), and
+    ``leaked_pkts_total`` counts attack packets that pass AFTER the flow's
+    first drop.  The replay harness gates its SLOs on these, never on the
+    detection-only numbers."""
     verdicts = np.asarray(verdicts)
     react, undetected, fp_flows, benign_flows = [], 0, 0, 0
+    lags, mitigated, leaked, benign_mitigated = [], 0, 0, 0
     for fid, label in stream.flow_labels.items():
         mask = stream.flow_ids == fid
         if not mask.any():
             continue
         v = verdicts[mask]
         hits = np.nonzero(v == 1)[0]
+        mits = np.nonzero(v == _MITIGATED)[0]
         if label == 1:
             if len(hits):
                 react.append(int(hits[0]) + 1)
             else:
                 undetected += 1
+            if len(mits):
+                mitigated += 1
+                first_mit = int(mits[0])
+                if len(hits):
+                    lags.append(first_mit - int(hits[0]))
+                leaked += int(np.sum(v[first_mit:] != _MITIGATED))
         else:
             benign_flows += 1
             fp_flows += bool(len(hits))
+            benign_mitigated += bool(len(mits))
     react_arr = np.asarray(react, np.float64)
+    lag_arr = np.asarray(lags, np.float64)
     n_attack = len(react) + undetected
     # sentinel 0.0 (not NaN) when nothing was detected / no attack flows
     # exist: an all-benign stream must produce a json-clean, comparable
@@ -400,4 +629,12 @@ def reaction_report(stream: PacketStream, verdicts: np.ndarray) -> dict:
                               if len(react) else 0.0),
         "benign_fp_flow_rate": (fp_flows / benign_flows) if benign_flows
         else 0.0,
+        "mitigated_flows": mitigated,
+        "mitigation_lag_median": (float(np.median(lag_arr))
+                                  if len(lags) else 0.0),
+        "mitigation_lag_p95": (float(np.percentile(lag_arr, 95))
+                               if len(lags) else 0.0),
+        "leaked_pkts_total": leaked,
+        "benign_mitigated_flow_rate": (benign_mitigated / benign_flows)
+        if benign_flows else 0.0,
     }

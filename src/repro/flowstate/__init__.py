@@ -9,4 +9,12 @@ from repro.flowstate.registers import (
     update_flows,
 )
 from repro.flowstate.drift import DriftDetector, DriftSnapshot
+from repro.flowstate.mitigation import (
+    MITIGATED,
+    MitigatedFlowState,
+    MitigationSpec,
+    init_mitigation,
+    migrate_mitigation,
+    mitigate_update,
+)
 from repro.flowstate.pipeline import StatefulPipeline

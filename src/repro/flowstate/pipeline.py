@@ -8,6 +8,14 @@ suffix — all inside one jitted step, so steady-state serving never
 re-traces and the register state threads through as explicit arrays (no
 Python-side mutation).
 
+A trailing ``Mitigate`` stage (docs/pipeline_ir.md#mitigation-contract)
+closes the loop: the classifier's verdicts feed a per-flow action table
+keyed by the same flow key, and marked flows' packets come back as
+``mitigation.MITIGATED`` instead of a verdict.  The action table threads
+through the SAME jitted step as two extra state arrays
+(``MitigatedFlowState``), so mitigation inherits every serving guarantee
+— arrival order, overlap safety, hot-swap state carry.
+
 Backend selection mirrors the stateless contract
 (docs/pipeline_ir.md#flow-state-contract):
 
@@ -26,7 +34,10 @@ Backend selection mirrors the stateless contract
 ``backend`` reports what actually serves: ``"pallas-fused-flow"`` for
 the single launch, ``"pallas"`` when both parts lowered separately,
 ``"interpret"`` when neither did, ``"mixed"`` otherwise — never the
-engine that was merely requested.
+engine that was merely requested.  The mitigation scan has no Pallas
+lowering (``pallas_backend.lower_mitigation`` always serves
+``"interpret"``), so a mitigated pipeline whose detection half runs on
+Pallas reports ``"mixed"`` — honest composite reporting.
 """
 
 from __future__ import annotations
@@ -34,7 +45,12 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import stageir
-from repro.flowstate.registers import FlowState, FlowStateSpec, init_state
+from repro.flowstate.registers import (
+    FlowState,
+    FlowStateSpec,
+    init_state,
+    migrate_state,
+)
 
 
 class StatefulPipeline:
@@ -58,15 +74,17 @@ class StatefulPipeline:
         self.stages = list(stages)
         self.requested_backend = backend
         self.fuse = bool(fuse)
-        prefix, suffix = stageir.split_stateful(self.stages)
+        rest, mit = stageir.split_mitigation(self.stages)
+        prefix, suffix = stageir.split_stateful(rest)
         self.spec: FlowStateSpec = prefix[1].spec
+        self.mitigation = mit.spec if mit is not None else None
         self.feature_dim = None          # any F the key/update cols allow
 
         run_suffix = (stageir.fuse_pipeline_stages(suffix) if fuse
                       else list(suffix))
 
-        # single-launch form first: the whole pipeline as ONE Pallas
-        # kernel (kernels/fused_flow) when backend="pallas" and the
+        # single-launch form first: the whole detection pipeline as ONE
+        # Pallas kernel (kernels/fused_flow) when backend="pallas" and the
         # post-peephole suffix matches the fused envelope — bit-identical
         # to the two-dispatch composition below by the flow-state
         # contract, reported honestly as "pallas-fused-flow"
@@ -94,6 +112,24 @@ class StatefulPipeline:
                 keys, regs, feats = _flow(keys, regs, x, valid)
                 return keys, regs, _cls(feats)
 
+        if mit is not None:
+            # the action table appends two more state arrays and the
+            # verdict rewrite to the very same jitted step: the flow key
+            # is re-derived from the packet rows (cheap vectorized FNV),
+            # so detection and action tables stay keyed identically
+            mit_fn, self.mitigation_backend = \
+                pallas_backend.lower_mitigation(mit)
+            base = step
+
+            def step(keys, regs, mkeys, mregs, x, valid, _base=base,
+                     _mit=mit_fn, _fk=prefix[0]):
+                keys, regs, v = _base(keys, regs, x, valid)
+                mkeys, mregs, v = _mit(mkeys, mregs, _fk.apply_keys(x),
+                                       v, valid)
+                return keys, regs, mkeys, mregs, v
+        else:
+            self.mitigation_backend = None
+
         # the raw traceable step: what ShardedPacketServeEngine wraps in
         # shard_map over per-device register tables
         self.step_fn = step
@@ -104,19 +140,33 @@ class StatefulPipeline:
         # does not support donation; callers must treat a dispatched-into
         # FlowState as consumed — the engine always adopts the returned
         # state.)
-        donate = (0, 1) if jax.default_backend() != "cpu" else ()
+        donate = (tuple(range(self.n_state_arrays))
+                  if jax.default_backend() != "cpu" else ())
         self._step = jax.jit(step, donate_argnums=donate)
         self._ones_valid: dict[int, object] = {}  # per-batch-size cache
+
+    @property
+    def n_state_arrays(self) -> int:
+        """Leading state arrays of ``step_fn``: (keys, regs) plus the
+        action table's (mit_keys, mit_regs) when mitigation is on — what
+        the sharded engine partitions per device."""
+        return 4 if self.mitigation is not None else 2
 
     @property
     def backend(self) -> str:
         """The engine that actually serves, after any fallback:
         ``"pallas-fused-flow"`` when the whole pipeline runs as one
         kernel launch, else ``"pallas"``/``"interpret"``/``"mixed"`` for
-        the two-dispatch composition."""
-        if self.fused:
-            return "pallas-fused-flow"
+        the two-dispatch composition.  The interpret-only mitigation
+        scan counts as one of the parts — a Pallas detection half plus
+        mitigation reports ``"mixed"``."""
         kinds = {self.flow_backend, self.classifier_backend}
+        if self.mitigation_backend is not None:
+            kinds.add(self.mitigation_backend)
+        if self.fused and len(kinds) == 1:
+            return "pallas-fused-flow"
+        if self.fused:
+            return "mixed"
         return kinds.pop() if len(kinds) == 1 else "mixed"
 
     def with_backend(self, backend: str) -> "StatefulPipeline":
@@ -126,10 +176,58 @@ class StatefulPipeline:
         return StatefulPipeline(self.stages, backend=backend,
                                 fuse=self.fuse)
 
-    def init_state(self) -> FlowState:
-        return init_state(self.spec)
+    def init_state(self):
+        if self.mitigation is None:
+            return init_state(self.spec)
+        from repro.flowstate.mitigation import (
+            MitigatedFlowState,
+            init_mitigation,
+        )
 
-    def dispatch(self, state: FlowState, X, valid=None):
+        base = init_state(self.spec)
+        mk, mr = init_mitigation(self.mitigation)
+        return MitigatedFlowState(self.spec, base.keys, base.regs,
+                                  self.mitigation, mk, mr)
+
+    def adopt_state(self, state):
+        """Carry another pipeline's live state into THIS pipeline's state
+        shape — the hot-swap install path (both engines call this).
+
+        Detection table: same spec carries the arrays bit-identically;
+        a changed spec migrates through the documented re-key path
+        (``registers.migrate_state``).  Action table: same mitigation
+        spec carries bit-identically (marked flows stay marked across the
+        swap); a changed spec re-keys (``mitigation.migrate_mitigation``);
+        swapping mitigation IN starts an empty table; swapping it OUT
+        drops the table (the engine stops enforcing)."""
+        if getattr(state, "spec", None) is None:
+            return state                 # opaque state: engine's problem
+        if state.spec == self.spec:
+            keys, regs = state.keys, state.regs
+        else:
+            m = migrate_state(FlowState(state.spec, state.keys, state.regs),
+                              self.spec)
+            keys, regs = m.keys, m.regs
+        if self.mitigation is None:
+            return FlowState(self.spec, keys, regs)
+        from repro.flowstate.mitigation import (
+            MitigatedFlowState,
+            init_mitigation,
+            migrate_mitigation,
+        )
+
+        old_mit = getattr(state, "mit_spec", None)
+        if old_mit is None:
+            mk, mr = init_mitigation(self.mitigation)
+        elif old_mit == self.mitigation:
+            mk, mr = state.mit_keys, state.mit_regs
+        else:
+            mk, mr = migrate_mitigation(state.mit_keys, state.mit_regs,
+                                        old_mit, self.mitigation)
+        return MitigatedFlowState(self.spec, keys, regs, self.mitigation,
+                                  mk, mr)
+
+    def dispatch(self, state, X, valid=None):
         """Launch one step WITHOUT forcing the device->host copy: returns
         ``(state', verdict_device_array)``.  The async serving path
         (PacketServeEngine depth>1) chains dispatches through the returned
@@ -144,18 +242,28 @@ class StatefulPipeline:
             if valid is None:       # device-resident, reused every step
                 valid = self._ones_valid.setdefault(
                     B, jnp.ones((B,), jnp.int32))
-        keys, regs, verdicts = self._step(
-            state.keys, state.regs, X, jnp.asarray(valid, jnp.int32)
-        )
-        return FlowState(self.spec, keys, regs), verdicts
+        valid = jnp.asarray(valid, jnp.int32)
+        if self.mitigation is None:
+            keys, regs, verdicts = self._step(state.keys, state.regs, X,
+                                              valid)
+            return FlowState(self.spec, keys, regs), verdicts
+        from repro.flowstate.mitigation import MitigatedFlowState
 
-    def __call__(self, state: FlowState, X, valid=None
-                 ) -> tuple[FlowState, np.ndarray]:
+        keys, regs, mk, mr, verdicts = self._step(
+            state.keys, state.regs, state.mit_keys, state.mit_regs, X,
+            valid,
+        )
+        return (MitigatedFlowState(self.spec, keys, regs, self.mitigation,
+                                   mk, mr), verdicts)
+
+    def __call__(self, state, X, valid=None):
         state, verdicts = self.dispatch(state, X, valid)
         return state, np.asarray(verdicts)
 
     def __repr__(self):
+        mit = (f", mitigation={self.mitigation.mode!r}"
+               if self.mitigation is not None else "")
         return (f"StatefulPipeline(slots={self.spec.n_slots}, "
                 f"width={self.spec.width}, backend={self.backend!r}, "
                 f"flow={self.flow_backend!r}, "
-                f"classifier={self.classifier_backend!r})")
+                f"classifier={self.classifier_backend!r}{mit})")

@@ -250,7 +250,10 @@ class PacketServeEngine:
     existing table or leave it None to start empty.  Padded rows carry
     ``valid=0`` and never touch the registers; batches apply strictly in
     arrival order — the state dependency itself sequentializes the
-    in-flight chain, so overlap is safe.
+    in-flight chain, so overlap is safe.  A pipeline with a trailing
+    ``Mitigate`` stage also threads its action table through the same
+    state; dropped packets come back as ``flowstate.MITIGATED`` (-1)
+    verdicts (docs/pipeline_ir.md#mitigation-contract).
 
     ``stats()["backend"]`` / ``["backend_batches"]`` report the engine that
     actually served each batch after any fallback; ``lat_p50_ms`` /
@@ -477,8 +480,15 @@ class PacketServeEngine:
     def _carry_state(self, pipeline) -> None:
         """Same spec: registers carry over bit-identically (the live
         arrays are simply kept).  Changed spec: the documented re-key
-        migration (see the hot-swap contract)."""
+        migration (see the hot-swap contract).  Pipelines that know their
+        own state shape (``StatefulPipeline.adopt_state``) own the whole
+        carry — including the mitigation action table, which follows the
+        same rules (docs/pipeline_ir.md#mitigation-contract)."""
         if not self._stateful:
+            return
+        adopt = getattr(pipeline, "adopt_state", None)
+        if adopt is not None:
+            self.state = adopt(self.state)
             return
         new_spec = getattr(pipeline, "spec", None)
         old_spec = getattr(self.state, "spec", None)

@@ -15,7 +15,11 @@
   Rows are routed host-side in arrival order; a device whose sub-batch
   fills forces the overflow rows back onto the queue head, so per-flow
   update order is preserved exactly.  Verdicts are scattered back to
-  arrival positions before they leave the engine.
+  arrival positions before they leave the engine.  A mitigated pipeline
+  (trailing ``Mitigate`` stage) threads its per-device ACTION tables the
+  same way — both tables key on the same flow key, so a flow's detection
+  row and action row always live on the same device
+  (docs/pipeline_ir.md#mitigation-contract).
 
 * On a **one-device host** the engine degrades to the plain
   ``PacketServeEngine`` serving path (no mesh, no routing) — same
@@ -75,11 +79,18 @@ def route_prefix(shard_ids: np.ndarray, n_shards: int, capacity: int
 
 @dataclasses.dataclass
 class ShardedFlowState:
-    """Per-device register tables, stacked on a leading shard axis."""
+    """Per-device register tables, stacked on a leading shard axis.
+
+    Mitigated pipelines add the per-device ACTION tables (``mit_*``
+    fields, None otherwise) — the same state vocabulary as
+    ``flowstate.MitigatedFlowState``, one table per shard."""
 
     spec: object
     keys: object                   # [D, S] int32
     regs: object                   # [D, S, W] f32
+    mit_spec: object = None        # flowstate.MitigationSpec | None
+    mit_keys: object = None        # [D, Sm] int32
+    mit_regs: object = None        # [D, Sm, 2] f32
 
     @property
     def n_shards(self) -> int:
@@ -88,6 +99,28 @@ class ShardedFlowState:
     @property
     def occupied(self) -> int:
         return int(np.sum(np.asarray(self.keys) >= 0))
+
+    @property
+    def mitigated_flows(self) -> int:
+        """Marked action-table slots across every shard."""
+        if self.mit_spec is None:
+            return 0
+        mk = np.asarray(self.mit_keys)
+        hits = np.asarray(self.mit_regs)[..., 0]
+        return int(np.sum((mk >= 0) & (hits >= self.mit_spec.threshold)))
+
+    def arrays(self) -> tuple:
+        """The stacked state arrays, in ``step_fn`` argument order."""
+        if self.mit_spec is None:
+            return (self.keys, self.regs)
+        return (self.keys, self.regs, self.mit_keys, self.mit_regs)
+
+    def with_arrays(self, arrays: tuple) -> "ShardedFlowState":
+        """Rebuild around fresh stacked arrays (one serving step's out)."""
+        if self.mit_spec is None:
+            return ShardedFlowState(self.spec, *arrays)
+        return ShardedFlowState(self.spec, arrays[0], arrays[1],
+                                self.mit_spec, arrays[2], arrays[3])
 
 
 class ShardedPacketServeEngine(PacketServeEngine):
@@ -128,7 +161,7 @@ class ShardedPacketServeEngine(PacketServeEngine):
         self._sub_batch = -(-int(max_batch) // n)       # ceil
         stateful = hasattr(pipeline, "init_state")
         self._mesh, self._sharded_fn = _build_sharded_step(
-            traceable, devices, stateful=stateful
+            traceable, devices, n_state=_n_state(pipeline) if stateful else 0
         )
         if stateful:
             from repro.core import stageir
@@ -201,9 +234,8 @@ class ShardedPacketServeEngine(PacketServeEngine):
         x = jnp.asarray(buf, jnp.float32).reshape(
             self.n_shards, b, self.feature_dim)
         v = jnp.asarray(valid, jnp.int32).reshape(self.n_shards, b)
-        keys, regs, verdicts = self._sharded_fn(
-            self.state.keys, self.state.regs, x, v)
-        return ShardedFlowState(self.state.spec, keys, regs), verdicts
+        outs = self._sharded_fn(*self.state.arrays(), x, v)
+        return self.state.with_arrays(outs[:-1]), outs[-1]
 
     def _unshard(self, v: np.ndarray, f: _InFlight) -> np.ndarray:
         """Scatter per-shard outputs (verdicts, or feature rows when the
@@ -224,7 +256,9 @@ class ShardedPacketServeEngine(PacketServeEngine):
         must also keep the flow-key columns — the shard a flow lives on is
         a pure function of its key, so changed key columns would strand
         rows on the wrong device's table (re-key across shards is a
-        restart, not a swap — see the hot-swap contract)."""
+        restart, not a swap — see the hot-swap contract).  Swapping
+        mitigation in or out is fine: the step signature grows or loses
+        the action-table arrays, and the rebuilt shard_map step matches."""
         if not self.sharded:
             return super()._prepare_swap(pipeline)
         traceable = _traceable_fn(pipeline)
@@ -235,7 +269,8 @@ class ShardedPacketServeEngine(PacketServeEngine):
             )
         payload = {"pipeline": pipeline}
         mesh, fn = _build_sharded_step(
-            traceable, self.devices, stateful=self._stateful
+            traceable, self.devices,
+            n_state=_n_state(pipeline) if self._stateful else 0,
         )
         payload["mesh"], payload["fn"] = mesh, fn
         b = self._sub_batch
@@ -257,7 +292,7 @@ class ShardedPacketServeEngine(PacketServeEngine):
 
             x = jnp.zeros((self.n_shards, b, self.feature_dim), jnp.float32)
             v = jnp.zeros((self.n_shards, b), jnp.int32)
-            np.asarray(fn(tmp.keys, tmp.regs, x, v)[2])
+            np.asarray(fn(*tmp.arrays(), x, v)[-1])
         else:
             np.asarray(fn(np.zeros((self.max_batch, self.feature_dim),
                                    np.float32)))
@@ -277,26 +312,63 @@ class ShardedPacketServeEngine(PacketServeEngine):
     def _carry_state(self, pipeline) -> None:
         if not (self.sharded and self._stateful):
             return super()._carry_state(pipeline)
-        new_spec = getattr(pipeline, "spec", None)
-        if new_spec is None or new_spec == self.state.spec:
-            return                     # bit-identical carry-over
-        from repro.flowstate.registers import FlowState, migrate_state
-
         import jax.numpy as jnp
 
-        keys, regs = [], []
-        for d in range(self.n_shards):  # re-key each shard's private table
-            m = migrate_state(
-                FlowState(self.state.spec,
-                          jnp.asarray(np.asarray(self.state.keys)[d]),
-                          jnp.asarray(np.asarray(self.state.regs)[d])),
-                new_spec,
-            )
-            keys.append(np.asarray(m.keys))
-            regs.append(np.asarray(m.regs))
-        self.state = ShardedFlowState(
-            new_spec, jnp.asarray(np.stack(keys)), jnp.asarray(np.stack(regs))
-        )
+        new_spec = getattr(pipeline, "spec", None)
+        if new_spec is None:
+            return
+        old = self.state
+        if new_spec == old.spec:
+            keys, regs = old.keys, old.regs
+        else:
+            from repro.flowstate.registers import FlowState, migrate_state
+
+            ks, rs = [], []
+            for d in range(self.n_shards):  # re-key each shard's table
+                m = migrate_state(
+                    FlowState(old.spec,
+                              jnp.asarray(np.asarray(old.keys)[d]),
+                              jnp.asarray(np.asarray(old.regs)[d])),
+                    new_spec,
+                )
+                ks.append(np.asarray(m.keys))
+                rs.append(np.asarray(m.regs))
+            keys = jnp.asarray(np.stack(ks))
+            regs = jnp.asarray(np.stack(rs))
+
+        new_mit = getattr(pipeline, "mitigation", None)
+        if new_mit is None:
+            self.state = ShardedFlowState(new_spec, keys, regs)
+            return
+        from repro.flowstate.mitigation import migrate_mitigation
+
+        old_mit = old.mit_spec
+        if old_mit == new_mit:             # bit-identical carry-over
+            mk, mr = old.mit_keys, old.mit_regs
+        elif old_mit is None:              # mitigation swapped IN: empty
+            from repro.flowstate.mitigation import MIT_WIDTH
+
+            mk = jnp.full((self.n_shards, new_mit.n_slots), -1, jnp.int32)
+            mr = jnp.zeros((self.n_shards, new_mit.n_slots, MIT_WIDTH),
+                           jnp.float32)
+        else:                              # re-key each shard's table
+            ks, rs = [], []
+            for d in range(self.n_shards):
+                k1, r1 = migrate_mitigation(
+                    np.asarray(old.mit_keys)[d],
+                    np.asarray(old.mit_regs)[d], old_mit, new_mit,
+                )
+                ks.append(np.asarray(k1))
+                rs.append(np.asarray(r1))
+            mk = jnp.asarray(np.stack(ks))
+            mr = jnp.asarray(np.stack(rs))
+        self.state = ShardedFlowState(new_spec, keys, regs, new_mit, mk, mr)
+
+
+def _n_state(pipeline) -> int:
+    """Leading state arrays of the pipeline's traceable step (2 for plain
+    flow state; 4 with a mitigation action table)."""
+    return int(getattr(pipeline, "n_state_arrays", 2))
 
 
 def _traceable_fn(pipeline):
@@ -316,8 +388,14 @@ def _traceable_fn(pipeline):
     return None
 
 
-def _build_sharded_step(traceable, devices, *, stateful: bool):
-    """jit(shard_map(...)) over a 1-D ("data",) mesh of ``devices``."""
+def _build_sharded_step(traceable, devices, *, n_state: int):
+    """jit(shard_map(...)) over a 1-D ("data",) mesh of ``devices``.
+
+    ``n_state`` is the number of leading per-device state arrays the
+    traceable step threads (0 = stateless; 2 = flow tables; 4 = flow +
+    mitigation action tables) — the step signature is ``(*state, x,
+    valid) -> (*state', verdicts)`` with every array sharded on its
+    leading axis."""
     import jax
     from jax.sharding import Mesh, PartitionSpec as P
 
@@ -325,16 +403,17 @@ def _build_sharded_step(traceable, devices, *, stateful: bool):
 
     mesh = Mesh(np.array(devices), ("data",))
 
-    if stateful:
-        def step(keys, regs, x, valid):
-            # each program sees its shard with the leading axis kept: [1, …]
-            k, r, v = traceable(keys[0], regs[0], x[0], valid[0])
-            return k[None], r[None], v[None]
+    if n_state:
+        def step(*args):
+            # each program sees its shard with the leading axis dropped,
+            # and returns it re-added: [1, …]
+            outs = traceable(*(a[0] for a in args))
+            return tuple(o[None] for o in outs)
 
         fn = jax.shard_map(
             step, mesh=mesh,
-            in_specs=(P("data"), P("data"), P("data"), P("data")),
-            out_specs=(P("data"), P("data"), P("data")),
+            in_specs=(P("data"),) * (n_state + 2),
+            out_specs=(P("data"),) * (n_state + 1),
             check_rep=False,
         )
         return mesh, jax.jit(fn)
@@ -356,8 +435,15 @@ def _init_sharded_state(pipeline, n_shards: int) -> ShardedFlowState:
     import jax.numpy as jnp
 
     spec = pipeline.spec
+    keys = jnp.full((n_shards, spec.n_slots), -1, jnp.int32)
+    regs = jnp.zeros((n_shards, spec.n_slots, spec.width), jnp.float32)
+    mit = getattr(pipeline, "mitigation", None)
+    if mit is None:
+        return ShardedFlowState(spec, keys, regs)
+    from repro.flowstate.mitigation import MIT_WIDTH
+
     return ShardedFlowState(
-        spec,
-        jnp.full((n_shards, spec.n_slots), -1, jnp.int32),
-        jnp.zeros((n_shards, spec.n_slots, spec.width), jnp.float32),
+        spec, keys, regs, mit,
+        jnp.full((n_shards, mit.n_slots), -1, jnp.int32),
+        jnp.zeros((n_shards, mit.n_slots, MIT_WIDTH), jnp.float32),
     )

@@ -1,0 +1,408 @@
+"""In-pipeline mitigation: the action-table contract end to end.
+
+Pins docs/pipeline_ir.md#mitigation-contract: the state BEFORE a packet
+decides its fate (so no packet is ever both dropped and verdicted, and
+the threshold-tripping packet is itself verdicted), drop/rate-limit
+cadences against python oracles, arrival-order batch-scan semantics with
+evict-on-collision, bit-identical action tables across execution engines
+(interpret vs Pallas detection path), across serving engines (plain vs
+sharded, depth > 1 overlap included), and across a hot swap installed
+while flows are actively rate-limited.  Also the reaction_report
+``mitigation_lag`` fields — the latent-bug fix: the SLO gate measures
+when the data plane STOPS a flow, not when it first flags it."""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+from repro.core import pallas_backend, stageir
+from repro.data import traffic
+from repro.flowstate import (
+    MITIGATED,
+    MitigatedFlowState,
+    MitigationSpec,
+    StatefulPipeline,
+    init_mitigation,
+    migrate_mitigation,
+    mitigate_update,
+)
+from repro.flowstate.registers import FlowStateSpec, hash_slot_np
+from repro.serve.packet_engine import PacketServeEngine
+from repro.serve.sharded import ShardedPacketServeEngine
+
+HSET = settings(max_examples=8, deadline=None)
+
+needs_pallas = pytest.mark.skipif(
+    not pallas_backend.pallas_available(),
+    reason="Pallas toolchain unavailable in this environment",
+)
+
+
+def _spec(n_slots=64, **kw):
+    return MitigationSpec(n_slots=n_slots, **kw)
+
+
+def _flow_stages(n_slots=64):
+    spec = FlowStateSpec(n_slots=n_slots, n_counters=1, n_ewma=1,
+                         hist_sizes=(4,), ewma_alpha=0.25)
+    fk = stageir.FlowKey((0,), n_slots)
+    ru = stageir.RegisterUpdate(
+        spec, ewma_cols=(1,), hist_cols=(1,),
+        hist_edges=(np.linspace(0, 1, 5)[1:-1],),
+    )
+    ws = stageir.WindowStats(spec, mode="all")
+    return [fk, ru, ws], ws.n_out
+
+
+def _always_attack_suffix(n_feat):
+    """Classifier that says 1 for every packet (oracle-friendly)."""
+    w = np.zeros((n_feat, 2), np.float32)
+    b = np.asarray([0.0, 1.0], np.float32)
+    return [stageir.FusedMLP([w], [b]), stageir.Reduce("argmax")]
+
+
+def _pipeline(mit_spec, backend="interpret", n_slots=64):
+    stages, n_feat = _flow_stages(n_slots)
+    stages += _always_attack_suffix(n_feat)
+    if mit_spec is not None:
+        stages.append(stageir.Mitigate(mit_spec))
+    return StatefulPipeline(stages, backend=backend)
+
+
+def _packets(rng, n, n_keys=6):
+    X = np.zeros((n, 2), np.float32)
+    X[:, 0] = rng.integers(1, 1 + n_keys, n)
+    X[:, 1] = rng.random(n)
+    return X
+
+
+def _serve(eng, X, batch):
+    got = [eng.flush() or None for _ in ()]  # noqa: keep list literal simple
+    out = []
+    for s in range(0, len(X), batch):
+        eng.submit(X[s:s + batch])
+        out.append(eng.flush())
+    return np.concatenate(out) if out else np.zeros(0, np.int32)
+
+
+# ------------------------------------------------------------ stage IR
+
+
+def test_mitigate_must_be_last_and_single():
+    mit = stageir.Mitigate(_spec())
+    stages, n_feat = _flow_stages()
+    with pytest.raises(ValueError, match="LAST"):
+        stageir.split_mitigation(stages + [mit] + _always_attack_suffix(n_feat))
+    with pytest.raises(ValueError, match="single"):
+        stageir.split_mitigation(
+            stages + _always_attack_suffix(n_feat) + [mit, mit])
+    rest, got = stageir.split_mitigation(
+        stages + _always_attack_suffix(n_feat) + [mit])
+    assert got is mit and len(rest) == 5
+
+
+def test_mitigate_meta_matches_specs():
+    mit = stageir.Mitigate(_spec(n_slots=128))
+    (ss,) = stageir.mitigation_specs(mit.spec)
+    assert mit.meta()["params"] == ss.params == 128 * (2 + 1)
+    assert mit.stateful
+    with pytest.raises(TypeError, match="StatefulPipeline"):
+        mit.apply(np.zeros((4, 2), np.float32))
+
+
+def test_mitigated_sentinel_pinned_everywhere():
+    # traffic.py stays jax-free by mirroring the sentinel; pin the mirror
+    assert traffic._MITIGATED == MITIGATED == -1
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="power of two"):
+        _spec(n_slots=48)
+    with pytest.raises(KeyError, match="mode"):
+        _spec(mode="shape")
+    with pytest.raises(ValueError, match="threshold"):
+        _spec(threshold=0)
+    with pytest.raises(ValueError, match="keep_every"):
+        _spec(mode="rate_limit", keep_every=1)
+
+
+# ----------------------------------------------------- update semantics
+
+
+def _oracle(spec, pkt_keys, verdicts, valid):
+    """Pure-python reference for mitigate_update (arrival order)."""
+    keys = np.full(spec.n_slots, -1, np.int64)
+    regs = np.zeros((spec.n_slots, 2))
+    out = np.array(verdicts, np.int64)
+    for p, (k, v, ok) in enumerate(zip(pkt_keys, verdicts, valid)):
+        if not ok:
+            continue
+        s = int(hash_slot_np(np.asarray([k]), spec.n_slots)[0])
+        if keys[s] != k:          # evict-on-collision, fresh row
+            keys[s] = k
+            regs[s] = 0.0
+        hits, since = regs[s]
+        marked = hits >= spec.threshold
+        if spec.mode == "drop":
+            drop = marked
+        else:
+            drop = marked and (int(since) % spec.keep_every != 0)
+        if drop:
+            out[p] = MITIGATED
+        regs[s, 0] = hits + (v == spec.attack_class)
+        regs[s, 1] = since + 1 if marked else 0.0
+    return keys, regs, out
+
+
+@HSET
+@given(seed=st.integers(0, 999), mode=st.sampled_from(("drop", "rate_limit")),
+       n_slots=st.sampled_from((2, 4, 16)))
+def test_mitigate_update_matches_oracle(seed, mode, n_slots):
+    """Small tables force eviction chains; the jnp scan must match the
+    python arrival-order oracle bit for bit, padding included."""
+    rng = np.random.default_rng(seed)
+    n = 96
+    spec = _spec(n_slots=n_slots, mode=mode, threshold=3, keep_every=3)
+    pkt_keys = rng.integers(1, 9, n).astype(np.int32)
+    verdicts = rng.integers(0, 2, n).astype(np.int32)
+    valid = (rng.random(n) < 0.9).astype(np.int32)
+    mk, mr = init_mitigation(spec)
+    mk, mr, out = mitigate_update(mk, mr, pkt_keys, verdicts, valid,
+                                  spec=spec)
+    ok_keys, ok_regs, ok_out = _oracle(spec, pkt_keys, verdicts, valid)
+    np.testing.assert_array_equal(np.asarray(mk), ok_keys)
+    np.testing.assert_array_equal(np.asarray(mr), ok_regs.astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(out), ok_out)
+    # padding keeps the classifier verdict and never touches the table
+    np.testing.assert_array_equal(np.asarray(out)[valid == 0],
+                                  verdicts[valid == 0])
+
+
+def test_threshold_packet_is_verdicted_not_dropped():
+    """The state BEFORE a packet decides its fate: with threshold t, the
+    first t packets of an attack flow are verdicted, packet t+1 is the
+    first drop — mitigation lag is exactly 1 + (t - 1) - 0 >= 1."""
+    spec = _spec(mode="drop", threshold=3)
+    keys = np.full(10, 7, np.int32)
+    v = np.ones(10, np.int32)
+    mk, mr = init_mitigation(spec)
+    _, _, out = mitigate_update(mk, mr, keys, v, np.ones(10, np.int32),
+                                spec=spec)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  [1, 1, 1, -1, -1, -1, -1, -1, -1, -1])
+
+
+def test_rate_limit_cadence():
+    """After marking, every keep_every-th packet passes (since resets at
+    the mark, so the FIRST post-threshold packet passes)."""
+    spec = _spec(mode="rate_limit", threshold=2, keep_every=4)
+    keys = np.full(14, 5, np.int32)
+    v = np.ones(14, np.int32)
+    mk, mr = init_mitigation(spec)
+    _, _, out = mitigate_update(mk, mr, keys, v, np.ones(14, np.int32),
+                                spec=spec)
+    np.testing.assert_array_equal(
+        np.asarray(out), [1, 1, 1, -1, -1, -1, 1, -1, -1, -1, 1, -1, -1, -1])
+
+
+def test_no_packet_both_dropped_and_verdicted():
+    rng = np.random.default_rng(0)
+    spec = _spec(n_slots=8, mode="rate_limit", threshold=2, keep_every=2)
+    pkt_keys = rng.integers(1, 30, 256).astype(np.int32)
+    v = np.ones(256, np.int32)
+    mk, mr = init_mitigation(spec)
+    _, _, out = mitigate_update(mk, mr, pkt_keys, v, np.ones(256, np.int32),
+                                spec=spec)
+    out = np.asarray(out)
+    assert set(np.unique(out)) <= {MITIGATED, 1}
+    assert (out == MITIGATED).sum() > 0
+
+
+def test_migrate_mitigation_rekeys():
+    spec = _spec(n_slots=8)
+    big = _spec(n_slots=32)
+    mk, mr = init_mitigation(spec)
+    keys = np.asarray([3, 11, 19], np.int32)
+    mk, mr, _ = mitigate_update(mk, mr, keys,
+                                np.ones(3, np.int32), np.ones(3, np.int32),
+                                spec=spec)
+    nk, nr = migrate_mitigation(mk, mr, spec, big)
+    nk, nr = np.asarray(nk), np.asarray(nr)
+    assert nk.shape == (32,) and nr.shape == (32, 2)
+    for k in keys:
+        s_old = int(hash_slot_np(np.asarray([k]), 8)[0])
+        if np.asarray(mk)[s_old] != k:
+            continue                      # evicted in the small table
+        s_new = int(hash_slot_np(np.asarray([k]), 32)[0])
+        assert nk[s_new] == k
+        np.testing.assert_array_equal(nr[s_new], np.asarray(mr)[s_old])
+
+
+# ------------------------------------------------------- pipeline parity
+
+
+@needs_pallas
+@pytest.mark.parametrize("mode", ["drop", "rate_limit"])
+def test_interpret_pallas_parity(mode):
+    rng = np.random.default_rng(3)
+    X = _packets(rng, 400, n_keys=12)
+    spec = _spec(n_slots=16, mode=mode, threshold=4, keep_every=3)
+    out = {}
+    for b in ("interpret", "pallas"):
+        pipe = _pipeline(spec, backend=b, n_slots=32)
+        assert pipe.n_state_arrays == 4
+        eng = PacketServeEngine(pipe, feature_dim=2, max_batch=64)
+        v = _serve(eng, X, 64)
+        out[b] = (v, eng.state)
+    assert out["pallas"][1].mitigated_flows > 0
+    np.testing.assert_array_equal(out["interpret"][0], out["pallas"][0])
+    for f in ("keys", "regs", "mit_keys", "mit_regs"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out["interpret"][1], f)),
+            np.asarray(getattr(out["pallas"][1], f)),
+            err_msg=f"{f} diverged between execution engines")
+
+
+def test_backend_reported_honestly():
+    spec = _spec()
+    assert _pipeline(spec, backend="interpret").backend == "interpret"
+    assert _pipeline(None, backend="interpret").backend == "interpret"
+    if pallas_backend.pallas_available():
+        # fused Pallas detection + interpret mitigation is NOT pure pallas
+        assert _pipeline(spec, backend="pallas").backend == "mixed"
+        assert _pipeline(None, backend="pallas").backend == \
+            "pallas-fused-flow"
+
+
+# ------------------------------------------------------- serving engines
+
+
+@pytest.mark.parametrize("depth", [1, 3])
+def test_engines_bit_identical_registers(depth):
+    """Plain vs sharded (forced 1-shard) engines, overlap depth > 1
+    included: same verdict stream, same final action table."""
+    rng = np.random.default_rng(11)
+    X = _packets(rng, 600, n_keys=20)
+    spec = _spec(n_slots=32, mode="drop", threshold=3)
+
+    pipe = _pipeline(spec, n_slots=64)
+    plain = PacketServeEngine(pipe, feature_dim=2, max_batch=64, depth=depth)
+    v_plain = _serve(plain, X, 64)
+
+    pipe = _pipeline(spec, n_slots=64)
+    shard = ShardedPacketServeEngine(pipe, feature_dim=2, max_batch=64,
+                                     depth=depth, min_shards=1)
+    assert shard.sharded and shard.n_shards == 1
+    v_shard = _serve(shard, X, 64)
+
+    np.testing.assert_array_equal(v_plain, v_shard)
+    assert isinstance(plain.state, MitigatedFlowState)
+    np.testing.assert_array_equal(np.asarray(plain.state.mit_keys),
+                                  np.asarray(shard.state.mit_keys)[0])
+    np.testing.assert_array_equal(np.asarray(plain.state.mit_regs),
+                                  np.asarray(shard.state.mit_regs)[0])
+    assert plain.state.mitigated_flows == shard.state.mitigated_flows > 0
+
+
+@HSET
+@given(data=st.data())
+def test_hot_swap_during_mitigation(data):
+    """Swap while flows are actively rate-limited: exactly one swap, no
+    packet lost or duplicated, the action table carries (marked flows
+    stay marked), and no packet is both dropped and verdicted."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 500)))
+    X = _packets(rng, 300, n_keys=4)
+    spec = _spec(n_slots=16, mode="rate_limit",
+                 threshold=data.draw(st.integers(1, 4)), keep_every=3)
+    depth = data.draw(st.integers(1, 3))
+    batch = data.draw(st.sampled_from((32, 64)))
+    swap_at = data.draw(st.integers(1, max(1, len(X) // batch - 1)))
+
+    eng = PacketServeEngine(_pipeline(spec), feature_dim=2,
+                            max_batch=batch, depth=depth)
+    out = []
+    for i, s in enumerate(range(0, len(X), batch)):
+        if i == swap_at:
+            marked_before = int(eng.state.mitigated_flows)
+            eng.swap(_pipeline(spec))
+        eng.submit(X[s:s + batch])
+        out.append(eng.flush())
+    v = np.concatenate(out)
+    assert len(v) == len(X)
+    assert eng.stats()["swaps"] == 1
+    assert set(np.unique(v)) <= {MITIGATED, 1}
+    # the carried action table never un-marks a flow
+    assert int(eng.state.mitigated_flows) >= marked_before
+    # same traffic served without a swap gives the same verdict stream —
+    # the swap was invisible to mitigation (bit-identical carry)
+    ref = PacketServeEngine(_pipeline(spec), feature_dim=2,
+                            max_batch=batch, depth=depth)
+    np.testing.assert_array_equal(v, _serve(ref, X, batch))
+
+
+def test_swap_can_drop_and_add_mitigation():
+    rng = np.random.default_rng(5)
+    X = _packets(rng, 200, n_keys=3)
+    spec = _spec(n_slots=16, threshold=2)
+    eng = PacketServeEngine(_pipeline(spec), feature_dim=2, max_batch=50)
+    _serve(eng, X, 50)
+    assert eng.state.mitigated_flows > 0
+    eng.swap(_pipeline(None))          # mitigation removed: table dropped
+    eng.submit(X[:50]); v = eng.flush()
+    assert not isinstance(eng.state, MitigatedFlowState)
+    assert MITIGATED not in v
+    eng.swap(_pipeline(spec))          # re-added: fresh empty table
+    eng.submit(X[:50]); eng.flush()
+    assert isinstance(eng.state, MitigatedFlowState)
+
+
+# -------------------------------------------------- reaction-report fix
+
+
+def test_reaction_report_mitigation_lag():
+    """Regression for the latent bug: reaction_pkts counts the first
+    DETECTED packet; the new fields measure the first MITIGATED one."""
+    packets = np.zeros((8, 4), np.float32)
+    packets[:, traffic.COL_FLOW] = 9
+    stream = traffic.PacketStream(
+        "synthetic", packets, np.ones(8, np.int32),
+        np.full(8, 9, np.int32), {9: 1},
+        times=np.arange(8, dtype=np.float64))
+    #            detect here v        v first drop, lag = 3
+    verdicts = np.asarray([0, 1, 1, 1, -1, -1, 1, -1])
+    r = traffic.reaction_report(stream, verdicts)
+    assert r["reaction_pkts_median"] == 2.0        # 1-based first detect
+    assert r["mitigated_flows"] == 1
+    assert r["mitigation_lag_median"] == 3.0       # first drop - detect
+    assert r["leaked_pkts_total"] == 1             # the verdicted pkt 6
+    assert r["benign_mitigated_flow_rate"] == 0.0
+
+
+def test_reaction_report_sentinels_without_mitigation():
+    s = traffic.make_stream("benign", n_packets=2_000, seed=0)
+    r = traffic.reaction_report(s, np.zeros(s.n_packets, np.int64))
+    for k in ("mitigated_flows", "mitigation_lag_median",
+              "mitigation_lag_p95", "leaked_pkts_total",
+              "benign_mitigated_flow_rate"):
+        assert r[k] == 0
+
+
+# ----------------------------------------------------------- feasibility
+
+
+def test_mitigation_feasibility_charges_sram():
+    from repro.core import feasibility
+
+    spec = _spec(n_slots=256)
+    for platform in ("taurus", "tofino", "fpga"):
+        rep = feasibility.mitigation_report(spec, platform)
+        assert rep.feasible, rep.reasons
+    rep = feasibility.mitigation_report(spec, "taurus")
+    assert rep.resources["register_words"] == 256 * (2 + 1)
+    # the harness-sized table fits switch SRAM but honestly exceeds the
+    # Taurus MU budget; a 2^20-slot table overflows Tofino register SRAM
+    big = _spec(n_slots=4096)
+    assert feasibility.mitigation_report(big, "tofino").feasible
+    assert not feasibility.mitigation_report(big, "taurus").feasible
+    huge = _spec(n_slots=1 << 20)
+    assert not feasibility.mitigation_report(huge, "tofino").feasible

@@ -1,0 +1,189 @@
+"""Traffic-scenario suite: replayability, topology slicing, auto-labels.
+
+The closed attack/defense loop is only as trustworthy as its traffic
+generator, so these tests pin the suite's load-bearing properties: every
+scenario is bit-replayable from its seed (the replay harness depends on
+train-on-seed-A / replay-on-seed-B being deterministic), the topology
+views partition the stream by whole flows and compose back to it, the
+windowed stats aggregate exactly, and the heuristic ``auto_label`` rules
+recover the generation-time ground truth with high agreement on EVERY
+scenario — the analytic margins in its docstring, checked empirically."""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+from repro.data import traffic
+
+HSET = settings(max_examples=6, deadline=None)
+
+NEW_SCENARIOS = ("syn_flood", "udp_flood", "icmp_flood", "slow_scan",
+                 "coordinated_ddos")
+
+
+def _stream(scenario, seed=0, n=12_000):
+    return traffic.make_stream(scenario, n_packets=n, seed=seed)
+
+
+# ---------------------------------------------------------- replayability
+
+
+@pytest.mark.parametrize("scenario", traffic.SCENARIOS)
+def test_seed_replayable_bit_identical(scenario):
+    a = _stream(scenario, seed=7)
+    b = _stream(scenario, seed=7)
+    np.testing.assert_array_equal(a.packets, b.packets)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_array_equal(a.times, b.times)
+    assert a.flow_labels == b.flow_labels
+
+
+@pytest.mark.parametrize("scenario", NEW_SCENARIOS)
+def test_stream_invariants(scenario):
+    s = _stream(scenario)
+    assert s.n_packets > 0 and s.n_flows > 0
+    # arrival-ordered, finite, schema-clean
+    assert np.all(np.diff(s.times) >= 0)
+    assert np.isfinite(s.packets).all()
+    assert np.all(s.packets[:, traffic.COL_LEN] >= 40)
+    assert np.all(s.packets[:, traffic.COL_LEN] <= 1500)
+    assert np.all(s.packets[:, traffic.COL_IPT] >= 0)
+    # flow ids exact in f32 and consistent with the int column
+    np.testing.assert_array_equal(
+        s.packets[:, traffic.COL_FLOW].astype(np.int64), s.flow_ids)
+    # per-packet labels inherit the flow label
+    for fid in list(s.flow_labels)[:50]:
+        m = s.flow_ids == fid
+        if m.any():
+            assert np.all(s.labels[m] == s.flow_labels[fid])
+    # attack scenarios really carry both classes
+    assert set(np.unique(s.labels)) == {0, 1}
+
+
+def test_different_seeds_differ():
+    a, b = _stream("syn_flood", seed=0), _stream("syn_flood", seed=1)
+    assert not np.array_equal(a.packets, b.packets)
+
+
+@HSET
+@given(start=st.integers(0, 9_000), size=st.integers(1, 3_000))
+def test_slice_invariants(start, size):
+    s = _stream("coordinated_ddos")
+    w = s.slice(start, start + size)
+    np.testing.assert_array_equal(w.packets, s.packets[start:start + size])
+    np.testing.assert_array_equal(w.times, s.times[start:start + size])
+    # flow_labels keep exactly the flows that appear in the window
+    assert set(w.flow_labels) == set(int(f) for f in np.unique(w.flow_ids))
+    for f, l in w.flow_labels.items():
+        assert s.flow_labels[f] == l
+
+
+# -------------------------------------------------------------- topology
+
+
+@pytest.mark.parametrize("n_switches", [1, 3, 4])
+def test_switch_streams_partition_and_compose(n_switches):
+    s = _stream("udp_flood", seed=3)
+    views = traffic.switch_streams(s, n_switches)
+    assert len(views) == n_switches
+    assert sum(v.n_packets for v in views) == s.n_packets
+    # flows are pinned whole: no flow id appears on two switches
+    seen = [set(np.unique(v.flow_ids)) for v in views]
+    for i in range(n_switches):
+        for j in range(i + 1, n_switches):
+            assert not (seen[i] & seen[j])
+        # each view is itself arrival-ordered
+        assert np.all(np.diff(views[i].times) >= 0)
+    back = traffic.compose_streams(views)
+    assert back.scenario == s.scenario
+    # parent flow_labels also list flows trimmed out of the packet budget;
+    # the views (and hence the composition) only carry flows that appear
+    present = set(int(f) for f in np.unique(s.flow_ids))
+    assert back.flow_labels == {f: l for f, l in s.flow_labels.items()
+                                if f in present}
+    # identical packet multiset in identical per-flow order: compare under
+    # a deterministic (time, flow) sort — same-flow timestamps are unique
+    # (gaps clipped >= 1e-5) so this order is well defined on both sides
+    o1 = np.lexsort((s.flow_ids, s.times))
+    o2 = np.lexsort((back.flow_ids, back.times))
+    np.testing.assert_array_equal(s.packets[o1], back.packets[o2])
+    np.testing.assert_array_equal(s.labels[o1], back.labels[o2])
+
+
+def test_compose_requires_times():
+    s = _stream("benign")
+    bare = traffic.PacketStream(s.scenario, s.packets, s.labels, s.flow_ids,
+                                s.flow_labels, times=None)
+    with pytest.raises(ValueError, match="timestamped"):
+        traffic.compose_streams([bare])
+
+
+def test_switch_of_flow_deterministic_and_balanced():
+    fids = np.arange(4096, dtype=np.int64)
+    a = traffic.switch_of_flow(fids, 4)
+    np.testing.assert_array_equal(a, traffic.switch_of_flow(fids, 4))
+    counts = np.bincount(a, minlength=4)
+    assert counts.min() > 0.15 * len(fids)  # no switch starves
+
+
+# ------------------------------------------------- windowed stats + labels
+
+
+def test_windowed_flow_stats_exact():
+    s = _stream("syn_flood", seed=2, n=6_000)
+    stats = traffic.windowed_flow_stats(s, window_s=2.0)
+    n_rows = len(stats["window"])
+    assert n_rows > 0
+    assert int(stats["pkt_count"].sum()) == s.n_packets
+    # cross-check one (window, flow) cell against a direct recompute
+    k = n_rows // 2
+    w, f = int(stats["window"][k]), int(stats["flow_id"][k])
+    win = np.floor((s.times - s.times[0]) / 2.0).astype(np.int64)
+    m = (win == w) & (s.flow_ids == f)
+    assert int(stats["pkt_count"][k]) == int(m.sum())
+    np.testing.assert_allclose(
+        stats["byte_count"][k], s.packets[m, traffic.COL_LEN].sum(),
+        rtol=1e-6)
+    np.testing.assert_allclose(
+        stats["mean_ipt"][k], s.packets[m, traffic.COL_IPT].mean(),
+        rtol=1e-5, atol=1e-9)
+
+
+@pytest.mark.parametrize("scenario", traffic.SCENARIOS)
+def test_auto_label_matches_ground_truth(scenario):
+    s = _stream(scenario, n=30_000)
+    labels = traffic.auto_label(traffic.windowed_flow_stats(s))
+    atk = [f for f, l in s.flow_labels.items()
+           if l == 1 and (s.flow_ids == f).any()]
+    ben = [f for f, l in s.flow_labels.items()
+           if l == 0 and (s.flow_ids == f).any()]
+    assert set(labels) == set(atk) | set(ben)
+    if atk:
+        det = sum(labels[f] for f in atk) / len(atk)
+        assert det >= 0.9, f"{scenario}: auto-label detection {det:.3f}"
+    fp = sum(labels[f] for f in ben) / len(ben)
+    assert fp <= 0.02, f"{scenario}: auto-label benign FP {fp:.3f}"
+
+
+def test_flood_scenarios_are_scenarios():
+    assert set(traffic.FLOOD_SCENARIOS) <= set(traffic.SCENARIOS)
+
+
+# --------------------------------------------------- feature-dataset path
+
+
+@pytest.mark.parametrize("scenario", NEW_SCENARIOS)
+def test_stream_feature_dataset_on_new_scenarios(scenario):
+    s = _stream(scenario, n=4_000)
+    stages, names = traffic.flow_feature_stages(n_slots=256)
+    ds, mu, sd = traffic.stream_feature_dataset(s, stages, names,
+                                                sample_every=8)
+    for x in (ds.train_x, ds.test_x, mu, sd):
+        assert np.isfinite(x).all()
+    assert len(ds.train_x) > 0 and len(ds.test_x) > 0
+    assert ds.train_x.shape[1] == len(names)
+    # non-degenerate: the standardized features are not constant — the
+    # register file really saw per-flow structure, and both classes
+    # survive the subsample
+    assert float(ds.train_x.std()) > 0.1
+    assert set(np.unique(np.concatenate([ds.train_y, ds.test_y]))) == {0, 1}
