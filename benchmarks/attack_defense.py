@@ -25,6 +25,7 @@ via benchmarks.run.
 
 from __future__ import annotations
 
+import os
 import textwrap
 
 import numpy as np
@@ -33,8 +34,18 @@ from repro.core import codegen, mlalgos, stageir
 from repro.data import traffic
 from repro.flowstate import MITIGATED, MitigationSpec, StatefulPipeline
 from repro.serve.packet_engine import PacketServeEngine
+from repro.telemetry import Telemetry
 
-from benchmarks.common import render_table, run_sharded_probe, save_result
+from benchmarks.common import (
+    RESULTS_DIR,
+    render_table,
+    run_sharded_probe,
+    save_result,
+)
+
+# the operator event journal of the replay (drift/swap/mitigation/SLO
+# events, JSON lines) — CI uploads this file as a build artifact
+JOURNAL_PATH = os.path.join(RESULTS_DIR, "attack_defense_journal.jsonl")
 
 N_PACKETS = 12_000
 N_SLOTS = 2048          # detection table
@@ -71,9 +82,10 @@ def build_pipeline(scenario: str, *, mode: str = "drop",
     return list(stages) + suffix + [mit]
 
 
-def serve_once(pipe, stream, *, depth: int = 2):
+def serve_once(pipe, stream, *, depth: int = 2, telemetry=False):
     eng = PacketServeEngine(pipe, feature_dim=len(traffic.COLUMNS),
-                            max_batch=BATCH, depth=depth)
+                            max_batch=BATCH, depth=depth,
+                            telemetry=telemetry)
     v = np.concatenate(list(eng.serve_stream(stream.chunks(BATCH))))
     return v, eng
 
@@ -153,6 +165,14 @@ def swap_under_rate_limit() -> dict:
 
 
 def main() -> dict:
+    # ONE shared telemetry plane for the whole replay: every scenario's
+    # pallas engine reports into it, and its journal (mitigation
+    # engagements, SLO-gate outcomes) lands in the JSON-lines artifact
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    if os.path.exists(JOURNAL_PATH):
+        os.remove(JOURNAL_PATH)
+    tel = Telemetry(journal_path=JOURNAL_PATH)
+
     rows, serve_stats, reports, gates = [], [], {}, []
     for scenario in SCENARIOS:
         stages = build_pipeline(scenario)
@@ -161,7 +181,9 @@ def main() -> dict:
         verdicts, engines = {}, {}
         for backend in ("interpret", "pallas"):
             pipe = StatefulPipeline(stages, backend=backend)
-            verdicts[backend], engines[backend] = serve_once(pipe, stream)
+            verdicts[backend], engines[backend] = serve_once(
+                pipe, stream,
+                telemetry=tel if backend == "pallas" else False)
         np.testing.assert_array_equal(
             verdicts["interpret"], verdicts["pallas"],
             err_msg=f"{scenario}: engines diverged under mitigation")
@@ -210,6 +232,28 @@ def main() -> dict:
         ["engine", "pipeline", "backend", "depth", "shards", "pkt_per_s",
          "lat_p50_ms", "lat_p95_ms", "lat_p99_ms"]))
 
+    # journal every SLO outcome FIRST — a violated gate must show up in
+    # the uploaded artifact, not vanish with the raised assert
+    outcomes = []
+    for scenario, react, stop_median in gates:
+        slo = SLO_REACTION_PKTS[scenario]
+        checks = {
+            "detection_rate": bool(react["detection_rate"]
+                                   >= SLO_DETECTION_RATE),
+            "stop_median_pkts": bool(stop_median <= slo),
+            "leaked_pkts": react["leaked_pkts_total"] == 0,
+            "benign_collateral": bool(react["benign_mitigated_flow_rate"]
+                                      <= SLO_BENIGN_MITIGATED),
+        }
+        tel.journal.emit(
+            "slo_gate", scenario=scenario, ok=all(checks.values()),
+            checks=checks,
+            detection_rate=round(react["detection_rate"], 4),
+            stop_median_pkts=stop_median, slo_pkts=slo,
+            leaked_pkts=react["leaked_pkts_total"],
+            benign_rate=round(react["benign_mitigated_flow_rate"], 4))
+        outcomes.append((scenario, react, stop_median, slo, checks))
+
     payload = {
         "n_packets": N_PACKETS,
         "mit_slots": MIT_SLOTS,
@@ -218,24 +262,27 @@ def main() -> dict:
         "reports": reports,
         "swap_under_rate_limit": swap,
         "serve_stats": serve_stats,
+        "journal_path": JOURNAL_PATH,
+        "journal_events": len(tel.journal.events()),
     }
     save_result("attack_defense", payload)
+    tel.close()
+    print(f"\noperator event journal -> {JOURNAL_PATH} "
+          f"({payload['journal_events']} events)")
 
     # SLO gates LAST, after the artifact records the measured numbers —
     # a violated SLO must fail the gate, not erase the trajectory entry
-    for scenario, react, stop_median in gates:
-        slo = SLO_REACTION_PKTS[scenario]
-        assert react["detection_rate"] >= SLO_DETECTION_RATE, (
+    for scenario, react, stop_median, slo, checks in outcomes:
+        assert checks["detection_rate"], (
             f"{scenario}: detection rate {react['detection_rate']:.3f} "
             f"below {SLO_DETECTION_RATE}")
-        assert stop_median <= slo, (
+        assert checks["stop_median_pkts"], (
             f"{scenario}: median packets-to-stop {stop_median} exceeds "
             f"the {slo}-packet SLO")
-        assert react["leaked_pkts_total"] == 0, (
+        assert checks["leaked_pkts"], (
             f"{scenario}: {react['leaked_pkts_total']} attack packets "
             f"leaked past installed drop entries")
-        assert react["benign_mitigated_flow_rate"] <= \
-            SLO_BENIGN_MITIGATED, (
+        assert checks["benign_collateral"], (
             f"{scenario}: benign collateral "
             f"{react['benign_mitigated_flow_rate']:.3f} above "
             f"{SLO_BENIGN_MITIGATED}")

@@ -121,6 +121,8 @@ class HotSwapController:
         score = self.detector.update(window)
         self._buffer.append(np.array(window, np.float32))
         if self.detector.fired and not self.retraining:
+            self._emit("drift", score=round(float(score), 6),
+                       windows=len(self._buffer))
             self._launch()
         return score
 
@@ -128,8 +130,20 @@ class HotSwapController:
     def retraining(self) -> bool:
         return self._worker is not None and self._worker.running
 
+    def _journal(self):
+        """The engine's journal, when a telemetry plane is attached."""
+        tel = getattr(self.engine, "telemetry", lambda: None)()
+        return tel.journal if tel is not None else None
+
+    def _emit(self, kind: str, **fields) -> None:
+        j = self._journal()
+        if j is not None:
+            j.emit(kind, **fields)
+
     def _launch(self) -> None:
         self.episodes += 1
+        self._emit("retrain_start", episode=self.episodes,
+                   windows=len(self._buffer))
         self._worker = BackgroundRetrainer(
             self.engine, self.retrain_fn, list(self._buffer),
             on_done=self._finish,
@@ -138,8 +152,13 @@ class HotSwapController:
     def _finish(self, worker: BackgroundRetrainer) -> None:
         if worker.error is not None:
             self.errors.append(worker.error)
+            self._emit("retrain_done", episode=self.episodes, ok=False,
+                       error=repr(worker.error),
+                       wall_s=round(worker.wall_s, 3))
             return
         self.swapped += 1
+        self._emit("retrain_done", episode=self.episodes, ok=True,
+                   wall_s=round(worker.wall_s, 3))
         # re-arm: the NEW model gets its own drift episode
         self.detector.reset()
 

@@ -102,8 +102,9 @@ class ServeStats:
 
     def _lat_ms(self, q: float) -> float:
         if not self.batch_lat_s:
-            return 0.0
-        return float(np.percentile(np.asarray(self.batch_lat_s), q)) * 1e3
+            return 0.0             # nothing served: percentiles are 0, not nan
+        v = float(np.percentile(np.asarray(self.batch_lat_s), q)) * 1e3
+        return v if np.isfinite(v) else 0.0
 
     @property
     def lat_p50_ms(self) -> float:
@@ -258,11 +259,24 @@ class PacketServeEngine:
     ``stats()["backend"]`` / ``["backend_batches"]`` report the engine that
     actually served each batch after any fallback; ``lat_p50_ms`` /
     ``lat_p95_ms`` / ``lat_p99_ms`` are per-batch pipeline latency
-    percentiles and ``dispatch_s`` the host-side dispatch time."""
+    percentiles and ``dispatch_s`` the host-side dispatch time.
+
+    ``telemetry`` attaches the unified observability plane
+    (docs/pipeline_ir.md#telemetry-contract): ``None``/``True`` create a
+    fresh enabled ``repro.telemetry.Telemetry``, ``False`` disables
+    recording entirely, and an existing instance is shared (several
+    engines reporting into one plane).  Recording happens host-side at
+    dispatch-ring boundaries only — counters/spans per dispatched batch,
+    flow-table health scans at flush boundaries, operator events (hot
+    swaps, backend fallbacks) into the journal — so the compiled
+    programs and the overlap pipeline are untouched.  Read it back via
+    ``engine.telemetry()``."""
 
     def __init__(self, pipeline: Callable[[np.ndarray], np.ndarray], *,
                  feature_dim: int, max_batch: int = 256,
-                 backend: str | None = None, state=None, depth: int = 2):
+                 backend: str | None = None, state=None, depth: int = 2,
+                 telemetry=None):
+        requested_backend = backend
         if backend is not None:
             pipeline = _rebind_backend(pipeline, backend)
         self.pipeline = pipeline
@@ -300,7 +314,210 @@ class PacketServeEngine:
         self._swap_lock = threading.Lock()
         self._pending_swap: tuple | None = None
         self.stats_ = ServeStats(backend=self.backend, depth=self.depth)
-        self._warm_up()
+        self._init_telemetry(telemetry, requested_backend)
+        if self._tel is not None:
+            with self._tel.tracer.span("warm_up", cat="compile",
+                                       backend=self.backend):
+                self._warm_up()
+        else:
+            self._warm_up()
+
+    # --------------------------------------------------------- telemetry
+
+    def telemetry(self):
+        """The attached ``repro.telemetry.Telemetry`` plane (None when
+        constructed with ``telemetry=False``)."""
+        return self._tel
+
+    # slot-segmentation stats are recomputed host-side from the packet
+    # rows — ~50us of numpy per batch that would contend with XLA's CPU
+    # threads; sampling every Nth batch (first included) keeps the
+    # schedule-routing picture while holding the telemetry overhead
+    # inside the 97% throughput budget.  Tests set 1 for exact counts.
+    TELEMETRY_SEG_SAMPLE = 8
+
+    def _init_telemetry(self, telemetry, requested_backend) -> None:
+        """Resolve the plane and pre-bind every hot-path handle ONCE, so
+        per-batch recording is a few attribute adds (no name lookups,
+        no locks — see repro.telemetry.metrics)."""
+        from repro import telemetry as T
+
+        self._tel = T.resolve(telemetry)
+        self._tel_flowkey = None
+        self._tel_slots = 0
+        self._backend_children: dict[str, Any] = {}
+        self._health_keys = None       # previous flush-boundary key scan
+        self._health_marked = 0        # previous marked-flow count
+        self._seg_n = 0                # segmentation sampling tick
+        if self._tel is None:
+            return
+        m = self._tel.metrics
+        self._tm = {
+            "packets": m.counter(
+                "serve_packets_total", "real packets dispatched").default,
+            "batches": m.counter(
+                "serve_batches_total", "micro-batches dispatched").default,
+            "pad": m.counter(
+                "serve_pad_packets_total",
+                "zero rows added to fill fixed batch shapes").default,
+            "swaps": m.counter(
+                "serve_swaps_total", "hot swaps installed").default,
+            "mitigated": m.counter(
+                "serve_mitigated_packets_total",
+                "packets dropped/limited by the action table").default,
+            "dispatch_ms": m.histogram(
+                "serve_dispatch_ms",
+                "host time staging + launching one batch").default,
+            "batch_lat_ms": m.histogram(
+                "serve_batch_latency_ms",
+                "dispatch -> result ready, per batch").default,
+            "swap_lat_ms": m.histogram(
+                "serve_swap_latency_ms",
+                "swap request -> ring-boundary install").default,
+            "lockstep": m.counter(
+                "flow_lockstep_batches_total",
+                "sampled stateful batches on the compacted lockstep "
+                "schedule"
+            ).default,
+            "drain": m.counter(
+                "flow_drain_batches_total",
+                "sampled stateful batches routed to the drain/reference "
+                "walk"
+            ).default,
+            "deep_pkts": m.counter(
+                "flow_deep_packets_total",
+                "packets deeper than PAR_ROUNDS in a same-slot chain "
+                "(sampled batches)"
+            ).default,
+            "max_chain": m.gauge(
+                "flow_batch_max_chain",
+                "deepest same-slot chain of the last dispatched batch"
+            ).default,
+            "overflow": m.counter(
+                "serve_route_overflow_total",
+                "rows pushed back to the queue head because their "
+                "shard's sub-batch filled (sharded routing)"
+            ).default,
+        }
+        self._backend_counter = m.counter(
+            "serve_backend_batches_total",
+            "batches per execution backend actually serving")
+        m.gauge("serve_depth", "dispatch-pipeline depth").default.set(
+            self.depth)
+        self._resolve_flow_telemetry(self.pipeline)
+        if (requested_backend == "pallas"
+                and self.backend in ("interpret", "mixed")):
+            self._tel.journal.emit(
+                "backend_fallback", requested=requested_backend,
+                actual=self.backend, engine=type(self).__name__)
+
+    def _resolve_flow_telemetry(self, pipeline) -> None:
+        """Grab the FlowKey stage (if any) so per-batch slot-collision
+        stats can be recomputed host-side from the packet rows."""
+        if self._tel is None or not self._stateful:
+            return
+        stages = getattr(pipeline, "stages", None)
+        spec = getattr(pipeline, "spec", None)
+        if stages is None or spec is None:
+            return
+        from repro.core import stageir
+
+        fk = next((s for s in stages if isinstance(s, stageir.FlowKey)),
+                  None)
+        if fk is not None:
+            self._tel_flowkey = fk
+            self._tel_slots = int(spec.n_slots)
+            # pre-bind the segmentation helpers off the hot path
+            from repro.flowstate.registers import hash_slot_np
+            from repro.telemetry import batch_segmentation
+
+            self._hash_slot_np = hash_slot_np
+            self._batch_segmentation = batch_segmentation
+
+    def _seg_tick(self) -> bool:
+        """True on the sampled batches (every TELEMETRY_SEG_SAMPLE-th,
+        first included) whose slot segmentation gets recomputed."""
+        self._seg_n += 1
+        return self._seg_n % self.TELEMETRY_SEG_SAMPLE == 1 \
+            or self.TELEMETRY_SEG_SAMPLE == 1
+
+    def _record_dispatch(self, rows: np.ndarray, n: int, pad: int,
+                         t0: float, t1: float, slots=None) -> None:
+        """Per-batch hot-path recording: counters, the dispatch span and
+        (stateful pipelines) the slot-segmentation statistics mirroring
+        the fused kernel's lockstep-vs-drain routing.  ``slots`` is the
+        precomputed per-row slot vector (sharded routing already holds
+        the keys), ``None`` to compute here on sampled batches, or
+        ``False`` when the caller sampled the batch OUT."""
+        tm = self._tm
+        tm["packets"].inc(n)
+        tm["batches"].inc(1)
+        if pad:
+            tm["pad"].inc(pad)
+        child = self._backend_children.get(self.backend)
+        if child is None:
+            child = self._backend_children[self.backend] = \
+                self._backend_counter.labels(backend=self.backend)
+        child.inc(1)
+        tm["dispatch_ms"].observe((t1 - t0) * 1e3)
+        self._tel.tracer.record(
+            "dispatch", t0, t1,
+            args={"backend": self.backend, "rows": n, "pad": pad})
+        if self._tel_flowkey is not None and slots is not False:
+            if slots is None:
+                if not self._seg_tick():
+                    return
+                slots = self._hash_slot_np(
+                    self._tel_flowkey.apply_keys_np(rows), self._tel_slots)
+            seg = self._batch_segmentation(slots)
+            (tm["drain"] if seg["drain_routed"] else tm["lockstep"]).inc(1)
+            if seg["n_deep"]:
+                tm["deep_pkts"].inc(seg["n_deep"])
+            tm["max_chain"].set(seg["max_chain"])
+
+    def _scan_flow_health(self) -> None:
+        """Flush-boundary health scan of the live register file(s): one
+        [S] key compare per table — occupancy/insert/eviction gauges and
+        the mitigation engage/release journal events."""
+        if self._tel is None or not self._stateful or self.state is None:
+            return
+        from repro.telemetry import table_health
+
+        h = table_health(self.state, self._health_keys)
+        self._health_keys = h.pop("keys")
+        m = self._tel.metrics
+        m.gauge("flow_occupied_slots",
+                "occupied register-file slots").default.set(h["occupied"])
+        m.gauge("flow_occupancy_frac",
+                "occupied / total slots").default.set(
+            round(h["occupancy_frac"], 6))
+        if h["inserts"]:
+            m.counter("flow_inserts_total",
+                      "slots going empty -> occupied between scans"
+                      ).default.inc(h["inserts"])
+        if h["evictions"]:
+            m.counter("flow_evictions_total",
+                      "occupied slots whose key changed between scans "
+                      "(collision evictions)").default.inc(h["evictions"])
+        if h["mit_slots"]:
+            m.gauge("flow_mit_occupied",
+                    "occupied action-table slots").default.set(
+                h["mit_occupied"])
+            m.gauge("flow_mit_marked",
+                    "flows past the mitigation threshold").default.set(
+                h["mit_marked"])
+            delta = h["mit_marked"] - self._health_marked
+            if delta > 0:
+                self._tel.journal.emit(
+                    "mitigation_engage", flows=delta,
+                    marked=h["mit_marked"],
+                    pkt_offset=int(self.stats_.packets))
+            elif delta < 0:
+                self._tel.journal.emit(
+                    "mitigation_release", flows=-delta,
+                    marked=h["mit_marked"],
+                    pkt_offset=int(self.stats_.packets))
+            self._health_marked = h["mit_marked"]
 
     def _warm_up(self) -> None:
         """Compile the executable so steady-state timing excludes it."""
@@ -402,6 +619,8 @@ class PacketServeEngine:
         ready = t1 if isinstance(out, np.ndarray) else None
         self.stats_.dispatch_s += t1 - t0
         self.stats_.count_batch(self.backend, n, pad)
+        if self._tel is not None:
+            self._record_dispatch(rows, n, pad, t0, t1)
         self._inflight.append(_InFlight(n, out, t0, ready))
         return n
 
@@ -436,6 +655,16 @@ class PacketServeEngine:
                 f"pipeline is {'stateful' if stateful else 'stateless'}"
             )
         payload = self._prepare_swap(pipeline)
+        if self._tel is not None:
+            self._tel.tracer.record(
+                "swap_prepare", t_req, time.perf_counter(), cat="swap",
+                args={"backend": _pipeline_backend(pipeline)})
+            if (backend == "pallas" and _pipeline_backend(pipeline)
+                    in ("interpret", "mixed")):
+                self._tel.journal.emit(
+                    "backend_fallback", requested=backend,
+                    actual=_pipeline_backend(pipeline),
+                    engine=type(self).__name__, during="swap")
         with self._swap_lock:
             self._pending_swap = (payload, t_req)
 
@@ -467,8 +696,23 @@ class PacketServeEngine:
         if pending is None:
             return
         payload, t_req = pending
+        old_backend = self.backend
+        t0 = time.perf_counter()
         self._install_swap(payload)
-        self.stats_.record_swap(time.perf_counter() - t_req)
+        t1 = time.perf_counter()
+        lat_s = t1 - t_req
+        self.stats_.record_swap(lat_s)
+        if self._tel is not None:
+            self._tm["swaps"].inc(1)
+            self._tm["swap_lat_ms"].observe(lat_s * 1e3)
+            self._tel.tracer.record(
+                "swap_install", t0, t1, cat="swap",
+                args={"from": old_backend, "to": self.backend})
+            self._tel.journal.emit(
+                "hot_swap", lat_ms=round(lat_s * 1e3, 3),
+                pkt_offset=int(self.stats_.packets),
+                old_backend=old_backend, new_backend=self.backend,
+                engine=type(self).__name__)
 
     def _install_swap(self, payload: dict) -> None:
         pipeline = payload["pipeline"]
@@ -476,6 +720,8 @@ class PacketServeEngine:
         self.pipeline = pipeline
         self.backend = _pipeline_backend(pipeline)
         self._dispatch_fn = getattr(pipeline, "dispatch", pipeline)
+        # segmentation stats must track the NEW pipeline's FlowKey/spec
+        self._resolve_flow_telemetry(pipeline)
 
     def _carry_state(self, pipeline) -> None:
         """Same spec: registers carry over bit-identically (the live
@@ -507,8 +753,15 @@ class PacketServeEngine:
         if self._mark is not None:
             self.stats_.wall_s += max(0.0, end - self._mark)
             self._mark = max(self._mark, end) if self._inflight else None
+        if self._tel is not None:
+            self._tm["batch_lat_ms"].observe((end - f.t0) * 1e3)
+            self._tel.tracer.record(
+                "batch", f.t0, end,
+                args={"backend": self.backend, "rows": f.n})
         if f.perm is not None:
-            return self._unshard(v, f)
+            out = self._unshard(v, f)
+            self._count_mitigated(out)
+            return out
         out = v[:f.n]
         # a plain-numpy pipeline may return a VIEW of its input — i.e. of a
         # reusable staging buffer the next dispatch will overwrite; copy so
@@ -518,7 +771,17 @@ class PacketServeEngine:
             np.shares_memory(out, buf) for buf in self._staging
         ):
             out = out.copy()
+        self._count_mitigated(out)
         return out
+
+    def _count_mitigated(self, verdicts: np.ndarray) -> None:
+        """Count action-table drops (MITIGATED sentinels) in a fetched
+        batch — only mitigated pipelines can emit them."""
+        if self._tel is None or getattr(self.state, "mit_spec", None) is None:
+            return
+        dropped = int(np.sum(verdicts < 0))
+        if dropped:
+            self._tm["mitigated"].inc(dropped)
 
     def _unshard(self, v: np.ndarray, f: _InFlight) -> np.ndarray:
         raise NotImplementedError      # ShardedPacketServeEngine only
@@ -538,6 +801,7 @@ class PacketServeEngine:
         # when no further traffic arrives, so a swap never sits parked
         # past a flush
         self._maybe_install_swap()
+        self._scan_flow_health()       # flush-boundary table scan
         if not outs:
             return np.zeros((0,), np.int32)
         return outs[0] if len(outs) == 1 else np.concatenate(outs, 0)

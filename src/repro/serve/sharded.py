@@ -142,7 +142,7 @@ class ShardedPacketServeEngine(PacketServeEngine):
 
     def __init__(self, pipeline, *, feature_dim: int, max_batch: int = 256,
                  backend: str | None = None, state=None, depth: int = 2,
-                 devices=None, min_shards: int = 2):
+                 devices=None, min_shards: int = 2, telemetry=None):
         import jax
 
         if backend is not None:
@@ -154,7 +154,8 @@ class ShardedPacketServeEngine(PacketServeEngine):
         self.sharded = n >= max(1, int(min_shards)) and traceable is not None
         if not self.sharded:
             super().__init__(pipeline, feature_dim=feature_dim,
-                             max_batch=max_batch, state=state, depth=depth)
+                             max_batch=max_batch, state=state, depth=depth,
+                             telemetry=telemetry)
             return
 
         self.n_shards = n
@@ -172,10 +173,13 @@ class ShardedPacketServeEngine(PacketServeEngine):
                 state = _init_sharded_state(pipeline, n)
         super().__init__(pipeline, feature_dim=feature_dim,
                          max_batch=self._sub_batch * n, state=state,
-                         depth=depth)
+                         depth=depth, telemetry=telemetry)
         if not self._stateful:
             self._dispatch_fn = self._sharded_fn
         self.stats_.shards = n
+        if self._tel is not None:
+            self._tel.metrics.gauge(
+                "serve_shards", "devices serving").default.set(n)
 
     # --------------------------------------------------------- overrides
 
@@ -203,6 +207,8 @@ class ShardedPacketServeEngine(PacketServeEngine):
         shard_ids = shard_of_key(keys, self.n_shards)
         m, perm = route_prefix(shard_ids, self.n_shards, self._sub_batch)
         if m < len(rows):
+            if self._tel is not None:
+                self._tm["overflow"].inc(len(rows) - m)
             self._requeue_front(rows[m:].copy())
         rows = rows[:m]
 
@@ -223,6 +229,17 @@ class ShardedPacketServeEngine(PacketServeEngine):
         t1 = time.perf_counter()
         self.stats_.dispatch_s += t1 - t0
         self.stats_.count_batch(self.backend, m, self.max_batch - m)
+        if self._tel is not None:
+            slots = False              # sampled out unless the tick fires
+            if self._seg_tick():
+                # the flow keys are already in hand: fold the shard id
+                # into the slot so same-slot chains on DIFFERENT devices
+                # never merge (each device walks its own table)
+                n_slots = int(self.state.spec.n_slots)
+                slots = (shard_ids[:m] * n_slots
+                         + self._hash_slot_np(keys[:m], n_slots))
+            self._record_dispatch(rows, m, self.max_batch - m, t0, t1,
+                                  slots=slots)
         self._inflight.append(_InFlight(m, out, t0, None, perm=perm))
         return m
 

@@ -58,3 +58,55 @@ def test_stray_ci_duplicate_removed():
     assert os.path.exists(
         os.path.join(REPO, ".github", "workflows", "ci.yml")
     )
+
+def test_telemetry_contract_documented_and_linked():
+    doc = open(os.path.join(REPO, "docs", "pipeline_ir.md"),
+               encoding="utf-8").read()
+    assert "## Telemetry contract" in doc
+    # the budget and the bit-identity rule are the contract's teeth
+    assert "telemetry_overhead" in doc
+    assert "bit-identical" in doc.split("## Telemetry contract")[1]
+    roadmap = open(os.path.join(REPO, "ROADMAP.md"), encoding="utf-8").read()
+    assert "#telemetry-contract" in roadmap
+    readme = open(os.path.join(REPO, "README.md"), encoding="utf-8").read()
+    assert "#telemetry-contract" in readme
+    assert "Observability" in readme
+
+
+# ---- link-checker features the telemetry docs rely on (unit-tested on
+# ---- tmp trees so regressions fail loudly, not as silently-passing scans)
+
+
+def test_checker_flags_broken_anchor_and_file(tmp_path):
+    (tmp_path / "a.md").write_text(
+        "# One\n[ok](#one)\n[bad](#nope)\n[gone](missing.md)\n")
+    errors = cml.check_tree(str(tmp_path))
+    assert len(errors) == 2
+    assert any("missing anchor -> #nope" in e for e in errors)
+    assert any("broken link -> missing.md" in e for e in errors)
+
+
+def test_checker_handles_duplicate_heading_suffixes(tmp_path):
+    (tmp_path / "a.md").write_text(
+        "# Setup\n## Setup\n[first](#setup)\n[second](#setup-1)\n"
+        "[third](#setup-2)\n")
+    errors = cml.check_tree(str(tmp_path))
+    assert len(errors) == 1 and "#setup-2" in errors[0]
+
+
+def test_checker_accepts_html_anchors_and_ref_defs(tmp_path):
+    (tmp_path / "a.md").write_text(
+        '<a id="pinned"></a>\n# Doc\n[x](#pinned)\n[ref][1]\n\n'
+        "[1]: b.md#part-two\n")
+    (tmp_path / "b.md").write_text("# Part One\n# Part Two\n")
+    assert cml.check_tree(str(tmp_path)) == []
+    # a reference-style def pointing nowhere is still an error
+    (tmp_path / "a.md").write_text("[ref][1]\n\n[1]: c.md\n")
+    errors = cml.check_tree(str(tmp_path))
+    assert len(errors) == 1 and "c.md" in errors[0]
+
+
+def test_checker_ignores_fenced_code_blocks(tmp_path):
+    (tmp_path / "a.md").write_text(
+        "# Doc\n```md\n[not a link](nowhere.md)\n```\n")
+    assert cml.check_tree(str(tmp_path)) == []

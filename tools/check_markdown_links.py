@@ -1,13 +1,16 @@
 #!/usr/bin/env python3
 """Check that every intra-repo markdown link resolves.
 
-Scans all tracked ``*.md`` files for inline links ``[text](target)``,
-skipping external targets (``http(s)://``, ``mailto:``) and anything inside
-fenced code blocks, and verifies that
+Scans all tracked ``*.md`` files for inline links ``[text](target)`` and
+reference-style definitions ``[label]: target``, skipping external
+targets (``http(s)://``, ``mailto:``) and anything inside fenced code
+blocks, and verifies that
 
   * relative file targets exist on disk, and
   * ``#anchor`` fragments (same-file or cross-file) match a heading in the
-    target document under GitHub's slugification rules.
+    target document under GitHub's slugification rules — including the
+    ``-1``/``-2`` suffixes GitHub appends to repeated headings and
+    explicit ``<a id="...">``/``<a name="...">`` HTML anchors.
 
 Exit code 0 when every link resolves; 1 with a per-link report otherwise.
 Run from anywhere:  ``python tools/check_markdown_links.py [root]``.
@@ -25,8 +28,14 @@ SKIP_DIRS = {".git", "__pycache__", "results", ".claude"}
 # point at documents that were never part of this repository
 SKIP_FILES = {"SNIPPETS.md", "PAPERS.md"}
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# reference-style definitions: [label]: target  (column 0, possibly
+# indented up to 3 spaces per CommonMark)
+REF_DEF_RE = re.compile(r"^ {0,3}\[[^\]]+\]:\s*(\S+)", re.MULTILINE)
 FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+# explicit HTML anchors: <a id="..."> / <a name="...">
+HTML_ANCHOR_RE = re.compile(
+    r"""<a\s+(?:id|name)\s*=\s*["']([^"']+)["']""", re.IGNORECASE)
 
 
 def github_slug(heading: str) -> str:
@@ -48,15 +57,31 @@ def md_files(root: str) -> list[str]:
 
 
 def anchors_of(path: str) -> set[str]:
+    """Every anchor the document exposes: heading slugs — with GitHub's
+    ``-1``/``-2`` dedup suffixes for repeated headings — plus explicit
+    ``<a id=...>``/``<a name=...>`` HTML anchors."""
     text = FENCE_RE.sub("", open(path, encoding="utf-8").read())
-    return {github_slug(h) for h in HEADING_RE.findall(text)}
+    anchors: set[str] = set()
+    seen: dict[str, int] = {}
+    for h in HEADING_RE.findall(text):
+        slug = github_slug(h)
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    anchors.update(HTML_ANCHOR_RE.findall(text))
+    return anchors
+
+
+def link_targets(text: str) -> list[str]:
+    """Inline link targets + reference-style definition targets."""
+    return LINK_RE.findall(text) + REF_DEF_RE.findall(text)
 
 
 def check_file(path: str, root: str) -> list[str]:
     errors = []
     text = FENCE_RE.sub("", open(path, encoding="utf-8").read())
     rel = os.path.relpath(path, root)
-    for target in LINK_RE.findall(text):
+    for target in link_targets(text):
         if re.match(r"^[a-z][a-z0-9+.-]*:", target):    # external scheme
             continue
         file_part, _, anchor = target.partition("#")
@@ -70,7 +95,8 @@ def check_file(path: str, root: str) -> list[str]:
         else:
             dest = path
         if anchor and dest.endswith(".md"):
-            if github_slug(anchor) not in anchors_of(dest):
+            if anchor not in anchors_of(dest) \
+                    and github_slug(anchor) not in anchors_of(dest):
                 errors.append(f"{rel}: missing anchor -> {target}")
     return errors
 
