@@ -102,6 +102,7 @@ _SHARDED_SCRIPT = textwrap.dedent(f"""
 
     assert len(jax.devices()) == 4, jax.devices()
     pipe = StatefulPipeline(build_pipeline("syn_flood"), backend="pallas")
+    assert pipe.backend == "pallas-fused-flow", pipe.backend
     stream = traffic.make_stream("syn_flood", n_packets=N_PACKETS,
                                  seed=REPLAY_SEED)
     eng = ShardedPacketServeEngine(pipe, feature_dim=len(traffic.COLUMNS),
@@ -140,7 +141,11 @@ def swap_under_rate_limit() -> dict:
                                  seed=REPLAY_SEED)
     chunks = list(stream.chunks(BATCH))
 
-    ref, _ = serve_once(StatefulPipeline(stages, backend="pallas"), stream)
+    pipe = StatefulPipeline(stages, backend="pallas")
+    assert pipe.backend == "pallas-fused-flow", (
+        f"rate-limit pipeline outside the fused envelope: {pipe.backend!r} "
+        f"(reason: {pipe.fallback_reason})")
+    ref, _ = serve_once(pipe, stream)
 
     eng = PacketServeEngine(StatefulPipeline(stages, backend="pallas"),
                             feature_dim=len(traffic.COLUMNS),
@@ -181,6 +186,12 @@ def main() -> dict:
         verdicts, engines = {}, {}
         for backend in ("interpret", "pallas"):
             pipe = StatefulPipeline(stages, backend=backend)
+            if backend == "pallas":
+                # the action table folds into the fused launch: the whole
+                # mitigated chain must serve as ONE kernel
+                assert pipe.backend == "pallas-fused-flow", (
+                    f"{scenario}: expected the fused launch, got "
+                    f"{pipe.backend!r} (reason: {pipe.fallback_reason})")
             verdicts[backend], engines[backend] = serve_once(
                 pipe, stream,
                 telemetry=tel if backend == "pallas" else False)

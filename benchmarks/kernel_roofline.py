@@ -26,49 +26,77 @@ STATEFUL_BATCHES = (256, 512)
 STATEFUL_REPEATS = 20
 
 
+def _stateful_suffixes(rng, ws_out) -> dict[str, list]:
+    """One classifier suffix per fused-envelope kind: the dense MLP head,
+    the range-table (MAT) form, a centroid table, and the MLP head with
+    the in-kernel mitigation fold."""
+    from repro.core.stageir import (
+        CentroidDistance, LUTGather, Mitigate, Quantize,
+    )
+    from repro.flowstate import MitigationSpec
+
+    W = [np.asarray(rng.normal(size=(ws_out, 16)) * 0.2, np.float32),
+         np.asarray(rng.normal(size=(16, 2)) * 0.2, np.float32)]
+    B = [np.zeros(16, np.float32), np.zeros(2, np.float32)]
+    mlp = [FusedMLP(W, B), Reduce("argmax")]
+    edges = np.sort(rng.random((ws_out, 7)).astype(np.float32), axis=1)
+    tables = rng.random((ws_out, 8, 2)).astype(np.float32)
+    cent = np.asarray(rng.normal(size=(4, ws_out)), np.float32)
+    return {
+        "mlp": mlp,
+        "mat": [Quantize(edges), LUTGather(tables), Reduce("argmax")],
+        "centroid": [CentroidDistance(cent), Reduce("argmin")],
+        "mlp+mitigate": mlp + [Mitigate(MitigationSpec(n_slots=2048,
+                                                       threshold=4))],
+    }
+
+
 def stateful_rows(rng) -> list[dict]:
     """interp-vs-pallas columns for the STATEFUL step: the canonical
-    flow-feature prefix + a random fused-MLP head, measured as raw
-    chained ``pipe(state, X)`` steps (state threads batch to batch, so
-    the sequential dependency is part of the measured rate)."""
+    flow-feature prefix + one head per fused-envelope suffix kind (MLP,
+    MAT, centroid, MLP + in-kernel mitigation), measured as raw chained
+    ``pipe(state, X)`` steps (state threads batch to batch, so the
+    sequential dependency is part of the measured rate)."""
     from repro.data import traffic
     from repro.flowstate import StatefulPipeline
 
     (fk, ru, ws), names = traffic.flow_feature_stages(n_slots=2048)
-    ws_out = ws.n_out
-    W = [np.asarray(rng.normal(size=(ws_out, 16)) * 0.2, np.float32),
-         np.asarray(rng.normal(size=(16, 2)) * 0.2, np.float32)]
-    B = [np.zeros(16, np.float32), np.zeros(2, np.float32)]
-    stages = [fk, ru, ws, FusedMLP(W, B), Reduce("argmax")]
-    pipes = {b: StatefulPipeline(stages, backend=b)
-             for b in ("interpret", "pallas")}
-    assert pipes["pallas"].backend == "pallas-fused-flow", (
-        pipes["pallas"].backend
-    )
-
     rows = []
-    for batch in STATEFUL_BATCHES:
-        stream = traffic.make_stream("ddos_burst", n_packets=batch * 8,
-                                     seed=2)
-        X = np.stack(list(stream.chunks(batch)))        # [8, batch, F]
-        rates = {}
-        for name, pipe in pipes.items():
-            def run_stream(chunks, _p=pipe):
-                state = _p.init_state()
-                for c in chunks:
-                    state, v = _p(state, c)
-                return v
-            rates[name] = bench_pps(
-                lambda xs: run_stream(xs), list(X),
-                STATEFUL_REPEATS
-            ) * batch           # bench_pps counts chunks; scale to packets
-        rows.append({
-            "batch": batch,
-            "interp_kpkt_s": round(rates["interpret"] / 1e3, 1),
-            "pallas_kpkt_s": round(rates["pallas"] / 1e3, 1),
-            "speedup": round(rates["pallas"] / rates["interpret"], 2),
-            "pallas_backend": pipes["pallas"].backend,
-        })
+    for sfx_name, suffix in _stateful_suffixes(rng, ws.n_out).items():
+        stages = [fk, ru, ws] + suffix
+        pipes = {b: StatefulPipeline(stages, backend=b)
+                 for b in ("interpret", "pallas")}
+        assert pipes["pallas"].backend == "pallas-fused-flow", (
+            sfx_name, pipes["pallas"].backend,
+            pipes["pallas"].fallback_reason,
+        )
+        # the MLP head sweeps every batch size; the widened-envelope
+        # suffixes add one row each at the largest batch
+        batches = (STATEFUL_BATCHES if sfx_name == "mlp"
+                   else STATEFUL_BATCHES[-1:])
+        for batch in batches:
+            stream = traffic.make_stream("ddos_burst", n_packets=batch * 8,
+                                         seed=2)
+            X = np.stack(list(stream.chunks(batch)))    # [8, batch, F]
+            rates = {}
+            for name, pipe in pipes.items():
+                def run_stream(chunks, _p=pipe):
+                    state = _p.init_state()
+                    for c in chunks:
+                        state, v = _p(state, c)
+                    return v
+                rates[name] = bench_pps(
+                    lambda xs: run_stream(xs), list(X),
+                    STATEFUL_REPEATS
+                ) * batch       # bench_pps counts chunks; scale to packets
+            rows.append({
+                "suffix": sfx_name,
+                "batch": batch,
+                "interp_kpkt_s": round(rates["interpret"] / 1e3, 1),
+                "pallas_kpkt_s": round(rates["pallas"] / 1e3, 1),
+                "speedup": round(rates["pallas"] / rates["interpret"], 2),
+                "pallas_backend": pipes["pallas"].backend,
+            })
     return rows
 
 

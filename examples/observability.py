@@ -13,7 +13,7 @@ an operator watches (docs/pipeline_ir.md#telemetry-contract):
     ``serve_mitigated_packets_total`` counting dropped packets);
   * a live dashboard renders the metrics registry every few windows:
     throughput, latency percentiles, flow-table occupancy/evictions,
-    drain-vs-lockstep schedule routing, mitigation residency;
+    drain-vs-lockstep schedule shape, mitigation residency;
   * at the end the plane exports everything an operator would mount:
     Prometheus text, the Chrome trace (load in chrome://tracing or
     Perfetto), and the JSON-lines event journal.

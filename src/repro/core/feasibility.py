@@ -351,15 +351,21 @@ def mitigation_report(spec, platform_kind: str = "taurus", model: Any = None
     second register file co-resident with the detection table, so it is
     charged through the SAME per-platform register model and composed via
     ``FeasibilityReport.merge`` — mitigation SRAM is never free.  On the
-    TPU target the scan is a jnp loop (no Pallas kernel yet), so the
-    charge is the table's working set, not a kernel envelope."""
+    TPU target the action table FOLDS INTO the fused flow launch
+    (``kernels/fused_flow._mitigation_phase``), so the charge is the
+    kernel's actual resident set: the table (keys + [hits, since] rows)
+    plus the seven per-batch mitigation operand columns the launch
+    stages into VMEM (worst case — the shared-segmentation fast path
+    ships only the table pair)."""
     from repro.core.stageir import mitigation_specs, spec_params
 
     words = spec_params(mitigation_specs(spec))
     return _register_table_report(
         words, platform_kind, model, what="mitigation registers",
-        # table + per-batch key/verdict/valid int words, resident in VMEM
-        tpu_vmem=lambda m: words * 4 + m.batch * 3 * 4,
+        # table + the 7 per-batch [B] operand columns of the fused
+        # mitigation phase (keys/valid/rank/seg_slot + verdict gather),
+        # matching kernels.fused_flow.vmem_bytes' mit term
+        tpu_vmem=lambda m: words * 4 + m.batch * 7 * 4,
     )
 
 

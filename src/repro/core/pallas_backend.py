@@ -44,6 +44,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.stageir import (
+    CentroidDistance,
     Dense,
     FeatureSelect,
     FlowKey,
@@ -69,6 +70,7 @@ __all__ = [
     "lower_mitigation",
     "lower_stateful_pallas",
     "fused_flow_eligible",
+    "fused_flow_decline_reason",
     "lower_stateful_fused",
 ]
 
@@ -491,16 +493,19 @@ def lower_stateful(prefix: list[Stage], backend: str
 
 
 def lower_mitigation(mit) -> tuple[Callable, str]:
-    """Lower a trailing ``Mitigate`` stage for serving.
+    """Lower a trailing ``Mitigate`` stage for the SPLIT serving path.
 
     -> (traceable ``fn(mit_keys, mit_regs, pkt_keys, verdicts, valid) ->
     (mit_keys', mit_regs', out_verdicts)``, the engine that actually
-    serves).  The action-table scan is order-dependent shared jnp
-    (flowstate.mitigation.mitigate_update) with NO Pallas lowering yet,
-    so the engine is always ``"interpret"`` — reported honestly:
-    ``StatefulPipeline`` composes it into ``"mixed"`` when the detection
-    half serves on Pallas.  This is the ONE place the mitigation calling
-    convention is wired, mirroring ``lower_stateful``."""
+    serves).  The fused launch folds the action table in-kernel
+    (``lower_stateful_fused`` with ``mitigation=``); this split form is
+    the fallback when the rest of the pipeline is outside the fused
+    envelope.  Here the action-table scan is the order-dependent shared
+    jnp reference (flowstate.mitigation.mitigate_update), so the engine
+    is always ``"interpret"`` — reported honestly: ``StatefulPipeline``
+    composes it into ``"mixed"`` when the detection half serves on
+    Pallas.  Bit-identical to the fused form per the mitigation
+    contract."""
     from repro.flowstate.mitigation import mitigate_update
 
     spec = mit.spec
@@ -524,96 +529,277 @@ def lower_stateful_pallas(prefix: list[Stage]) -> Callable | None:
 # ------------------------------------------------- fully-fused flow path
 #
 # The whole stateful pipeline — FlowKey -> RegisterUpdate -> feature-emit
-# -> classifier — as ONE Pallas launch (kernels/fused_flow): the register
-# table and the classifier weight stack co-resident in VMEM, feature rows
-# consumed in-kernel, only int32 verdicts and the updated table leaving.
-# StatefulPipeline tries this form FIRST under backend="pallas" and
-# reports "pallas-fused-flow" when it serves; any mismatch below falls
-# back to the two-dispatch prefix+suffix composition (bit-identical by
-# the flow-state contract).
+# -> classifier [-> Mitigate] — as ONE Pallas launch (kernels/fused_flow):
+# register table(s), the classifier parameters AND the mitigation action
+# table co-resident in VMEM, feature rows consumed in-kernel, only int32
+# verdicts and the updated tables leaving.  The fused envelope covers
+# MLP, MAT (Quantize -> LUTGather -> Reduce -> [LabelMap]) and
+# CentroidDistance suffixes, plus multi-table DAGs (several FlowKey /
+# RegisterUpdate groups feeding one classifier).  StatefulPipeline tries
+# this form FIRST under backend="pallas" and reports "pallas-fused-flow"
+# when it serves; `fused_flow_decline_reason` names WHY a pipeline fell
+# back to the split composition (surfaced in ServeStats / the journal).
 
 
-def _match_fused_flow(prefix: list[Stage], suffix: list[Stage]):
-    """-> (mode, weights, biases) when the POST-PEEPHOLE suffix is an
-    optional leading WindowStats plus a classify-shaped MLP run, else
-    None.  ``mode`` is the kernel's readout: "all" | "hist" | "raw"."""
-    spec = prefix[1].spec
-    mode, body = "raw", list(suffix)
-    if body and isinstance(body[0], WindowStats):
-        ws = body[0]
-        s = ws.spec
-        if (s.width != spec.width or s.n_counters != spec.n_counters
-                or s.n_ewma != spec.n_ewma):
-            return None                  # readout disagrees with the table
-        mode, body = ws.mode, body[1:]
-        n_in = ws.n_out
-    else:
-        n_in = spec.width
-    mlp = _match_mlp(body)
-    if mlp is None or not mlp[2]:        # fused form needs int32 verdicts
+def _match_centroid(stages: list[Stage]):
+    """-> (feature_idx | None, centroids, label_map, use_min) when the
+    stage run is ``[FeatureSelect?] CentroidDistance Reduce [LabelMap?]``,
+    else None."""
+    body = list(stages)
+    fidx = None
+    if body and isinstance(body[0], FeatureSelect):
+        fidx = tuple(int(i) for i in np.asarray(body[0].idx).ravel())
+        body = body[1:]
+    if len(body) < 2 or not isinstance(body[0], CentroidDistance) \
+            or not isinstance(body[1], Reduce):
         return None
-    weights, biases = mlp[0], mlp[1]
-    if int(weights[0].shape[0]) != n_in:
+    tail = body[2:]
+    if len(tail) > 1 or (tail and not isinstance(tail[0], LabelMap)):
         return None
-    return mode, list(weights), list(biases)
+    cent = np.asarray(body[0].centroids, np.float32)
+    lmap = (np.asarray(tail[0].table, np.int32) if tail
+            else np.arange(cent.shape[0], dtype=np.int32))
+    return fidx, cent, lmap, body[1].op == "argmin"
 
 
-def fused_flow_eligible(prefix: list[Stage], suffix: list[Stage]) -> bool:
-    """Would ``lower_stateful_fused`` produce the single-launch form?
-    Shape checks only — no parameter packing or device transfers."""
-    if not stateful_eligible(prefix):
-        return False
-    matched = _match_fused_flow(prefix, suffix)
-    if matched is None:
-        return False
-    _, weights, _ = matched
+def _as_table_groups(prefix_or_groups):
+    """Normalize the prefix argument: a plain ``[FlowKey, RegisterUpdate]``
+    prefix (the single-table form) or a ``split_stateful_multi`` group
+    list -> list of (flow_key, register_update, window_stats | None)."""
+    seq = list(prefix_or_groups)
+    if seq and isinstance(seq[0], FlowKey):
+        if len(seq) != 2 or not isinstance(seq[1], RegisterUpdate):
+            return None
+        return [(seq[0], seq[1], None)]
+    groups = []
+    for g in seq:
+        g = tuple(g)
+        if len(g) == 2:
+            g = (g[0], g[1], None)
+        if len(g) != 3 or not isinstance(g[0], FlowKey) \
+                or not isinstance(g[1], RegisterUpdate):
+            return None
+        groups.append(g)
+    return groups or None
+
+
+def _plan_fused(prefix_or_groups, suffix: list[Stage], mitigation=None):
+    """Pattern-match the WHOLE fused launch -> (desc, reason) with exactly
+    one of the two non-None.  ``desc`` carries everything the lowering
+    needs: the folded table groups + readout modes, a tagged suffix
+    descriptor, and the mitigation spec.  ``reason`` is the short honest
+    decline string surfaced by ``fused_flow_decline_reason``."""
     from repro.kernels.fused_flow import LANE as FF_LANE
 
-    spec = prefix[1].spec
-    widths = [int(weights[0].shape[0])] + [int(w.shape[1]) for w in weights]
-    return max(widths) <= FF_LANE and spec.width <= FF_LANE
+    groups = _as_table_groups(prefix_or_groups)
+    if groups is None:
+        return None, "no [FlowKey, RegisterUpdate] table groups"
+    body = list(suffix)
+    # single-table back-compat: a leading suffix WindowStats is that
+    # table's readout (multi-table groups carry theirs explicitly)
+    if len(groups) == 1 and groups[0][2] is None and body \
+            and isinstance(body[0], WindowStats):
+        groups[0] = (groups[0][0], groups[0][1], body[0])
+        body = body[1:]
+
+    modes, n_in = [], 0
+    for fk, ru, ws in groups:
+        spec = ru.spec
+        if not stateful_eligible([fk, ru]):
+            return None, "flow table outside the flow_update envelope"
+        if spec.width > FF_LANE:
+            return None, "register width exceeds the kernel lane"
+        if ws is None:
+            modes.append("raw")
+            n_in += spec.width
+        else:
+            s = ws.spec
+            if (s.width != spec.width or s.n_counters != spec.n_counters
+                    or s.n_ewma != spec.n_ewma):
+                return None, "WindowStats readout disagrees with its table"
+            modes.append(ws.mode)
+            n_in += ws.n_out
+
+    if mitigation is not None:
+        from repro.kernels import flow_update as fu
+
+        if mitigation.spec.n_slots > fu.MAX_SLOTS:
+            return None, "mitigation table outside the kernel envelope"
+
+    mlp = _match_mlp(body)
+    if mlp is not None:
+        weights, biases, classify = mlp
+        if not classify:
+            return None, "classifier lacks an in-kernel argmax reduce"
+        if int(weights[0].shape[0]) != n_in:
+            return None, "classifier input width mismatch"
+        widths = [n_in] + [int(w.shape[1]) for w in weights]
+        if max(widths) > FF_LANE:
+            return None, "classifier width exceeds the kernel lane"
+        sfx = ("mlp", list(weights), list(biases))
+    else:
+        mat = _match_mat(body)
+        if mat is not None:
+            edges, tables, lmap, use_min = mat
+            if int(edges.shape[0]) != n_in:
+                return None, "classifier input width mismatch"
+            if not _in_envelope_mat(tables, lmap):
+                return None, "MAT shape outside the kernel envelope"
+            sfx = ("mat", edges, tables, lmap, use_min)
+        else:
+            cen = _match_centroid(body)
+            if cen is None:
+                return None, "suffix is not a fused-envelope classifier"
+            fidx, cent, lmap, use_min = cen
+            if fidx is not None:
+                if max(fidx, default=-1) >= n_in \
+                        or cent.shape[1] != len(fidx):
+                    return None, "classifier input width mismatch"
+            elif cent.shape[1] != n_in:
+                return None, "classifier input width mismatch"
+            if cent.shape[0] > FF_LANE or lmap.shape[0] > FF_LANE \
+                    or cent.shape[1] > FF_LANE:
+                return None, "centroid shape outside the kernel envelope"
+            sfx = ("centroid", fidx, cent, lmap, use_min)
+
+    mit_spec = mitigation.spec if mitigation is not None else None
+    return (groups, tuple(modes), sfx, mit_spec), None
 
 
-def lower_stateful_fused(prefix: list[Stage], suffix: list[Stage]
-                         ) -> Callable | None:
-    """Lower the WHOLE stateful pipeline onto one fused Pallas launch.
+def fused_flow_decline_reason(prefix_or_groups, suffix: list[Stage],
+                              mitigation=None) -> str | None:
+    """Why would ``lower_stateful_fused`` decline this pipeline?
 
-    ``suffix`` must be post-peephole (``fuse_pipeline_stages``).  Returns
-    a traceable ``fn(keys, regs, x, valid) -> (keys', regs', verdicts)``
-    closing over the packed classifier stack, or ``None`` when the
-    pipeline is outside the fused envelope — the caller then composes
-    the prefix and suffix lowerings as before."""
-    if not fused_flow_eligible(prefix, suffix):
-        return None
-    import jax
+    ``None`` means the single-launch form serves.  Shape checks only —
+    no parameter packing or device transfers.  The string is the honest
+    fallback reason the serving engines surface (ServeStats backend keys,
+    ``backend_fallback`` journal events)."""
+    if not pallas_available():
+        return "pallas toolchain unavailable"
+    _, reason = _plan_fused(prefix_or_groups, suffix, mitigation)
+    return reason
+
+
+def fused_flow_eligible(prefix_or_groups, suffix: list[Stage],
+                        mitigation=None) -> bool:
+    """Would ``lower_stateful_fused`` produce the single-launch form?
+    Shape checks only — no parameter packing or device transfers."""
+    return fused_flow_decline_reason(prefix_or_groups, suffix,
+                                     mitigation) is None
+
+
+def _pack_suffix(sfx, tile: int, interpret: bool):
+    """Suffix descriptor -> (SuffixPlan, pre-padded device arrays).
+
+    Packing happens ONCE here, at lowering time: lane-snapped MLP stacks
+    (``fused_mlp.pack_params``), +inf-padded MAT edges / zero-padded
+    tables (the exact ``mat_lut.mat_classify`` convention, so the in-
+    kernel replay sees identical operands), zero-padded centroid rows
+    (pad lanes contribute exact zeros to the squared distances)."""
     import jax.numpy as jnp
 
-    from repro.kernels import fused_flow as ff
+    from repro.kernels.fused_flow import SuffixPlan
     from repro.kernels.fused_mlp import pack_params, snap_lane
+    from repro.kernels.mat_lut.ops import _snap
 
-    mode, weights, biases = _match_fused_flow(prefix, suffix)
-    fk, ru = prefix
-    spec = ru.spec
-    widths = [int(weights[0].shape[0])] + [int(w.shape[1]) for w in weights]
-    interpret = jax.default_backend() != "tpu"
-    lane = snap_lane(widths, interpret=interpret)
-    w_stack, b_stack = pack_params(
-        [jnp.asarray(w, jnp.float32) for w in weights],
-        [jnp.asarray(b, jnp.float32) for b in biases],
-        lane,
+    if sfx[0] == "mlp":
+        _, weights, biases = sfx
+        widths = [int(weights[0].shape[0])] + [int(w.shape[1])
+                                               for w in weights]
+        lane = snap_lane(widths, interpret=interpret)
+        w_stack, b_stack = pack_params(
+            [jnp.asarray(w, jnp.float32) for w in weights],
+            [jnp.asarray(b, jnp.float32) for b in biases],
+            lane,
+        )
+        sp = SuffixPlan("mlp", int(weights[-1].shape[1]),
+                        n_layers=len(weights), lane=lane)
+        return sp, (w_stack, b_stack)
+    if sfx[0] == "mat":
+        _, edges, tables, lmap, use_min = sfx
+        F, bins, C = tables.shape
+        K = lmap.shape[0]
+        edges_j = jnp.pad(
+            jnp.asarray(edges, jnp.float32),
+            ((0, _snap(F, 8) - F), (0, _snap(edges.shape[1], tile)
+                                    - edges.shape[1])),
+            constant_values=jnp.inf,
+        )
+        tables_j = jnp.pad(
+            jnp.asarray(tables, jnp.float32),
+            ((0, _snap(F, 8) - F), (0, _snap(bins, tile) - bins),
+             (0, _snap(C, tile) - C)),
+        )
+        lmap_j = jnp.pad(
+            jnp.asarray(lmap, jnp.float32), (0, _snap(K, tile) - K)
+        )[None, :]
+        sp = SuffixPlan("mat", int(C), n_features=int(F), use_min=use_min)
+        return sp, (edges_j, tables_j, lmap_j)
+    _, fidx, cent, lmap, use_min = sfx
+    K, Fp = cent.shape
+    nk = lmap.shape[0]
+    cent_j = jnp.pad(
+        jnp.asarray(cent, jnp.float32),
+        ((0, _snap(K, 8) - K), (0, _snap(Fp, tile) - Fp)),
     )
-    num_classes = int(weights[-1].shape[1])
+    lmap_j = jnp.pad(
+        jnp.asarray(lmap, jnp.float32), (0, _snap(max(K, nk), tile) - nk)
+    )[None, :]
+    sp = SuffixPlan("centroid", int(K), use_min=use_min,
+                    n_centroids=int(K),
+                    feature_idx=tuple(fidx) if fidx else ())
+    return sp, (cent_j, lmap_j)
 
-    def fused_fn(keys, regs, x, valid, _fk=fk, _ru=ru, _spec=spec,
-                 _w=w_stack, _b=b_stack, _mode=mode, _nc=num_classes,
-                 _lane=lane, _interp=interpret):
-        pkt_keys = _fk.apply_keys(x)
-        upd, bins = _ru.prepare(x)
-        return ff.fused_flow_classify(
-            keys, regs, pkt_keys, upd, bins, valid, _w, _b,
-            n_counters=_spec.n_counters, n_ewma=_spec.n_ewma,
-            alpha=_spec.ewma_alpha, mode=_mode, num_classes=_nc,
-            lane=_lane, interpret=_interp,
+
+def lower_stateful_fused(prefix_or_groups, suffix: list[Stage],
+                         mitigation=None) -> Callable | None:
+    """Lower the WHOLE stateful pipeline onto one fused Pallas launch.
+
+    ``prefix_or_groups`` is a ``[FlowKey, RegisterUpdate]`` prefix or a
+    ``split_stateful_multi`` group list; ``suffix`` must be post-peephole
+    (``fuse_pipeline_stages``); ``mitigation`` an optional trailing
+    ``Mitigate`` stage folded into the same launch.  Returns a traceable
+    ``fn(k0, r0, [k1, r1, ...,] [mit_keys, mit_regs,] x, valid) ->
+    (same state arrays updated ..., verdicts)`` closing over the packed
+    classifier parameters, or ``None`` when the pipeline is outside the
+    fused envelope (``fused_flow_decline_reason`` says why) — the caller
+    then composes the split lowerings as before."""
+    if not fused_flow_eligible(prefix_or_groups, suffix, mitigation):
+        return None
+    import jax
+
+    from repro.kernels import fused_flow as ff
+
+    desc, _ = _plan_fused(prefix_or_groups, suffix, mitigation)
+    groups, modes, sfx, mit_spec = desc
+    interpret = jax.default_backend() != "tpu"
+    tile = 8 if interpret else ff.LANE
+    table_plans = tuple(
+        ff.TablePlan(ru.spec.n_counters, ru.spec.n_ewma,
+                     len(ru.spec.hist_sizes), float(ru.spec.ewma_alpha),
+                     ru.spec.width, mode)
+        for (fk, ru, ws), mode in zip(groups, modes)
+    )
+    sp, arrays = _pack_suffix(sfx, tile, interpret)
+    nt = len(groups)
+    stages_fk_ru = tuple((fk, ru) for fk, ru, _ in groups)
+
+    def fused_fn(*args, _groups=stages_fk_ru, _tp=table_plans, _sp=sp,
+                 _arrays=arrays, _mspec=mit_spec, _nt=nt,
+                 _interp=interpret):
+        x, valid = args[-2], args[-1]
+        st = args[:-2]
+        tbls = []
+        for t, (fk, ru) in enumerate(_groups):
+            pkt_keys = fk.apply_keys(x)
+            upd, bins = ru.prepare(x)
+            tbls.append((st[2 * t], st[2 * t + 1], pkt_keys, upd, bins))
+        mit_arg = None
+        if _mspec is not None:
+            mit_arg = (st[2 * _nt], st[2 * _nt + 1], _mspec)
+        return ff.fused_flow_serve(
+            tbls, valid, _tp, _sp, _arrays, mitigation=mit_arg,
+            interpret=_interp,
         )
 
     return fused_fn

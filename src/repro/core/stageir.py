@@ -561,6 +561,42 @@ def split_stateful(stages: list[Stage]
     return list(stages[:2]), suffix
 
 
+def split_stateful_multi(stages: list[Stage]
+                         ) -> tuple[list[tuple], list[Stage]]:
+    """Parse a (possibly multi-table) stateful pipeline -> (groups, suffix).
+
+    Grammar: one or more ``FlowKey RegisterUpdate [WindowStats]`` groups —
+    a ``WindowStats`` directly following a ``RegisterUpdate`` is THAT
+    table's readout — then a stateless classifier suffix consuming the
+    concatenated per-table readouts in group order.  Each group is a
+    ``(flow_key, register_update, window_stats | None)`` tuple.  This is
+    the multi-table DAG form: every table keys and updates off the SAME
+    packet rows, one classifier consumes all their feature rows.  Raises
+    on any other arrangement (same per-table contract as
+    ``split_stateful``)."""
+    groups: list[tuple] = []
+    rest = list(stages)
+    while rest and isinstance(rest[0], FlowKey):
+        if len(rest) < 2 or not isinstance(rest[1], RegisterUpdate):
+            raise ValueError(
+                "each FlowKey must be followed by its RegisterUpdate; got "
+                f"{[s.kind for s in rest[:2]]}"
+            )
+        ws = rest[2] if len(rest) > 2 and isinstance(rest[2], WindowStats) \
+            else None
+        groups.append((rest[0], rest[1], ws))
+        rest = rest[3 if ws is not None else 2:]
+    if not groups:
+        raise ValueError(
+            "stateful pipelines must start with [FlowKey, RegisterUpdate]; "
+            f"got {[s.kind for s in stages[:2]]}"
+        )
+    bad = [s.kind for s in rest if is_stateful(s)]
+    if bad:
+        raise ValueError(f"stateful stages {bad} outside the table groups")
+    return groups, rest
+
+
 # ---------------------------------------------------------------- execution
 
 

@@ -25,13 +25,18 @@ accounting (``MitigationSpec.sram_bytes`` is charged by
 ``feasibility.mitigation_report``).
 
 The batch scan is ORDER-DEPENDENT (a later packet may evict an earlier
-packet's slot), so it runs as a ``fori_loop`` over the batch — shared
-jnp code on every execution engine, hence bit-identical across the
-interpreter and Pallas detection paths by construction.  There is no
-Pallas lowering for the action table yet; ``StatefulPipeline`` reports
-the composite engine honestly (a fused-Pallas detector + interpret
-mitigation serves as ``"mixed"``).  See
-docs/pipeline_ir.md#mitigation-contract.
+packet's slot), so the reference here runs as a ``fori_loop`` over the
+batch — shared jnp code on every execution engine.  Under
+``backend="pallas"`` the action table FOLDS INTO the fused flow launch
+(``kernels/fused_flow._mitigation_phase``: the [hits, since] row rides
+the same segmented lockstep-rounds + drain schedule as the detection
+table, the drop decision is one masked lane over the int32 verdicts), so
+a mitigated pipeline reports ``"pallas-fused-flow"``; slots never
+interact, so the fused phase is bit-identical to this scan by the same
+per-slot decomposition that pins the flow tables.  When the rest of the
+pipeline is outside the fused envelope, this scan serves as the split
+fallback and ``StatefulPipeline`` reports the composite engine honestly
+(``"mixed"``).  See docs/pipeline_ir.md#mitigation-contract.
 """
 
 from __future__ import annotations

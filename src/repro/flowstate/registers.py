@@ -114,6 +114,50 @@ def init_state(spec: FlowStateSpec) -> FlowState:
     )
 
 
+@dataclasses.dataclass
+class MultiFlowState:
+    """Live state of a MULTI-TABLE stateful pipeline: several FlowKey /
+    RegisterUpdate tables feeding one classifier (the multi-table DAG
+    form), plus an optional mitigation action table.
+
+    ``spec`` / ``keys`` / ``regs`` alias table 0 so single-table readers —
+    the telemetry health probe, engine stats, reprs — keep working on the
+    primary table; per-table access goes through the ``*_list`` tuples."""
+
+    specs: tuple               # of FlowStateSpec, one per table
+    keys_list: tuple           # of [S_t] int32 stored keys (-1 = empty)
+    regs_list: tuple           # of [S_t, W_t] f32 register rows
+    mit_spec: object = None    # mitigation.MitigationSpec | None
+    mit_keys: jax.Array = None
+    mit_regs: jax.Array = None
+
+    @property
+    def spec(self) -> FlowStateSpec:
+        return self.specs[0]
+
+    @property
+    def keys(self) -> jax.Array:
+        return self.keys_list[0]
+
+    @property
+    def regs(self) -> jax.Array:
+        return self.regs_list[0]
+
+    @property
+    def occupied(self) -> int:
+        """Occupied slots summed over every table."""
+        return int(sum(np.sum(np.asarray(k) >= 0) for k in self.keys_list))
+
+    @property
+    def mitigated_flows(self) -> int:
+        """Action-table slots currently marked (hits >= threshold)."""
+        if self.mit_spec is None:
+            return 0
+        mk = np.asarray(self.mit_keys)
+        hits = np.asarray(self.mit_regs)[:, 0]
+        return int(np.sum((mk >= 0) & (hits >= self.mit_spec.threshold)))
+
+
 def hash_slot_np(keys: np.ndarray, n_slots: int) -> np.ndarray:
     """Numpy twin of ``kernels.flow_update.ref.hash_slot`` — same Knuth
     multiplicative mix, same xor-fold — for host-side table migration.

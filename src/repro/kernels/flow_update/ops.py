@@ -22,13 +22,17 @@ rounds and unrolled drain both walk efficiently.  The inverse permutation
 restores arrival-order feature rows; the table update itself is
 order-independent across slots, so sorting never changes the final state.
 
-Schedule choice: the hybrid kernel covers every traffic shape (lockstep
-rounds retire interleaved traffic, the unrolled drain replays deep
-chains), so the ``lax.cond`` routes only near-degenerate batches — more
-than 7/8 of live packets sitting deeper than ``PAR_ROUNDS`` in one chain —
-to the reference walk, where the compacted rounds would be pure overhead.
-All inside the same jitted program, and a pure schedule choice: every
-schedule computes identical bits.
+Schedule choice: the hybrid kernel covers every traffic shape — lockstep
+rounds retire interleaved traffic, and the doubly-compacted drain replays
+deep chains at a small fixed cost per packet (a [1, W] row move against a
+cache-sized deep table), measured well under the reference walk's
+per-packet cost even on a fully-degenerate single-chain batch.  The
+kernel therefore serves every in-envelope batch; the scan reference
+remains only for shapes outside the VMEM envelope.  A pure schedule
+choice either way: every path computes identical bits.
+(``telemetry.flow_health`` still flags drain-heavy batches — more than
+7/8 of live packets deeper than ``PAR_ROUNDS`` — as a traffic-shape
+signal; it is no longer a routing decision.)
 """
 
 from __future__ import annotations
@@ -106,9 +110,15 @@ def segment_batch(slot: jax.Array, valid: jax.Array, n_slots: int, *,
     inv = jnp.zeros(B, jnp.int32).at[order].set(pos)
 
     rem = live_s & (rank >= par_rounds)
-    n_deep = jnp.sum(rem.astype(jnp.int32))
+    remi = rem.astype(jnp.int32)
+    csum = jnp.cumsum(remi)
+    n_deep = csum[-1]
     n_live = jnp.sum(live_s.astype(jnp.int32))
-    packed = jnp.argsort(jnp.where(rem, pos, B + pos))
+    # stable partition (drain rows first, in sorted order) via scatter —
+    # no second argsort: drain row i lands at csum[i]-1, the rest fill
+    # the tail in order
+    dest = jnp.where(rem, csum - 1, n_deep + pos - csum)
+    packed = jnp.zeros(B, jnp.int32).at[dest].set(pos, mode="drop")
     drain_order = jnp.where(pos < n_deep, packed, B)
     # the drain runs against a doubly-compacted table holding only the
     # DEEP segments (seg_len > par_rounds, so at most B/(par_rounds+1)
@@ -217,31 +227,16 @@ def flow_update(
     bins = jnp.asarray(bins, jnp.int32)
     valid = jnp.asarray(valid, jnp.int32)
 
-    # segment ONCE: the layout is the kernel's schedule AND the
-    # schedule-choice profile.  Padding rows (valid=0) are excluded, so a
-    # ragged tail cannot fake a deep chain.
+    # segment ONCE: the layout IS the kernel's schedule.  Padding rows
+    # (valid=0) are excluded, so a ragged tail cannot fake a deep chain.
     seg = segment_batch(hash_slot(pkt_keys, S), valid, S)
-
-    def launch(_):
-        ops = pack_segmented_operands(
-            seg, keys, regs, pkt_keys, upd, bins, valid,
-            tile=tile, w_pad=w_pad, u_pad=u_pad, h_pad=h_pad,
-        )
-        k_out, r_out, feats = flow_update_padded(
-            *ops, n_counters=n_counters, n_ewma=n_ewma, n_hists=H,
-            alpha=float(alpha), interpret=interpret,
-        )
-        # feats come back in sorted order: inverse-permute to arrival order
-        return k_out[:, 0], r_out[:, :W], feats[:B, :W][seg.inv]
-
-    def reference(_):
-        return flow_update_ref(
-            keys, regs, pkt_keys, upd, bins, valid,
-            n_counters=n_counters, n_ewma=n_ewma, alpha=alpha,
-        )
-
-    # route only near-degenerate batches (> 7/8 of live packets deeper
-    # than the lockstep rounds, i.e. one chain owning the batch) to the
-    # reference walk; the hybrid kernel covers everything else
-    return jax.lax.cond(seg.n_deep * 8 > seg.n_live * 7,
-                        reference, launch, 0)
+    ops = pack_segmented_operands(
+        seg, keys, regs, pkt_keys, upd, bins, valid,
+        tile=tile, w_pad=w_pad, u_pad=u_pad, h_pad=h_pad,
+    )
+    k_out, r_out, feats = flow_update_padded(
+        *ops, n_counters=n_counters, n_ewma=n_ewma, n_hists=H,
+        alpha=float(alpha), interpret=interpret,
+    )
+    # feats come back in sorted order: inverse-permute to arrival order
+    return k_out[:, 0], r_out[:, :W], feats[:B, :W][seg.inv]

@@ -1,43 +1,63 @@
 """Pallas kernel: the WHOLE stateful pipeline in ONE launch.
 
-``FlowKey -> RegisterUpdate -> feature-emit -> classifier`` previously
-cost two dispatches: the flow-update kernel (kernels/flow_update) wrote
-[B, W] feature rows back to HBM, and the fused-MLP kernel
-(kernels/fused_mlp) read them again.  Here the post-update feature rows
-feed the snapped-lane MLP matmuls *inside the same kernel body* — the
-register table AND the classifier weight stack are co-resident in VMEM
-for the launch, and only int32 verdicts (plus the updated table) cross
-the kernel boundary.  This is the Taurus per-packet story (PAPERS.md):
-stateful features and the ML decision as one dataplane pass.
+``FlowKey -> RegisterUpdate -> feature-emit -> classifier [-> Mitigate]``
+previously cost two dispatches (flow-update kernel writing [B, W] feature
+rows back to HBM, classifier kernel reading them again) plus a host-side
+jnp scan for the action table.  Here the post-update feature rows feed the
+classifier *inside the same kernel body* — the register table(s), the
+classifier parameters AND the mitigation action table are co-resident in
+VMEM for the launch, and only int32 verdicts (plus the updated tables)
+cross the kernel boundary.  This is the Taurus per-packet story
+(PAPERS.md): stateful features, the ML decision and the enforcement
+action as one dataplane pass.
 
 The update phase is literally ``flow_update.kernel._flow_phase`` — the
 segmented hybrid schedule (compacted lockstep rounds + doubly-compacted
 unrolled drain) — so state and features are bit-identical to the scan
-reference by the same per-slot decomposition.  The classifier phase
-(``_suffix_eval``) reproduces the two-dispatch composition bit for bit:
+reference by the same per-slot decomposition.  The launch is described by
+a static ``Plan``:
 
-  * the WindowStats readout is the same elementwise divide
-    (``hist / max(count, 1)``) the stage applies, with ``mode`` folded
-    statically (``all`` | ``hist`` | ``raw`` = no WindowStats);
-  * the matmul chain runs at the SAME snapped lane the stateless
-    lowering would pick (``fused_mlp.snap_lane`` over the same widths),
-    so every dot has the same reduction length — pad lanes are exact
-    zeros and per-row reductions round identically;
-  * padded lanes >= num_classes mask to -inf before the in-kernel argmax,
-    exactly as ``fused_mlp._classify_kernel``.
+  * ``Plan.tables`` — one ``TablePlan`` per flow table.  A single-table
+    launch feeds the suffix in SORTED (segment) order, exactly the PR-6
+    form; a multi-table launch runs one ``_flow_phase`` per table (each
+    with its own slot segmentation), gathers every table's feature rows
+    back to ARRIVAL order in-kernel and concatenates the per-table
+    readouts into one classifier input.
+  * ``Plan.suffix`` — the classifier form.  ``"mlp"`` is the snapped-lane
+    matmul chain (same dot shapes as the stateless fused_mlp lowering);
+    ``"mat"`` replays ``mat_lut``'s compare-and-count searchsorted +
+    one-hot-matmul MATs on the readout rows; ``"centroid"`` computes the
+    per-centroid squared distances (zero-padded lanes contribute exact
+    zeros) with the masked arg-reduce and LabelMap rewrite in-kernel.
+    ``suffix_readout``/``suffix_verdicts`` are plain-jnp and shared with
+    the wrapper's reference fallback, so every path computes identical
+    bits.
+  * ``Plan.mit`` — the folded action table.  Unlike the flow phase, the
+    [hits, since] scan admits a CLOSED FORM over each maximal same-key
+    run of a slot chain (``_mitigation_phase``): hits is a segmented
+    prefix sum of attack indicators, marked is therefore monotone within
+    a run, and since is the marked-predecessor count — so the whole
+    phase is ONE loop-free vectorized pass (cumsums + gathers), no
+    lockstep rounds, no drain.  The drop / rate-limit decision is one
+    extra masked lane over the int32 verdicts.  When the action table
+    has the SAME slot count as a single flow table, ``hash(key) &
+    (S-1)`` gives identical slots, so the launch reuses the flow table's
+    segmentation operands wholesale (``MitPlan.shared_seg``: no second
+    sort, no verdict permutation, two extra operands instead of seven).
+    Every quantity equals the arrival-order scan's value exactly
+    (integer-valued f32, exact below 2**24 like the LabelMap matvec), so
+    the result is bit-identical to
+    ``flowstate.mitigation.mitigate_update``.
 
-Feature rows never exist in HBM at all: the suffix consumes them in
-SORTED (segment) order and the wrapper inverse-permutes only the [B]
-int32 verdicts back to arrival order.
-
-Grid: (1,) — the update phase is a sequential dependency chain; the
-register table, batch operands and weight stack are all VMEM-resident
-(``vmem_bytes`` is the feasibility claim).
+Grid: (1,) — the update phases are sequential dependency chains; every
+operand is a full VMEM-resident block (``vmem_bytes`` is the feasibility
+claim).
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -46,84 +66,424 @@ from jax.experimental import pallas as pl
 from repro.kernels.flow_update.kernel import LANE, _flow_phase
 
 READOUT_MODES = ("all", "hist", "raw")
+SUFFIX_KINDS = ("mlp", "mat", "centroid")
+
+# verdict sentinel for a dropped packet (flowstate.mitigation.MITIGATED)
+_MITIGATED = -1
 
 
-def _suffix_eval(feats, w_stack, b_stack, *, head: int, mode: str,
-                 width: int, n_layers: int, num_classes: int, lane: int):
-    """Post-update feature rows -> int32 class ids, inside the kernel.
+class TablePlan(NamedTuple):
+    """Static description of one flow table's update + readout."""
 
-    feats [B, >=width] f32 (zero beyond ``width``); w_stack
-    [L, lane, lane]; b_stack [L, lane].  Reproduces WindowStats.apply +
-    fused_mlp's ``_classify_kernel`` bit for bit: same elementwise
-    divide, same lane-padded dot shapes, same -inf argmax masking.
-    Rows that are all zero (ragged padding / sentinels) classify to the
-    bias chain's argmax — the engine slices those verdicts off."""
-    if mode not in READOUT_MODES:
+    n_counters: int
+    n_ewma: int
+    n_hists: int
+    alpha: float
+    width: int                 # true register width (pre-padding)
+    mode: str                  # readout: all | hist | raw
+
+
+class SuffixPlan(NamedTuple):
+    """Static description of the in-kernel classifier."""
+
+    kind: str                  # mlp | mat | centroid
+    num_classes: int           # score lanes before any LabelMap rewrite
+    n_layers: int = 0          # mlp: layer count
+    lane: int = 0              # mlp: snapped lane
+    n_features: int = 0        # mat: real (unpadded) feature count
+    use_min: bool = False      # mat/centroid: argmin vs argmax
+    n_centroids: int = 0       # centroid: real centroid count
+    feature_idx: tuple = ()    # centroid: optional static FeatureSelect
+
+
+class MitPlan(NamedTuple):
+    """Static description of the folded mitigation action table."""
+
+    threshold: int
+    keep_every: int
+    attack_class: int
+    drop: bool                 # mode == "drop" (else rate_limit)
+    shared_seg: bool = False   # action slots == flow slots: reuse the
+                               # flow table's segmentation operands
+
+
+class Plan(NamedTuple):
+    """The whole launch, statically: tables, classifier, action table."""
+
+    tables: tuple              # of TablePlan
+    suffix: SuffixPlan
+    mit: MitPlan | None = None
+
+
+# operand count per suffix kind (see the layout walked by _serve_kernel)
+N_SUFFIX_OPS = {"mlp": 2, "mat": 3, "centroid": 2}
+
+
+def n_mit_ops(mp: MitPlan) -> int:
+    """Mitigation block operand count.  The shared-segmentation fast path
+    ships only the table pair (mit_keys, mit_regs); the general form adds
+    its own segmentation + the verdict-order gather: pk, valid, rank,
+    seg_slot, from_v."""
+    return 2 if mp.shared_seg else 7
+
+
+# ------------------------------------------------------- suffix evaluation
+#
+# Plain-jnp, shared bit-for-bit by the kernel body and the wrapper's
+# reference fallback (ops.py) — the over-envelope fallback is then a
+# pure schedule choice.
+
+
+def suffix_readout(feats, tp: TablePlan):
+    """Post-update feature rows -> model-ready readout (WindowStats.apply
+    folded statically: same elementwise divide, ``mode`` in
+    ``READOUT_MODES`` with ``"raw"`` = no WindowStats stage)."""
+    if tp.mode not in READOUT_MODES:
         raise KeyError(f"readout mode must be one of {READOUT_MODES}")
     denom = jnp.maximum(feats[:, :1], 1.0)      # counter 0 = pkt count
-    if mode == "raw":
-        z = feats[:, :width]
-    elif mode == "hist":
-        z = feats[:, head:width] / denom
-    else:                                        # "all"
-        z = jnp.concatenate(
-            [feats[:, :head], feats[:, head:width] / denom], 1
+    head = tp.n_counters + tp.n_ewma
+    if tp.mode == "raw":
+        return feats[:, :tp.width]
+    if tp.mode == "hist":
+        return feats[:, head:tp.width] / denom
+    return jnp.concatenate(
+        [feats[:, :head], feats[:, head:tp.width] / denom], 1
+    )
+
+
+def _label_rewrite(ids, lmap):
+    """LabelMap as a one-hot matvec (exact for int values < 2**24) — the
+    same gather-as-matmul idiom as ``mat_lut._kernel``."""
+    n_pkt = ids.shape[0]
+    k_pad = lmap.shape[1]
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (n_pkt, k_pad), 1)
+    onehot = (k_iota == ids[:, None]).astype(jnp.float32)
+    return jnp.dot(
+        onehot, lmap[0].astype(jnp.float32)[:, None],
+        preferred_element_type=jnp.float32,
+    )[:, 0].astype(jnp.int32)
+
+
+def _arg_reduce(scores, n_real: int, use_min: bool):
+    """Mask lanes >= ``n_real`` to -/+inf, then argmin/argmax (ties to the
+    lowest index, matching the interpreter's Reduce)."""
+    lane_ids = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    if use_min:
+        scores = jnp.where(lane_ids < n_real, scores, jnp.inf)
+        return jnp.argmin(scores, axis=1).astype(jnp.int32)
+    scores = jnp.where(lane_ids < n_real, scores, -jnp.inf)
+    return jnp.argmax(scores, axis=1).astype(jnp.int32)
+
+
+def suffix_verdicts(z, arrays: tuple, sp: SuffixPlan):
+    """Readout rows [B, n_in] -> int32 class ids, per ``sp.kind``.
+
+    ``arrays`` are the PRE-PADDED suffix parameters (packed once at
+    lowering time — see ``pallas_backend.lower_stateful_fused``):
+
+      * mlp:      (w_stack [L, lane, lane], b_stack [L, lane]) — the
+        snapped-lane matmul chain with -inf argmax masking, identical to
+        ``fused_mlp._classify_kernel``;
+      * mat:      (edges [F8, E_pad] +inf-padded, tables [F8, BINS, C_pad]
+        zero-padded, lmap [1, K_pad]) — per-feature compare-and-count
+        searchsorted + one-hot-matmul LUT gathers, identical to
+        ``mat_lut._kernel``;
+      * centroid: (cent [K8, F_pad] zero-padded, lmap [1, K_pad]) —
+        per-centroid squared distances (zero pad lanes add exact zeros),
+        +inf-masked arg-reduce, LabelMap rewrite.
+
+    Rows that are all zero (ragged padding / sentinels) classify to some
+    fixed class — the engine slices those verdicts off."""
+    z = z.astype(jnp.float32)
+    n_pkt = z.shape[0]
+    if sp.kind == "mlp":
+        w_stack, b_stack = arrays
+        h = jnp.pad(z, ((0, 0), (0, sp.lane - z.shape[1])))
+        for l in range(sp.n_layers):     # static unroll: whole DNN in-kernel
+            w = w_stack[l].astype(jnp.float32)
+            h = jnp.dot(h, w, preferred_element_type=jnp.float32)
+            h = h + b_stack[l][None, :]
+            if l < sp.n_layers - 1:
+                h = jnp.maximum(h, 0.0)
+        lane_ids = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+        h = jnp.where(lane_ids < sp.num_classes, h, -jnp.inf)
+        return jnp.argmax(h, axis=1).astype(jnp.int32)
+    if sp.kind == "mat":
+        edges, tables, lmap = arrays
+        bins_cap = tables.shape[1]
+        bin_iota = jax.lax.broadcasted_iota(jnp.int32, (n_pkt, bins_cap), 1)
+        scores = jnp.zeros((n_pkt, tables.shape[2]), jnp.float32)
+        for f in range(sp.n_features):   # static unroll: one MAT per feature
+            col = z[:, f][:, None]
+            e = edges[f][None, :]
+            # searchsorted(side='left'): bucket = #edges strictly below
+            bucket = jnp.sum((col > e).astype(jnp.int32), axis=1)
+            onehot = (bin_iota == bucket[:, None]).astype(jnp.float32)
+            scores = scores + jnp.dot(
+                onehot, tables[f].astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+        ids = _arg_reduce(scores, sp.num_classes, sp.use_min)
+        return _label_rewrite(ids, lmap)
+    if sp.kind == "centroid":
+        cent, lmap = arrays
+        if sp.feature_idx:               # folded FeatureSelect: static gather
+            z = jnp.concatenate([z[:, i:i + 1] for i in sp.feature_idx], 1)
+        zp = jnp.pad(z, ((0, 0), (0, cent.shape[1] - z.shape[1])))
+        dists = []
+        for k in range(sp.n_centroids):  # static unroll: one centroid each
+            d = jnp.sum((zp - cent[k][None, :]) ** 2, axis=1)
+            dists.append(d[:, None])
+        scores = jnp.concatenate(dists, axis=1)
+        k_pad = lmap.shape[1]
+        fill = jnp.inf if sp.use_min else -jnp.inf
+        scores = jnp.pad(scores, ((0, 0), (0, k_pad - sp.n_centroids)),
+                         constant_values=fill)
+        ids = _arg_reduce(scores, sp.n_centroids, sp.use_min)
+        return _label_rewrite(ids, lmap)
+    raise KeyError(f"suffix kind must be one of {SUFFIX_KINDS}")
+
+
+# ------------------------------------------------------- mitigation phase
+
+
+def _mitigation_phase(mkeys, mregs, pk, vd, valid, rank, seg_slot,
+                      mp: MitPlan):
+    """The action-table update as ONE loop-free vectorized pass.
+
+    The arrival-order scan of ``flowstate.mitigation.mitigate_update``
+    factorizes over maximal same-key RUNS of each slot chain (a mid-chain
+    key change is an evict-on-collision reset — a fresh row, exactly a
+    run head).  Within a run the state admits a closed form:
+
+      * ``hits`` before packet i is the run head's carry-in plus the
+        prefix count of attack verdicts — a segmented cumsum;
+      * ``marked`` (``hits >= threshold``) is therefore MONOTONE within
+        the run, so the consecutive-marked streak feeding ``since`` is
+        just the count of marked predecessors in the run (plus the
+        head's carry-in when the head itself is marked).
+
+    Every quantity equals the sequential scan's value as an
+    integer-valued f32 (exact below 2**24, the same bound as the
+    LabelMap one-hot matvec), so verdicts and final state are
+    bit-identical to the reference — with no lockstep rounds and no
+    drain, just cumsums, gathers and two scatters.
+
+    mkeys [Sm] i32; mregs [Sm, Wt] f32 (columns 0/1 live, rest zero
+    padding); batch operands are [B_pad]-sized and SORTED by MITIGATION
+    slot (stable, so per-slot arrival order is preserved) with trailing
+    sentinels (``valid == 0``).  ``vd`` carries each packet's classifier
+    verdict in the same sorted order; ``seg_slot`` holds each segment's
+    slot at its segment-id row (the ``segment_batch`` convention).
+
+    -> (mkeys' [Sm], mregs' [Sm, Wt], out_verdicts [B_pad] sorted order;
+    untouched rows pass their classifier verdict through)."""
+    Sm, Wt = mregs.shape
+    B = pk.shape[0]
+    live = valid != 0
+    thr = jnp.float32(mp.threshold)
+    keep = jnp.float32(mp.keep_every)
+    atk = jnp.int32(mp.attack_class)
+    pos = jnp.arange(B, dtype=jnp.int32)
+
+    is_head = live & (rank == 0)                 # chain heads
+    seg_id = jnp.cumsum(is_head.astype(jnp.int32)) - 1
+    slot = seg_slot[jnp.maximum(seg_id, 0)]      # slot per sorted row
+
+    prev_pk = jnp.concatenate([pk[:1], pk[:-1]])
+    run_head = live & (is_head | (pk != prev_pk))
+    hidx = jax.lax.cummax(jnp.where(run_head, pos, 0))
+
+    # table state carries in at CHAIN heads only; a key mismatch there —
+    # and every mid-chain run head — is a fresh (evicted) row
+    carry = is_head & (mkeys[slot] == pk)
+    h0 = jnp.where(carry, mregs[slot, 0], 0.0)
+    s0 = jnp.where(carry, mregs[slot, 1], 0.0)
+
+    a = (vd == atk).astype(jnp.float32)          # attack indicator
+    ecs = jnp.cumsum(a) - a                      # exclusive prefix count
+    h_before = h0[hidx] + (ecs - ecs[hidx])      # hits BEFORE each packet
+    m = h_before >= thr                          # marked BEFORE each packet
+    mf = m.astype(jnp.float32)
+    ems = jnp.cumsum(mf) - mf
+    m_run = ems - ems[hidx]                      # marked predecessors in run
+    since_before = m_run + jnp.where(m[hidx], s0[hidx], 0.0)
+
+    # the state BEFORE a packet decides its fate (mitigation contract)
+    if mp.drop:
+        drop = m
+    else:
+        # pass every keep_every-th packet of a marked flow through
+        drop = m & (jnp.mod(since_before, keep) != 0.0)
+    out = jnp.where(live & drop, jnp.int32(_MITIGATED), vd)
+
+    # the last live packet of each chain writes the row home
+    nxt_rank = jnp.concatenate([rank[1:], jnp.zeros((1,), rank.dtype)])
+    nxt_live = jnp.concatenate([live[1:], jnp.zeros((1,), bool)])
+    tail = live & (~nxt_live | (nxt_rank == 0))
+    hits1 = h_before + a
+    since1 = jnp.where(m, since_before + 1.0, 0.0)
+    colw = jax.lax.broadcasted_iota(jnp.int32, (B, Wt), 1)
+    new = jnp.where(colw == 0, hits1[:, None],
+                    jnp.where(colw == 1, since1[:, None], 0.0))
+    tgt = jnp.where(tail, slot, Sm)
+    mkeys = mkeys.at[tgt].set(pk, mode="drop")
+    mregs = mregs.at[tgt].set(new, mode="drop")
+    return mkeys, mregs, out
+
+
+# ------------------------------------------------------------ kernel body
+
+
+def _serve_kernel(*refs, plan: Plan):
+    """One launch: per-table flow phases, suffix classify, optional
+    mitigation phase.  ``refs`` = input refs (layout below) ++ output
+    refs.  Narrow int operands keep column 0 live only.
+
+    Input layout: per table 13 flow-phase operands (as
+    ``flow_update._kernel``); then, multi-table only, one arrival-gather
+    index per table (``inv``); then the suffix parameter arrays
+    (``N_SUFFIX_OPS[kind]`` of them); then, mitigated only, the
+    ``n_mit_ops(plan.mit)`` mitigation operands — just (mit_keys,
+    mit_regs) on the shared-segmentation fast path (the flow table's
+    operands are reused wholesale), else the table pair + own
+    segmentation + ``from_v``, the verdict-order gather."""
+    nt = len(plan.tables)
+    n_in = (13 * nt + (nt if nt > 1 else 0)
+            + N_SUFFIX_OPS[plan.suffix.kind]
+            + (n_mit_ops(plan.mit) if plan.mit is not None else 0))
+    ins, outs = refs[:n_in], refs[n_in:]
+
+    cur = 0
+    new_tabs = []
+    feats_list = []
+    t0_seg = None
+    for tp in plan.tables:
+        (kr, rr, pkr, ur, br, vr, rkr, sfr, slr, ssr,
+         dor, dsr, dcr) = ins[cur:cur + 13]
+        cur += 13
+        if t0_seg is None:
+            # retained for the mitigation shared-segmentation fast path
+            t0_seg = (pkr, vr, rkr, ssr)
+        k2, r2, feats = _flow_phase(
+            kr[...][:, 0], rr[...], pkr[...][:, 0], ur[...],
+            br[...][:, :max(tp.n_hists, 1)], vr[...][:, 0],
+            rkr[...][:, 0], sfr[...][:, 0], slr[...][:, 0],
+            ssr[...][:, 0], dor[...][:, 0], dsr[...][:, 0],
+            dcr[...][:, 0],
+            n_counters=tp.n_counters, n_ewma=tp.n_ewma, alpha=tp.alpha,
         )
-    z = jnp.pad(z, ((0, 0), (0, lane - z.shape[1])))
-    h = z.astype(jnp.float32)
-    for l in range(n_layers):   # static unroll: the whole DNN in-kernel
-        w = w_stack[l].astype(jnp.float32)
-        h = jnp.dot(h, w, preferred_element_type=jnp.float32)
-        h = h + b_stack[l][None, :]
-        if l < n_layers - 1:
-            h = jnp.maximum(h, 0.0)
-    lane_ids = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
-    h = jnp.where(lane_ids < num_classes, h, -jnp.inf)
-    return jnp.argmax(h, axis=1).astype(jnp.int32)
+        new_tabs.append((k2, r2))
+        feats_list.append(feats)
+
+    if nt > 1:
+        # gather every table's feature rows to ARRIVAL order and feed the
+        # shared suffix the concatenated readouts; verdicts come out in
+        # arrival order directly
+        invs = ins[cur:cur + nt]
+        cur += nt
+        zs = [
+            suffix_readout(feats_list[t][invs[t][...][:, 0]],
+                           plan.tables[t])
+            for t in range(nt)
+        ]
+        z = jnp.concatenate(zs, axis=1)
+    else:
+        z = suffix_readout(feats_list[0], plan.tables[0])
+
+    n_sfx = N_SUFFIX_OPS[plan.suffix.kind]
+    s_arrays = tuple(r[...] for r in ins[cur:cur + n_sfx])
+    cur += n_sfx
+    verd = suffix_verdicts(z, s_arrays, plan.suffix)
+
+    if plan.mit is not None:
+        if plan.mit.shared_seg:
+            # action slots == flow slots: the detection segmentation IS
+            # the mitigation segmentation and the suffix's sorted order
+            # is already mitigation order — no gather, two operands
+            mkr, mrr = ins[cur:cur + 2]
+            pkr, vr, rkr, ssr = t0_seg
+            mk2, mr2, final = _mitigation_phase(
+                mkr[...][:, 0], mrr[...], pkr[...][:, 0], verd,
+                vr[...][:, 0], rkr[...][:, 0], ssr[...][:, 0],
+                plan.mit,
+            )
+        else:
+            (mkr, mrr, mpkr, mvr, mrkr, mssr,
+             mfvr) = ins[cur:cur + 7]
+            # verdicts permute from the suffix's order (sorted-by-
+            # detection-slot, or arrival for multi-table) into
+            # mitigation-sorted order
+            vd_m = verd[mfvr[...][:, 0]]
+            mk2, mr2, final = _mitigation_phase(
+                mkr[...][:, 0], mrr[...], mpkr[...][:, 0], vd_m,
+                mvr[...][:, 0], mrkr[...][:, 0], mssr[...][:, 0],
+                plan.mit,
+            )
+    else:
+        final = verd
+
+    oc = 0
+    for k2, r2 in new_tabs:
+        ko, ro = outs[oc:oc + 2]
+        oc += 2
+        ko[...] = jnp.pad(k2[:, None], ((0, 0), (0, ko.shape[1] - 1)))
+        ro[...] = r2
+    if plan.mit is not None:
+        mko, mro = outs[oc:oc + 2]
+        oc += 2
+        mko[...] = jnp.pad(mk2[:, None], ((0, 0), (0, mko.shape[1] - 1)))
+        mro[...] = mr2
+    vo = outs[oc]
+    vo[...] = jnp.broadcast_to(final[:, None], vo.shape)
 
 
-def _kernel(keys_ref, regs_ref, pk_ref, upd_ref, bins_ref, valid_ref,
-            rank_ref, segf_ref, segl_ref, segs_ref, dord_ref, dsid_ref,
-            dsrc_ref, w_ref, b_ref, keys_out, regs_out, verd_out, *,
-            n_counters: int, n_ewma: int, n_hists: int, alpha: float,
-            head: int, mode: str, width: int, n_layers: int,
-            num_classes: int, lane: int):
-    keys = keys_ref[...][:, 0]
-    regs = regs_ref[...]
-    pk = pk_ref[...][:, 0]
-    upd = upd_ref[...]
-    bins = bins_ref[...][:, :max(n_hists, 1)]
-    valid = valid_ref[...][:, 0]
-    rank = rank_ref[...][:, 0]
-    seg_first = segf_ref[...][:, 0]
-    seg_len = segl_ref[...][:, 0]
-    seg_slot = segs_ref[...][:, 0]
-    drain_order = dord_ref[...][:, 0]
-    drain_sid = dsid_ref[...][:, 0]
-    deep_src = dsrc_ref[...][:, 0]
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def fused_flow_serve_padded(*ops, plan: Plan, interpret: bool = False):
+    """Padded/segmented operands (layout in ``_serve_kernel``) -> flat
+    outputs: per table (keys' [S, kw], regs' [S, w_pad]), then the
+    mitigated table pair when ``plan.mit``, then verdicts [B_pad, kw]
+    int32 (class id in column 0) in the suffix's order — SORTED for one
+    table, ARRIVAL for multi-table, MITIGATION-SORTED when mitigated."""
+    nt = len(plan.tables)
+    tile = ops[0].shape[1]
+    b_pad = ops[2].shape[0]
 
-    keys2, regs2, feats = _flow_phase(
-        keys, regs, pk, upd, bins, valid, rank, seg_first, seg_len,
-        seg_slot, drain_order, drain_sid, deep_src,
-        n_counters=n_counters, n_ewma=n_ewma, alpha=alpha,
-    )
-    verd = _suffix_eval(
-        feats, w_ref[...], b_ref[...], head=head, mode=mode, width=width,
-        n_layers=n_layers, num_classes=num_classes, lane=lane,
-    )
-    keys_out[...] = jnp.pad(
-        keys2[:, None], ((0, 0), (0, keys_ref.shape[1] - 1))
-    )
-    regs_out[...] = regs2
-    verd_out[...] = jnp.broadcast_to(verd[:, None], verd_out.shape)
+    def full(arr):
+        nd = arr.ndim
+        return pl.BlockSpec(arr.shape, lambda i, _n=nd: (0,) * _n)
+
+    out_specs, out_shape = [], []
+
+    def add_out(shape, dtype):
+        out_specs.append(pl.BlockSpec(shape, lambda i, _n=len(shape):
+                                      (0,) * _n))
+        out_shape.append(jax.ShapeDtypeStruct(shape, dtype))
+
+    for t in range(nt):
+        s_t = ops[13 * t].shape[0]
+        w_pad_t = ops[13 * t + 1].shape[1]
+        add_out((s_t, tile), jnp.int32)
+        add_out((s_t, w_pad_t), jnp.float32)
+    if plan.mit is not None:
+        m_off = (13 * nt + (nt if nt > 1 else 0)
+                 + N_SUFFIX_OPS[plan.suffix.kind])
+        sm = ops[m_off].shape[0]
+        wt = ops[m_off + 1].shape[1]
+        add_out((sm, tile), jnp.int32)
+        add_out((sm, wt), jnp.float32)
+    add_out((b_pad, tile), jnp.int32)
+
+    return pl.pallas_call(
+        functools.partial(_serve_kernel, plan=plan),
+        grid=(1,),
+        in_specs=[full(a) for a in ops],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*ops)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("n_counters", "n_ewma", "n_hists", "alpha", "head",
-                     "mode", "width", "n_layers", "num_classes", "lane",
-                     "interpret"),
-)
 def fused_flow_classify_padded(
     keys, regs, pkt_keys, upd, bins, valid, rank, seg_first, seg_len,
     seg_slot, drain_order, drain_sid, deep_src, w_stack, b_stack, *,
@@ -131,56 +491,45 @@ def fused_flow_classify_padded(
     mode: str, width: int, n_layers: int, num_classes: int, lane: int,
     interpret: bool = False,
 ):
-    """Padded/segmented operands -> (keys' [S, kw], regs' [S, w_pad],
+    """The PR-6 single-table MLP form, kept as a thin wrapper over the
+    ``Plan``-driven launcher: -> (keys' [S, kw], regs' [S, w_pad],
     verdicts [B_pad, kw] int32 in SORTED order, class id in column 0)."""
-    S, w_pad = regs.shape
-    B, k_w = pkt_keys.shape
-    d_rows = deep_src.shape[0]
-    full = lambda r, c: pl.BlockSpec((r, c), lambda i: (0, 0))
-    narrow = full(B, k_w)
-    return pl.pallas_call(
-        functools.partial(
-            _kernel, n_counters=n_counters, n_ewma=n_ewma,
-            n_hists=n_hists, alpha=alpha, head=head, mode=mode,
-            width=width, n_layers=n_layers, num_classes=num_classes,
-            lane=lane,
-        ),
-        grid=(1,),
-        in_specs=[
-            full(S, k_w),                        # stored keys
-            full(S, w_pad),                      # register rows
-            narrow,                              # pkt keys
-            full(B, upd.shape[1]),               # update vectors
-            full(B, bins.shape[1]),              # hist columns
-            narrow,                              # valid
-            narrow,                              # rank
-            narrow,                              # seg_first
-            narrow,                              # seg_len
-            narrow,                              # seg_slot
-            narrow,                              # drain_order
-            narrow,                              # drain_sid
-            full(d_rows, k_w),                   # deep_src
-            pl.BlockSpec((n_layers, lane, lane), lambda i: (0, 0, 0)),
-            pl.BlockSpec((n_layers, lane), lambda i: (0, 0)),
-        ],
-        out_specs=[full(S, k_w), full(S, w_pad), narrow],
-        out_shape=[
-            jax.ShapeDtypeStruct((S, k_w), jnp.int32),
-            jax.ShapeDtypeStruct((S, w_pad), jnp.float32),
-            jax.ShapeDtypeStruct((B, k_w), jnp.int32),
-        ],
-        interpret=interpret,
-    )(keys, regs, pkt_keys, upd, bins, valid, rank, seg_first, seg_len,
-      seg_slot, drain_order, drain_sid, deep_src, w_stack, b_stack)
+    del head
+    plan = Plan(
+        tables=(TablePlan(n_counters, n_ewma, n_hists, alpha, width, mode),),
+        suffix=SuffixPlan("mlp", num_classes, n_layers=n_layers, lane=lane),
+    )
+    return fused_flow_serve_padded(
+        keys, regs, pkt_keys, upd, bins, valid, rank, seg_first, seg_len,
+        seg_slot, drain_order, drain_sid, deep_src, w_stack, b_stack,
+        plan=plan, interpret=interpret,
+    )
 
 
 def vmem_bytes(n_slots: int, width: int, n_layers: int, lane: int,
-               batch: int = 256) -> int:
-    """Resident working set of the fused launch: the flow-update set plus
-    the classifier weight stack and one activation tile (feasibility
-    input; mirrors flow_update.vmem_bytes + fused_mlp.vmem_bytes)."""
+               batch: int = 256, *, suffix: str = "mlp",
+               n_features: int = 0, n_bins: int = 0, num_classes: int = 0,
+               n_centroids: int = 0, extra_tables: tuple = (),
+               mit_slots: int = 0) -> int:
+    """Resident working set of the fused launch (feasibility input):
+    flow-update set(s) plus the suffix parameters, one activation tile,
+    and — when mitigation is folded in — the action table with its own
+    scheduling operands.  ``extra_tables`` lists additional flow tables
+    as (n_slots, width) pairs for the multi-table form."""
     from repro.kernels.flow_update.kernel import vmem_bytes as flow_bytes
 
-    weights = n_layers * (lane * lane + lane) * 4
-    act = 2 * batch * lane * 4
-    return flow_bytes(n_slots, width, batch) + weights + act
+    total = flow_bytes(n_slots, width, batch)
+    for s2, w2 in extra_tables:
+        total += flow_bytes(s2, w2, batch)
+    if suffix == "mlp":
+        total += n_layers * (lane * lane + lane) * 4 + 2 * batch * lane * 4
+    elif suffix == "mat":
+        total += n_features * (n_bins * max(num_classes, 1) + n_bins) * 4
+        total += 2 * batch * max(n_features, num_classes, 1) * 4
+    elif suffix == "centroid":
+        total += n_centroids * max(lane, 1) * 4 + 2 * batch * lane * 4
+    if mit_slots:
+        # [hits, since] + key per slot, plus (worst case, non-shared
+        # segmentation) the 7 per-batch mitigation operand columns
+        total += mit_slots * 3 * 4 + batch * 4 * 7
+    return total

@@ -1,30 +1,40 @@
 """Public op: the whole stateful pipeline as ONE fused kernel launch.
 
-``fused_flow_classify(keys, regs, pkt_keys, upd, bins, valid, w_stack,
-b_stack, ...)`` segments the batch by slot (the same
-``flow_update.segment_batch`` prelude), launches the fused Pallas kernel
-(update phase + in-kernel classifier; interpret=True on CPU) and
-inverse-permutes the [B] int32 verdicts back to arrival order.  This is
-the executable artifact ``core.pallas_backend.lower_stateful_fused``
-emits for a fused-eligible stateful pipeline — the backend string
-``"pallas-fused-flow"`` means exactly this launch is serving.
+``fused_flow_serve(tables, valid, ...)`` segments the batch by slot once
+per flow table (the shared ``flow_update.segment_batch`` prelude) — plus
+once more over the action table's own slot space when mitigation is
+folded in with a slot count different from the flow table's (same count:
+the flow segmentation is reused wholesale, ``MitPlan.shared_seg``) —
+launches the ``Plan``-driven fused Pallas kernel (interpret=True on CPU)
+and restores the [B] int32 verdicts to arrival order.  This is the executable artifact
+``core.pallas_backend.lower_stateful_fused`` emits for a fused-eligible
+stateful pipeline — the backend string ``"pallas-fused-flow"`` means
+exactly this launch is serving.  ``fused_flow_classify`` keeps the PR-6
+single-table MLP signature as a thin wrapper.
 
-Weights arrive PRE-PACKED (``fused_mlp.pack_params`` at the snapped
-lane): packing happens once at lowering time, not per batch.
+Suffix parameters arrive PRE-PADDED (lane-snapped MLP stacks, +inf-padded
+MAT edges, zero-padded tables/centroids): packing happens once at
+lowering time, not per batch.
 
-Bit-identity contract: state, features and verdicts equal the
-two-dispatch composition (flow_update + WindowStats.apply + fused-MLP
-classify) bit for bit — the update phase is the shared ``_flow_phase``
-schedule and the classifier phase reuses the composition's lane-padded
-dot shapes (see kernels/fused_flow/kernel.py).  Outside the kernel
-envelope the op falls back to the jnp scan reference + the same suffix
-evaluation, and the drain-routing ``lax.cond`` (same profile as
-``flow_update``) routes near-degenerate batches — more than 7/8 of live
-packets deeper than ``PAR_ROUNDS`` in one chain — to that reference
-walk; every path computes identical bits.
+Bit-identity contract: state, features and verdicts equal the split
+composition (flow_update + WindowStats.apply + classifier [+
+mitigate_update]) bit for bit — the update phases are the shared
+``_flow_phase``/``_mitigation_phase`` schedules and the classifier phase
+shares ``suffix_readout``/``suffix_verdicts`` with the reference path
+(MAT parity quantization-bounded per the lowering contract).  The kernel
+serves every in-envelope batch — the doubly-compacted drain walks deep
+chains at a small fixed per-packet cost, measured well under the
+reference walk even on a fully-degenerate single-chain batch, so there
+is no drain-routing ``lax.cond`` (``telemetry.flow_health`` still flags
+drain-heavy batches as a traffic-shape signal).  Outside the kernel
+envelope (table over VMEM bounds, B == 0) the op falls back to the jnp
+scan reference + the same suffix evaluation; every path computes
+identical bits.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -40,13 +50,192 @@ from repro.kernels.flow_update.ops import (
 from repro.kernels.flow_update.ref import flow_update_ref, hash_slot
 from repro.kernels.fused_flow.kernel import (
     LANE,
-    _suffix_eval,
-    fused_flow_classify_padded,
+    MitPlan,
+    Plan,
+    SuffixPlan,
+    TablePlan,
+    fused_flow_serve_padded,
+    suffix_readout,
+    suffix_verdicts,
 )
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _icol(vals, b: int, tile: int, fill: int = 0):
+    """[b] int values -> [b + tile, tile] int32 with column 0 live and
+    ``fill`` everywhere else (the narrow-operand sentinel convention)."""
+    out = jnp.full((b + tile, tile), fill, jnp.int32)
+    return out.at[:b, 0].set(vals)
+
+
+def _pack_mit_table(mit_keys, mit_regs, *, tile: int):
+    """Pad the action table pair to kernel tile shapes."""
+    Sm = mit_keys.shape[0]
+    return (
+        jnp.zeros((Sm, tile), jnp.int32).at[:, 0].set(mit_keys),
+        jnp.pad(mit_regs, ((0, 0), (0, tile - mit_regs.shape[1]))),
+    )
+
+
+def _pack_mitigation_operands(mseg, mit_keys, mit_regs, pkt_keys, valid,
+                              from_v, *, tile: int):
+    """Permute the batch into MITIGATION-slot-sorted order and pad the
+    action table + its segmentation to kernel tile shapes (the loop-free
+    closed-form phase needs only rank + seg_slot, no lockstep/drain
+    bookkeeping).  ``from_v[i]`` maps the packet at mitigation-sorted
+    position i to its row in the suffix's verdict array; sentinels point
+    at a sentinel verdict row."""
+    B = pkt_keys.shape[0]
+    o = mseg.order
+    icol = functools.partial(_icol, b=B, tile=tile)
+    return _pack_mit_table(mit_keys, mit_regs, tile=tile) + (
+        icol(pkt_keys[o]),
+        icol(valid[o]),
+        icol(mseg.rank),
+        icol(mseg.seg_slot),
+        icol(from_v, fill=B),
+    )
+
+
+def fused_flow_serve(
+    tables,                # seq of (keys [S], regs [S, W], pkt_keys [B],
+                           #         upd [B, C+E], bins [B, H])
+    valid,                 # [B] int-ish; 0 = padding row, never applied
+    table_plans,           # seq of kernel.TablePlan (one per flow table)
+    suffix_plan,           # kernel.SuffixPlan
+    suffix_arrays,         # tuple of PRE-PADDED suffix parameter arrays
+    mitigation=None,       # (mit_keys [Sm], mit_regs [Sm, 2],
+                           #  flowstate.mitigation.MitigationSpec)
+    interpret: bool | None = None,
+):
+    """-> flat tuple: per table (keys' [S], regs' [S, W]), then
+    (mit_keys', mit_regs') when mitigated, then verdicts [B] int32 in
+    ARRIVAL order — one kernel launch.
+
+    Rows with ``valid == 0`` never touch any table and keep meaningless
+    verdicts (the engine slices them off).  Bit-identical to the split
+    composition; see the flow-state and mitigation contracts in
+    docs/pipeline_ir.md."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    tables = [
+        (jnp.asarray(k, jnp.int32), jnp.asarray(r, jnp.float32),
+         jnp.asarray(pk, jnp.int32), jnp.asarray(u, jnp.float32),
+         jnp.asarray(b, jnp.int32))
+        for (k, r, pk, u, b) in tables
+    ]
+    table_plans = tuple(table_plans)
+    suffix_arrays = tuple(jnp.asarray(a) for a in suffix_arrays)
+    valid = jnp.asarray(valid, jnp.int32)
+    nt = len(tables)
+    B = int(tables[0][2].shape[0])
+
+    if mitigation is not None:
+        from repro.flowstate.mitigation import mitigate_update
+
+        mit_keys = jnp.asarray(mitigation[0], jnp.int32)
+        mit_regs = jnp.asarray(mitigation[1], jnp.float32)
+        mspec = mitigation[2]
+        # same slot count as a single flow table -> hash(key) & (S-1)
+        # gives identical slots, so the flow segmentation is reused
+        # wholesale (no second sort, no verdict permutation)
+        shared = (len(tables) == 1
+                  and int(mit_keys.shape[0]) == int(tables[0][0].shape[0]))
+        mit_plan = MitPlan(mspec.threshold, mspec.keep_every,
+                           mspec.attack_class, mspec.mode == "drop",
+                           shared_seg=shared)
+    else:
+        mit_plan = None
+
+    def reference_full():
+        outs = []
+        zs = []
+        for (k, r, pk, u, b), tp in zip(tables, table_plans):
+            k2, r2, feats = flow_update_ref(
+                k, r, pk, u, b, valid,
+                n_counters=tp.n_counters, n_ewma=tp.n_ewma, alpha=tp.alpha,
+            )
+            outs += [k2, r2]
+            zs.append(suffix_readout(feats, tp))
+        z = jnp.concatenate(zs, 1) if nt > 1 else zs[0]
+        verd = suffix_verdicts(z, suffix_arrays, suffix_plan)
+        if mit_plan is not None:
+            mk2, mr2, verd = mitigate_update(
+                mit_keys, mit_regs, tables[0][2], verd, valid, spec=mspec)
+            outs += [mk2, mr2]
+        return tuple(outs) + (verd,)
+
+    over = any(
+        int(r.shape[0]) > MAX_SLOTS or int(r.shape[1]) > MAX_WIDTH
+        or int(b.shape[1] if b.ndim == 2 else 0) > MAX_HISTS
+        for (_, r, _, _, b) in tables
+    )
+    if mit_plan is not None and int(mit_keys.shape[0]) > MAX_SLOTS:
+        over = True
+    if over or B == 0:
+        return reference_full()
+
+    # CPU interpret mode snaps pads to 8-wide tiles; TPU pads the last
+    # dim to the full 128 lane.
+    tile = 8 if interpret else LANE
+    segs = [
+        segment_batch(hash_slot(pk, int(k.shape[0])), valid,
+                      int(k.shape[0]))
+        for (k, _, pk, _, _) in tables
+    ]
+    if mit_plan is not None:
+        mseg = (segs[0] if mit_plan.shared_seg else segment_batch(
+            hash_slot(tables[0][2], int(mit_keys.shape[0])), valid,
+            int(mit_keys.shape[0])))
+    plan = Plan(tables=table_plans, suffix=suffix_plan, mit=mit_plan)
+
+    def launch():
+        flat = []
+        for (k, r, pk, u, b), tp, seg in zip(tables, table_plans, segs):
+            H = int(b.shape[1]) if b.ndim == 2 else 0
+            flat += list(pack_segmented_operands(
+                seg, k, r, pk, u, b, valid, tile=tile,
+                w_pad=_snap(int(r.shape[1]), tile),
+                u_pad=_snap(int(u.shape[1]), tile),
+                h_pad=_snap(H, tile) if not interpret else max(H, 1),
+            ))
+        if nt > 1:
+            # arrival-gather index per table: suffix rows re-assemble in
+            # arrival order inside the kernel
+            flat += [_icol(seg.inv, B, tile, fill=B) for seg in segs]
+        flat += list(suffix_arrays)
+        if mit_plan is not None:
+            if mit_plan.shared_seg:
+                flat += list(_pack_mit_table(mit_keys, mit_regs,
+                                             tile=tile))
+            else:
+                from_v = (mseg.order if nt > 1
+                          else segs[0].inv[mseg.order])
+                flat += list(_pack_mitigation_operands(
+                    mseg, mit_keys, mit_regs, tables[0][2], valid,
+                    from_v, tile=tile,
+                ))
+        res = fused_flow_serve_padded(*flat, plan=plan,
+                                      interpret=interpret)
+        outs = []
+        i = 0
+        for (_, r, _, _, _) in tables:
+            outs += [res[i][:, 0], res[i + 1][:, :int(r.shape[1])]]
+            i += 2
+        if mit_plan is not None:
+            outs += [res[i][:, 0], res[i + 1][:, :mit_regs.shape[1]]]
+            i += 2
+        verd = res[i][:B, 0]
+        if mit_plan is not None:
+            verd = verd[mseg.inv]        # mitigation-sorted -> arrival
+        elif nt == 1:
+            verd = verd[segs[0].inv]     # detection-sorted -> arrival
+        return tuple(outs) + (verd,)
+
+    return launch()
 
 
 def fused_flow_classify(
@@ -67,66 +256,15 @@ def fused_flow_classify(
     lane: int,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """-> (keys' [S], regs' [S, W], verdicts [B] int32), one kernel launch.
-
-    Verdicts are in arrival order; rows with ``valid == 0`` never touch
-    the table and classify the all-zero feature row (the engine slices
-    them off).  Bit-identical to the two-dispatch composition; see the
-    flow-state contract in docs/pipeline_ir.md."""
-    if interpret is None:
-        interpret = not _on_tpu()
-    S, W = regs.shape
-    B = int(pkt_keys.shape[0])
+    """The PR-6 single-table MLP form -> (keys' [S], regs' [S, W],
+    verdicts [B] int32 in arrival order), one kernel launch."""
     H = int(bins.shape[1]) if bins.ndim == 2 else 0
-    head = n_counters + n_ewma
-    n_layers = int(w_stack.shape[0])
-
-    keys = jnp.asarray(keys, jnp.int32)
-    regs = jnp.asarray(regs, jnp.float32)
-    pkt_keys = jnp.asarray(pkt_keys, jnp.int32)
-    upd = jnp.asarray(upd, jnp.float32)
-    bins = jnp.asarray(bins, jnp.int32)
-    valid = jnp.asarray(valid, jnp.int32)
-
-    def suffix(feats):
-        return _suffix_eval(
-            feats, w_stack, b_stack, head=head, mode=mode, width=W,
-            n_layers=n_layers, num_classes=num_classes, lane=lane,
-        )
-
-    def reference_full():
-        k, r, feats = flow_update_ref(
-            keys, regs, pkt_keys, upd, bins, valid,
-            n_counters=n_counters, n_ewma=n_ewma, alpha=alpha,
-        )
-        return k, r, suffix(feats)
-
-    if S > MAX_SLOTS or W > MAX_WIDTH or H > MAX_HISTS or B == 0:
-        return reference_full()
-
-    tile = 8 if interpret else LANE
-    w_pad = _snap(W, tile)
-    u_pad = _snap(upd.shape[1], tile)
-    h_pad = _snap(H, tile) if not interpret else max(H, 1)
-
-    seg = segment_batch(hash_slot(pkt_keys, S), valid, S)
-
-    def launch(_):
-        ops = pack_segmented_operands(
-            seg, keys, regs, pkt_keys, upd, bins, valid,
-            tile=tile, w_pad=w_pad, u_pad=u_pad, h_pad=h_pad,
-        )
-        k_out, r_out, verd = fused_flow_classify_padded(
-            *ops, w_stack, b_stack, n_counters=n_counters, n_ewma=n_ewma,
-            n_hists=H, alpha=float(alpha), head=head, mode=mode, width=W,
-            n_layers=n_layers, num_classes=num_classes, lane=lane,
-            interpret=interpret,
-        )
-        # verdicts come back in sorted order: inverse-permute to arrival
-        return k_out[:, 0], r_out[:, :W], verd[:B, 0][seg.inv]
-
-    def reference(_):
-        return reference_full()
-
-    return jax.lax.cond(seg.n_deep * 8 > seg.n_live * 7,
-                        reference, launch, 0)
+    tp = TablePlan(n_counters, n_ewma, H, float(alpha),
+                   int(regs.shape[1]), mode)
+    sp = SuffixPlan("mlp", num_classes, n_layers=int(w_stack.shape[0]),
+                    lane=lane)
+    k2, r2, verd = fused_flow_serve(
+        [(keys, regs, pkt_keys, upd, bins)], valid, (tp,), sp,
+        (w_stack, b_stack), interpret=interpret,
+    )
+    return k2, r2, verd

@@ -222,6 +222,16 @@ def _pipeline_backend(pipeline) -> str:
     return backend
 
 
+def _backend_stats_key(pipeline, backend: str) -> str:
+    """Per-batch accounting key: the serving engine, annotated with the
+    fused-path decline reason when a stateful pipeline asked for the
+    single-launch fused kernel and fell back to the split path
+    (``StatefulPipeline.fallback_reason``) — so ``backend_counts`` says
+    not just WHERE batches served but WHY the fused launch declined."""
+    reason = getattr(pipeline, "fallback_reason", None)
+    return f"{backend}({reason})" if reason else backend
+
+
 class PacketServeEngine:
     """Micro-batching front-end over one compiled pipeline/DAG callable.
 
@@ -282,6 +292,7 @@ class PacketServeEngine:
         self.pipeline = pipeline
         # engine provenance: "interpret" unless the callable says otherwise
         self.backend = _pipeline_backend(pipeline)
+        self._backend_key = _backend_stats_key(pipeline, self.backend)
         self.feature_dim = int(feature_dim)
         self.max_batch = int(max_batch)
         self.depth = max(1, int(depth))
@@ -332,7 +343,7 @@ class PacketServeEngine:
     # slot-segmentation stats are recomputed host-side from the packet
     # rows — ~50us of numpy per batch that would contend with XLA's CPU
     # threads; sampling every Nth batch (first included) keeps the
-    # schedule-routing picture while holding the telemetry overhead
+    # schedule-shape picture while holding the telemetry overhead
     # inside the 97% throughput budget.  Tests set 1 for exact counts.
     TELEMETRY_SEG_SAMPLE = 8
 
@@ -376,13 +387,13 @@ class PacketServeEngine:
                 "swap request -> ring-boundary install").default,
             "lockstep": m.counter(
                 "flow_lockstep_batches_total",
-                "sampled stateful batches on the compacted lockstep "
-                "schedule"
+                "sampled stateful batches retired mostly by the "
+                "compacted lockstep rounds"
             ).default,
             "drain": m.counter(
                 "flow_drain_batches_total",
-                "sampled stateful batches routed to the drain/reference "
-                "walk"
+                "sampled stateful batches with a drain-heavy traffic "
+                "shape (served in-kernel by the compacted drain)"
             ).default,
             "deep_pkts": m.counter(
                 "flow_deep_packets_total",
@@ -405,11 +416,16 @@ class PacketServeEngine:
         m.gauge("serve_depth", "dispatch-pipeline depth").default.set(
             self.depth)
         self._resolve_flow_telemetry(self.pipeline)
-        if (requested_backend == "pallas"
-                and self.backend in ("interpret", "mixed")):
-            self._tel.journal.emit(
-                "backend_fallback", requested=requested_backend,
-                actual=self.backend, engine=type(self).__name__)
+        # a fused-envelope decline (reason carried on the pipeline) is a
+        # fallback even when the split path still serves on "pallas"
+        reason = getattr(self.pipeline, "fallback_reason", None)
+        if reason or (requested_backend == "pallas"
+                      and self.backend in ("interpret", "mixed")):
+            ev = {"requested": requested_backend or "pallas",
+                  "actual": self.backend, "engine": type(self).__name__}
+            if reason:
+                ev["reason"] = reason
+            self._tel.journal.emit("backend_fallback", **ev)
 
     def _resolve_flow_telemetry(self, pipeline) -> None:
         """Grab the FlowKey stage (if any) so per-batch slot-collision
@@ -445,7 +461,7 @@ class PacketServeEngine:
                          t0: float, t1: float, slots=None) -> None:
         """Per-batch hot-path recording: counters, the dispatch span and
         (stateful pipelines) the slot-segmentation statistics mirroring
-        the fused kernel's lockstep-vs-drain routing.  ``slots`` is the
+        the fused kernel's lockstep-vs-drain schedule split.  ``slots`` is the
         precomputed per-row slot vector (sharded routing already holds
         the keys), ``None`` to compute here on sampled batches, or
         ``False`` when the caller sampled the batch OUT."""
@@ -470,7 +486,7 @@ class PacketServeEngine:
                 slots = self._hash_slot_np(
                     self._tel_flowkey.apply_keys_np(rows), self._tel_slots)
             seg = self._batch_segmentation(slots)
-            (tm["drain"] if seg["drain_routed"] else tm["lockstep"]).inc(1)
+            (tm["drain"] if seg["drain_heavy"] else tm["lockstep"]).inc(1)
             if seg["n_deep"]:
                 tm["deep_pkts"].inc(seg["n_deep"])
             tm["max_chain"].set(seg["max_chain"])
@@ -618,7 +634,7 @@ class PacketServeEngine:
         # call; anything else is a lazy device handle fetched later
         ready = t1 if isinstance(out, np.ndarray) else None
         self.stats_.dispatch_s += t1 - t0
-        self.stats_.count_batch(self.backend, n, pad)
+        self.stats_.count_batch(self._backend_key, n, pad)
         if self._tel is not None:
             self._record_dispatch(rows, n, pad, t0, t1)
         self._inflight.append(_InFlight(n, out, t0, ready))
@@ -656,15 +672,18 @@ class PacketServeEngine:
             )
         payload = self._prepare_swap(pipeline)
         if self._tel is not None:
+            actual = _pipeline_backend(pipeline)
             self._tel.tracer.record(
                 "swap_prepare", t_req, time.perf_counter(), cat="swap",
-                args={"backend": _pipeline_backend(pipeline)})
-            if (backend == "pallas" and _pipeline_backend(pipeline)
-                    in ("interpret", "mixed")):
-                self._tel.journal.emit(
-                    "backend_fallback", requested=backend,
-                    actual=_pipeline_backend(pipeline),
-                    engine=type(self).__name__, during="swap")
+                args={"backend": actual})
+            reason = getattr(pipeline, "fallback_reason", None)
+            if reason or (backend == "pallas"
+                          and actual in ("interpret", "mixed")):
+                ev = {"requested": backend or "pallas", "actual": actual,
+                      "engine": type(self).__name__, "during": "swap"}
+                if reason:
+                    ev["reason"] = reason
+                self._tel.journal.emit("backend_fallback", **ev)
         with self._swap_lock:
             self._pending_swap = (payload, t_req)
 
@@ -719,6 +738,7 @@ class PacketServeEngine:
         self._carry_state(pipeline)
         self.pipeline = pipeline
         self.backend = _pipeline_backend(pipeline)
+        self._backend_key = _backend_stats_key(pipeline, self.backend)
         self._dispatch_fn = getattr(pipeline, "dispatch", pipeline)
         # segmentation stats must track the NEW pipeline's FlowKey/spec
         self._resolve_flow_telemetry(pipeline)

@@ -151,7 +151,13 @@ class ShardedPacketServeEngine(PacketServeEngine):
         self.devices = devices
         n = len(devices)
         traceable = _traceable_fn(pipeline)
-        self.sharded = n >= max(1, int(min_shards)) and traceable is not None
+        # a multi-table stateful pipeline has no single flow key to
+        # partition on — its tables key the same packet differently, so a
+        # flow cannot be pinned to one device's tables; degrade to the
+        # single-device serving path rather than split state incorrectly
+        multi_table = getattr(pipeline, "n_tables", 1) > 1
+        self.sharded = (n >= max(1, int(min_shards))
+                        and traceable is not None and not multi_table)
         if not self.sharded:
             super().__init__(pipeline, feature_dim=feature_dim,
                              max_batch=max_batch, state=state, depth=depth,
@@ -228,7 +234,7 @@ class ShardedPacketServeEngine(PacketServeEngine):
         self.state, out = self._launch_stateful(buf, valid)
         t1 = time.perf_counter()
         self.stats_.dispatch_s += t1 - t0
-        self.stats_.count_batch(self.backend, m, self.max_batch - m)
+        self.stats_.count_batch(self._backend_key, m, self.max_batch - m)
         if self._tel is not None:
             slots = False              # sampled out unless the tick fires
             if self._seg_tick():
@@ -283,6 +289,11 @@ class ShardedPacketServeEngine(PacketServeEngine):
             raise ValueError(
                 "cannot hot-swap an untraceable pipeline into a sharded "
                 "engine (shard_map needs a traceable program)"
+            )
+        if getattr(pipeline, "n_tables", 1) > 1:
+            raise ValueError(
+                "cannot hot-swap a multi-table pipeline into a sharded "
+                "engine (flows are key-partitioned on ONE flow key)"
             )
         payload = {"pipeline": pipeline}
         mesh, fn = _build_sharded_step(

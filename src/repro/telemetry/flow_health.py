@@ -13,10 +13,10 @@ Two kinds of measurement, both deliberately OFF the device hot path
     recomputed host-side from the packet keys the engine already
     derives (sharded routing) or can derive for free
     (``FlowKey.apply_keys_np``): same stable-sort rank the fused
-    kernel's segmentation prelude uses, so the reported
-    lockstep-vs-drain routing is exactly the ``lax.cond`` decision in
-    ``kernels/fused_flow`` (more than 7/8 of live packets deeper than
-    ``PAR_ROUNDS`` in one chain routes to the reference walk).
+    kernel's segmentation prelude uses.  ``drain_heavy`` flags batches
+    where more than 7/8 of live packets sit deeper than ``PAR_ROUNDS``
+    in one chain — a traffic-shape signal (the kernel's doubly-compacted
+    drain serves such batches in-kernel; nothing is routed away).
 """
 
 from __future__ import annotations
@@ -86,15 +86,16 @@ def batch_segmentation(slots: np.ndarray, *,
     key) of every REAL row in the batch (padding excluded — the engine
     dispatches real rows and pads separately).  Mirrors the fused
     kernel's segmentation prelude: per-slot arrival rank, packets
-    deeper than ``par_rounds`` (the drain set), and the drain-routing
-    decision ``n_deep * 8 > n_live * 7``."""
+    deeper than ``par_rounds`` (the drain set), and the drain-heavy
+    flag ``n_deep * 8 > n_live * 7`` — the drain-dominated traffic
+    shape (served in-kernel by the compacted drain, not routed)."""
     if par_rounds is None:
         par_rounds = _par_rounds()
     slots = np.asarray(slots)
     n_live = int(slots.size)
     if n_live == 0:
         return {"n_live": 0, "n_deep": 0, "max_chain": 0,
-                "drain_routed": False}
+                "drain_heavy": False}
     order = np.argsort(slots, kind="stable")
     ss = slots[order]
     new_seg = np.empty(n_live, bool)
@@ -108,5 +109,5 @@ def batch_segmentation(slots: np.ndarray, *,
         "n_live": n_live,
         "n_deep": n_deep,
         "max_chain": int(rank.max()) + 1,
-        "drain_routed": bool(n_deep * 8 > n_live * 7),
+        "drain_heavy": bool(n_deep * 8 > n_live * 7),
     }

@@ -299,19 +299,25 @@ def test_stateful_pipeline_pallas_parity_and_with_backend(rng):
 
 @needs_pallas
 def test_stateful_pipeline_mixed_when_suffix_ineligible(rng):
-    # a CentroidDistance classifier is outside the kernel envelope: the
-    # flow prefix fuses, the suffix honestly reports the interpreter
+    # an over-wide MLP (hidden > the 128 kernel lane) is outside every
+    # kernel envelope: the flow prefix fuses, the suffix honestly reports
+    # the interpreter, and the fused decline reason is surfaced
     spec = FlowStateSpec(n_slots=8, n_counters=1, n_ewma=1, hist_sizes=(3,))
-    stages = _mini_pipeline(spec)[:3] + [
-        stageir.CentroidDistance(
-            np.asarray(np.random.default_rng(0).normal(size=(3, spec.width)),
-                       np.float32)),
-        stageir.Reduce("argmin"),
+    stages = _mini_pipeline(spec)[:3]
+    n_in = stages[2].n_out
+    r = np.random.default_rng(0)
+    stages = stages + [
+        stageir.FusedMLP(
+            [np.asarray(r.normal(size=(n_in, 200)), np.float32),
+             np.asarray(r.normal(size=(200, 2)), np.float32)],
+            [np.zeros(200, np.float32), np.zeros(2, np.float32)]),
+        stageir.Reduce("argmax"),
     ]
     pp = StatefulPipeline(stages, backend="pallas")
     assert pp.flow_backend == "pallas"
     assert pp.classifier_backend == "interpret"
     assert pp.backend == "mixed"
+    assert pp.fallback_reason == "classifier width exceeds the kernel lane"
     pi = StatefulPipeline(stages)
     X = _packets(rng, 16)
     _, vi = pi(pi.init_state(), X)

@@ -268,8 +268,10 @@ def test_backend_reported_honestly():
     assert _pipeline(spec, backend="interpret").backend == "interpret"
     assert _pipeline(None, backend="interpret").backend == "interpret"
     if pallas_backend.pallas_available():
-        # fused Pallas detection + interpret mitigation is NOT pure pallas
-        assert _pipeline(spec, backend="pallas").backend == "mixed"
+        # the action table folds into the fused launch: a mitigated
+        # pipeline serves detection + classify + mitigate as ONE kernel
+        assert _pipeline(spec, backend="pallas").backend == \
+            "pallas-fused-flow"
         assert _pipeline(None, backend="pallas").backend == \
             "pallas-fused-flow"
 

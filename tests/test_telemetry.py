@@ -249,15 +249,15 @@ def test_batch_segmentation_matches_kernel_rank_semantics():
     assert seg["n_live"] == 7
     assert seg["max_chain"] == 4
     assert seg["n_deep"] == 2         # ranks 2 and 3 of the slot-3 chain
-    assert seg["drain_routed"] is (2 * 8 > 7 * 7)
+    assert seg["drain_heavy"] is (2 * 8 > 7 * 7)
     assert batch_segmentation(np.array([]), par_rounds=2) == {
-        "n_live": 0, "n_deep": 0, "max_chain": 0, "drain_routed": False}
-    # a deep single chain: 30/32 deep strictly exceeds 7/8 -> drain
+        "n_live": 0, "n_deep": 0, "max_chain": 0, "drain_heavy": False}
+    # a deep single chain: 30/32 deep strictly exceeds 7/8 -> drain-heavy
     assert batch_segmentation(np.full(32, 7), par_rounds=2)[
-        "drain_routed"] is True
-    # ...but exactly 7/8 deep does not (the kernel's rule is strict)
+        "drain_heavy"] is True
+    # ...but exactly 7/8 deep does not (the flag's rule is strict)
     assert batch_segmentation(np.full(16, 7), par_rounds=2)[
-        "drain_routed"] is False
+        "drain_heavy"] is False
 
 
 def test_batch_segmentation_default_par_rounds_is_kernel_constant():
